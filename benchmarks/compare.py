@@ -1,0 +1,69 @@
+"""Before/after comparison of the §Perf optimizations across the full grid.
+
+Reads the baseline artifacts (dryrun_results.json / roofline_results.json,
+paper-faithful defaults) and the optimized ones (dryrun_optimized.json /
+roofline_optimized.json, post-hillclimb defaults) and prints the deltas.
+
+    PYTHONPATH=src python -m benchmarks.compare
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+
+def load(path, tagged=None):
+    if not os.path.exists(path):
+        return {}
+    rows = json.load(open(path))
+    out = {}
+    for r in rows:
+        if r.get("status", "ok") != "ok" and "t_compute_s" not in r:
+            continue
+        if tagged is None and "tag" in r:
+            continue
+        if tagged is not None and r.get("tag") != tagged:
+            continue
+        out[(r["arch"], r["shape"], r.get("mesh", "16x16"))] = r
+    return out
+
+
+def main() -> None:
+    dry_base = load("dryrun_results.json")
+    dry_opt = load("dryrun_optimized.json", tagged="opt")
+    roof_base = load("roofline_results.json")
+    roof_opt = load("roofline_optimized.json", tagged="opt")
+
+    print("== Memory per device (dry-run, 16x16): baseline -> optimized ==")
+    print(f"{'pair':40s} {'base GB':>8s} {'opt GB':>8s} {'delta':>7s}")
+    improved = regressed = 0
+    for key in sorted(dry_base):
+        if key not in dry_opt or key[2] != "16x16":
+            continue
+        b = dry_base[key]["bytes_per_device"] / 1e9
+        o = dry_opt[key]["bytes_per_device"] / 1e9
+        d = 100 * (o / b - 1)
+        improved += d < -1
+        regressed += d > 1
+        print(f"{key[0] + ' x ' + key[1]:40s} {b:8.2f} {o:8.2f} {d:+6.1f}%")
+    print(f"-> {improved} improved, {regressed} regressed (>1%)\n")
+
+    print("== Roofline bound (max term, s): baseline -> optimized ==")
+    print(f"{'pair':40s} {'base':>8s} {'opt':>8s} {'delta':>8s} "
+          f"{'useful b->o':>12s}")
+    for key in sorted(roof_base):
+        k2 = (key[0], key[1], key[2])
+        if k2 not in roof_opt:
+            continue
+        b = roof_base[key]
+        o = roof_opt[k2]
+        bb = max(b["t_compute_s"], b["t_memory_s"], b["t_collective_s"])
+        oo = max(o["t_compute_s"], o["t_memory_s"], o["t_collective_s"])
+        print(f"{key[0] + ' x ' + key[1]:40s} {bb:8.3f} {oo:8.3f} "
+              f"{100 * (oo / bb - 1):+7.1f}% "
+              f"{b['useful_flops_ratio']:.3f}->{o['useful_flops_ratio']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Paper Tables 3-5: job execution times under the five heuristics.
+
+Grid: {Exponential, Weibull k=0.7, Weibull k=0.5} x {2^16, 2^19 processors}
+x {good, fair} predictors, C_p = C.  Reports execution time in days and the
+gain of OptimalPrediction / InexactPrediction over RFO, next to the paper's
+numbers.  ``--quick`` trims the trace count (the paper averages 100 runs;
+the trend, not the third digit, is the reproduction target).
+"""
+
+from __future__ import annotations
+
+from repro.core.traces import Exponential, Weibull
+
+from .common import PREDICTORS, Scenario, gain, run_scenario
+
+# Paper values (days): {(dist, n_exp, predictor): {strategy: days}}
+PAPER = {
+    ("exp", 16, "good"): {"RFO": 65.2, "OptimalPrediction": 60.0,
+                          "InexactPrediction": 60.6},
+    ("exp", 19, "good"): {"RFO": 11.7, "OptimalPrediction": 9.5,
+                          "InexactPrediction": 10.2},
+    ("exp", 16, "fair"): {"RFO": 65.2, "OptimalPrediction": 61.7},
+    ("exp", 19, "fair"): {"RFO": 11.7, "OptimalPrediction": 10.7},
+    ("w07", 16, "good"): {"RFO": 80.3, "OptimalPrediction": 65.9,
+                          "InexactPrediction": 68.0},
+    ("w07", 19, "good"): {"RFO": 25.5, "OptimalPrediction": 15.9},
+    ("w07", 16, "fair"): {"RFO": 80.3, "OptimalPrediction": 69.7},
+    ("w07", 19, "fair"): {"RFO": 25.5, "OptimalPrediction": 20.2},
+    ("w05", 16, "good"): {"RFO": 120.2, "OptimalPrediction": 75.9},
+    ("w05", 19, "good"): {"RFO": 114.8, "OptimalPrediction": 39.5},
+    ("w05", 16, "fair"): {"RFO": 120.2, "OptimalPrediction": 83.0},
+    ("w05", 19, "fair"): {"RFO": 114.8, "OptimalPrediction": 60.8},
+}
+
+DISTS = {
+    "exp": lambda: Exponential(1.0),
+    "w07": lambda: Weibull(0.7, 1.0),
+    "w05": lambda: Weibull(0.5, 1.0),
+}
+
+
+def run(quick: bool = True) -> list[dict]:
+    n_runs = 5 if quick else 40
+    n_exps = [16, 19]
+    rows = []
+    for dist_name, dist_fn in DISTS.items():
+        for pred_name, pred in PREDICTORS.items():
+            for n_exp in n_exps:
+                sc = Scenario(n=2 ** n_exp, dist=dist_fn(), predictor=pred)
+                res = run_scenario(sc, n_runs=n_runs)
+                row = {
+                    "dist": dist_name, "N": f"2^{n_exp}",
+                    "predictor": pred_name,
+                    **{k: round(v, 1) for k, v in res.items()},
+                    "gain_opt_pct": round(gain(res, "OptimalPrediction"), 1),
+                    "gain_inexact_pct": round(
+                        gain(res, "InexactPrediction"), 1),
+                }
+                paper = PAPER.get((dist_name, n_exp, pred_name), {})
+                row["paper_rfo"] = paper.get("RFO")
+                row["paper_opt"] = paper.get("OptimalPrediction")
+                rows.append(row)
+                print(f"{dist_name} N=2^{n_exp} {pred_name}: "
+                      f"RFO={res['RFO']:.1f}d (paper {paper.get('RFO')}), "
+                      f"Opt={res['OptimalPrediction']:.1f}d "
+                      f"(paper {paper.get('OptimalPrediction')}), "
+                      f"gain={row['gain_opt_pct']}%", flush=True)
+    # Qualitative claims (Tables 3-5): prediction helps, gains grow with N
+    # and with distance from Exponential.
+    by = {(r["dist"], r["N"], r["predictor"]): r for r in rows}
+    for d in DISTS:
+        for p in PREDICTORS:
+            assert by[(d, "2^19", p)]["gain_opt_pct"] > 0
+            assert by[(d, "2^19", p)]["gain_opt_pct"] \
+                >= by[(d, "2^16", p)]["gain_opt_pct"] - 3.0
+    assert by[("w05", "2^19", "good")]["gain_opt_pct"] \
+        > by[("exp", "2^19", "good")]["gain_opt_pct"]
+    print("exec_times: paper trend claims verified")
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,73 @@
+"""Paper §5.3 / Tables 6-7: log-based failure traces (LANL-18/19-like).
+
+The Failure Trace Archive files are offline-unavailable; per DESIGN.md §7 we
+reproduce the *mechanism*: an empirical discrete distribution over
+availability intervals (synthesized once to match the published LANL
+per-processor MTBF and interval counts), resampled per 4-processor node and
+superposed.  Parameters follow the paper: C = R = 60 s, D = 6 s, false
+predictions uniform, TIME_base = 250 years / N.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.traces import UniformDist, lanl_like_log
+
+from .common import PREDICTORS, Scenario, gain, run_scenario
+
+LOGS = {
+    "LANL18": dict(n_intervals=3010, mu_ind_days=691.0),
+    "LANL19": dict(n_intervals=2343, mu_ind_days=679.0),
+}
+
+# Paper Tables 6-7 (days): {(log, n_exp, pred): (RFO, Opt, Inexact)}
+PAPER = {
+    ("LANL18", 14, "good"): (26.8, 24.4, 24.7),
+    ("LANL18", 17, "good"): (4.88, 3.89, 4.20),
+    ("LANL18", 14, "fair"): (26.8, 25.2, 25.5),
+    ("LANL18", 17, "fair"): (4.88, 4.44, 4.73),
+    ("LANL19", 14, "good"): (26.8, 24.4, 24.6),
+    ("LANL19", 17, "good"): (4.86, 3.85, 4.14),
+    ("LANL19", 14, "fair"): (26.8, 25.2, 25.4),
+    ("LANL19", 17, "fair"): (4.86, 4.42, 4.71),
+}
+
+
+def run(quick: bool = True) -> list[dict]:
+    n_runs = 4 if quick else 20
+    n_exps = [14] if quick else [10, 12, 14, 16, 17]
+    rows = []
+    for log_name, log_kw in LOGS.items():
+        emp = lanl_like_log(np.random.default_rng(42), **log_kw)
+        for pred_name, pred in PREDICTORS.items():
+            for n_exp in n_exps:
+                sc = Scenario(
+                    n=2 ** n_exp, dist=emp, predictor=pred,
+                    c=60.0, r=60.0, d=6.0,
+                    mu_ind=log_kw["mu_ind_days"] * 86400.0,
+                    time_base_years_total=250.0,
+                    false_pred_dist=UniformDist(1.0),
+                    procs_per_stream=4)  # 4-processor nodes (paper §5.1)
+                res = run_scenario(sc, n_runs=n_runs)
+                row = {"log": log_name, "predictor": pred_name,
+                       "N": f"2^{n_exp}",
+                       **{k: round(v, 2) for k, v in res.items()},
+                       "gain_opt_pct": round(
+                           gain(res, "OptimalPrediction"), 1)}
+                paper = PAPER.get((log_name, n_exp, pred_name))
+                row["paper_rfo_opt"] = paper[:2] if paper else None
+                rows.append(row)
+                print(f"{log_name} {pred_name} N=2^{n_exp}: "
+                      f"RFO={res['RFO']:.2f}d "
+                      f"Opt={res['OptimalPrediction']:.2f}d "
+                      f"gain={row['gain_opt_pct']}% "
+                      f"(paper {paper[:2] if paper else 'n/a'})",
+                      flush=True)
+                assert res["OptimalPrediction"] <= res["RFO"] * 1.02
+    print("log_traces: prediction beneficial on log-based traces")
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,91 @@
+"""Benchmark entry point: one benchmark per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+
+Default is quick mode (few traces per cell — the paper's qualitative claims
+are still asserted); ``--full`` approaches the paper's 100-run averaging.
+The dry-run/roofline benchmarks need 512 placeholder devices and therefore
+run as separate processes (repro.launch.dryrun / benchmarks.roofline); this
+driver reports their saved results if present.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def report_dryrun(path: str = "dryrun_results.json") -> None:
+    if not os.path.exists(path):
+        print(f"[dryrun] {path} missing — run "
+              f"`python -m repro.launch.dryrun --mesh both`")
+        return
+    rows = json.load(open(path))
+    ok = sum(r["status"] == "ok" for r in rows)
+    skip = sum(r["status"] == "skipped" for r in rows)
+    err = sum(r["status"] == "error" for r in rows)
+    fits = sum(1 for r in rows if r.get("fits_hbm"))
+    print(f"[dryrun] {ok} ok / {skip} skipped / {err} errors; "
+          f"{fits}/{ok} fit 16 GB HBM as-configured")
+
+
+def report_roofline(path: str = "roofline_results.json") -> None:
+    if not os.path.exists(path):
+        print(f"[roofline] {path} missing — run "
+              f"`python -m benchmarks.roofline`")
+        return
+    rows = [r for r in json.load(open(path)) if "t_compute_s" in r]
+    print(f"[roofline] {len(rows)} pairs analysed")
+    by_dom: dict[str, int] = {}
+    for r in rows:
+        by_dom[r["dominant"]] = by_dom.get(r["dominant"], 0) + 1
+    print(f"[roofline] dominant terms: {by_dom}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale trace counts (slow)")
+    ap.add_argument("--only", default=None,
+                    help="run a single benchmark by name")
+    args = ap.parse_args()
+    quick = not args.full
+
+    from . import (beyond, exec_times, log_traces, multilevel,
+                   recall_precision, table2, waste_vs_n)
+    benches = {
+        "table2": table2.run,
+        "exec_times": exec_times.run,
+        "waste_vs_n": waste_vs_n.run,
+        "log_traces": log_traces.run,
+        "recall_precision": recall_precision.run,
+        "beyond": beyond.run,
+        "multilevel": multilevel.run,
+    }
+    if args.only:
+        benches = {args.only: benches[args.only]}
+
+    results = {}
+    for name, fn in benches.items():
+        print(f"\n######## {name} ########", flush=True)
+        t0 = time.time()
+        try:
+            results[name] = fn(quick=quick)
+            print(f"[{name}] done in {time.time() - t0:.1f}s", flush=True)
+        except AssertionError as e:
+            print(f"[{name}] CLAIM FAILED: {e}", flush=True)
+            raise
+    json.dump(results, open("bench_results.json", "w"), indent=1,
+              default=str)
+
+    print("\n######## dry-run / roofline artifacts ########")
+    report_dryrun()
+    report_roofline()
+    print("\nall benchmarks done -> bench_results.json")
+
+
+if __name__ == "__main__":
+    main()

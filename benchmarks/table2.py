@@ -1,0 +1,60 @@
+"""Paper Table 2: first-order periods vs the exact Exponential optimum.
+
+Pure analysis (no simulation): for N = 2^10..2^19 print Young / Daly / RFO
+periods, their relative deviation from the Lambert-W optimum, and assert the
+paper's qualitative claims (Young/Daly overestimate, RFO underestimates,
+|error| grows with N).
+"""
+
+from __future__ import annotations
+
+from repro.core.waste import (Platform, t_daly, t_exact_exponential, t_rfo,
+                              t_young)
+
+from .common import MU_IND_SYNTH
+
+# Paper Table 2 reference values (seconds).
+PAPER = {
+    10: (68567, 68573, 67961, 68240),
+    11: (48660, 48668, 48052, 48320),
+    12: (34584, 34595, 33972, 34189),
+    13: (24630, 24646, 24014, 24231),
+    14: (17592, 17615, 16968, 17194),
+    15: (12615, 12648, 11982, 12218),
+    16: (9096, 9142, 8449, 8701),
+    17: (6608, 6673, 5941, 6214),
+    18: (4848, 4940, 4154, 4458),
+    19: (3604, 3733, 2869, 3218),
+}
+
+
+def run(quick: bool = False) -> list[dict]:
+    rows = []
+    print("\n== Table 2: periods (s) and deviation from exact optimum ==")
+    print(f"{'N':>6s} {'mu':>9s} | {'Young':>8s} {'Daly':>8s} {'RFO':>8s} "
+          f"{'Opt':>8s} | {'eY%':>6s} {'eD%':>6s} {'eR%':>6s} | paper(Y/D/R/O)")
+    prev_err = 0.0
+    for k, ref in PAPER.items():
+        n = 2 ** k
+        p = Platform(mu=MU_IND_SYNTH / n, c=600.0, d=60.0, r=600.0)
+        ty, td, tr = t_young(p), t_daly(p), t_rfo(p)
+        topt = t_exact_exponential(p)
+        ey, ed, er = [100 * (t / topt - 1) for t in (ty, td, tr)]
+        rows.append({"N": n, "young": ty, "daly": td, "rfo": tr,
+                     "opt": topt, "err_young_pct": ey, "err_daly_pct": ed,
+                     "err_rfo_pct": er, "paper": ref})
+        print(f"2^{k:<4d} {p.mu:9.0f} | {ty:8.0f} {td:8.0f} {tr:8.0f} "
+              f"{topt:8.0f} | {ey:6.2f} {ed:6.2f} {er:6.2f} | {ref}")
+        # Paper claims: Young/Daly over, RFO under, errors grow with N.
+        assert ey > 0 and ed > 0 and er < 0
+        assert abs(ey) >= prev_err - 1e-9
+        prev_err = abs(ey)
+        # Values match the paper to 0.2%.
+        for ours, theirs in zip((ty, td, tr), ref[:3]):
+            assert abs(ours / theirs - 1) < 2e-3, (ours, theirs)
+    print("table2: all paper claims verified")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

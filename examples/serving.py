@@ -1,0 +1,53 @@
+"""Serving example: batched prefill + decode across architecture families.
+
+Serves three reduced architectures — dense GQA (llama3.2-1b), hybrid
+RG-LRU (recurrentgemma-2b) and SSM (xlstm-125m) — through the same
+ServingEngine API, demonstrating that KV caches, ring buffers and
+recurrent states all hide behind one decode interface.  Greedy decoding is
+checked to be deterministic.
+
+Run:  PYTHONPATH=src python examples/serving.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get
+from repro.configs.base import InputShape
+from repro.models.model import init_params, make_batch
+from repro.serve import ServingEngine
+
+ARCHS = ["llama3.2-1b", "recurrentgemma-2b", "xlstm-125m"]
+
+
+def main() -> None:
+    batch, prompt_len, n_new = 4, 48, 24
+    for arch in ARCHS:
+        cfg = get(arch).reduced()
+        params, _ = init_params(cfg, jax.random.PRNGKey(0))
+        engine = ServingEngine(cfg, params, cache_len=prompt_len + n_new)
+        req = make_batch(cfg, InputShape("s", prompt_len, batch, "prefill"),
+                         jax.random.PRNGKey(1))
+
+        t0 = time.perf_counter()
+        res = engine.generate(req, n_new)          # greedy
+        jax.block_until_ready(res.tokens)
+        dt = time.perf_counter() - t0
+
+        res2 = engine.generate(req, n_new)         # determinism check
+        assert np.array_equal(np.asarray(res.tokens),
+                              np.asarray(res2.tokens))
+        sampled = engine.generate(req, n_new, temperature=0.8, seed=3)
+
+        print(f"{arch:22s} [{cfg.family:6s}] "
+              f"{batch * n_new / dt:6.1f} tok/s  "
+              f"greedy[0,:8]={res.tokens[0, :8].tolist()}  "
+              f"mean_lp={float(res.logprobs.mean()):.2f}  "
+              f"sampled_differs={not np.array_equal(np.asarray(res.tokens), np.asarray(sampled.tokens))}")
+    print("serving: all families decode through one engine API")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""qwen3-moe-235b-a22b [moe] — 128 experts top-8 [hf:Qwen/Qwen3-30B-A3B]."""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-235b-a22b",
+    family="moe",
+    source="hf:Qwen/Qwen3-30B-A3B",
+    n_layers=94,
+    d_model=4096,
+    n_heads=64,
+    n_kv_heads=4,
+    d_ff=1536,
+    vocab_size=151936,
+    head_dim=128,
+    rope_theta=1000000.0,
+    block_unit=("attn",),
+    n_experts=128,
+    top_k=8,
+    n_shared_experts=0,
+    expert_d_ff=1536,
+    microbatches=8,
+)

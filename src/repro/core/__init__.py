@@ -1,0 +1,31 @@
+"""Core analytical models + simulator for the paper
+"Checkpointing algorithms and fault prediction" (Aupy et al., JPDC 2013).
+
+Layers:
+  waste.py       Young/Daly/RFO periods, first-order waste model, exact
+                 Exponential optimum (Lambert W).
+  prediction.py  predictor algebra, WASTE1/WASTE2 (Eq. 15), Theorem 1
+                 breakpoint beta_lim = C_p/p, optimal periods.
+  traces.py      fault / false-prediction trace generation (Exponential,
+                 Weibull, Uniform, Empirical/log-based).
+  simulator.py   discrete-event execution engine (paper §5 mechanics).
+  policies.py    the compared strategies incl. BestPeriod search.
+"""
+
+from . import policies, prediction, simulator, traces, waste
+from .prediction import (PredictedPlatform, Predictor, beta_lim,
+                         optimal_period_with_prediction, t_pred,
+                         t_pred_asymptotic, waste1, waste2,
+                         waste_with_prediction)
+from .simulator import SimResult, simulate
+from .traces import EventTrace, Exponential, UniformDist, Weibull, make_event_trace
+from .waste import Platform, platform_mtbf, t_daly, t_rfo, t_young, waste
+
+__all__ = [
+    "policies", "prediction", "simulator", "traces", "waste",
+    "Platform", "Predictor", "PredictedPlatform", "EventTrace", "SimResult",
+    "Exponential", "Weibull", "UniformDist",
+    "platform_mtbf", "t_young", "t_daly", "t_rfo", "beta_lim",
+    "optimal_period_with_prediction", "t_pred", "t_pred_asymptotic",
+    "waste1", "waste2", "waste_with_prediction", "make_event_trace", "simulate",
+]

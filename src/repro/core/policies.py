@@ -1,0 +1,166 @@
+"""Checkpointing strategies compared in the paper (§5.1 "Heuristics").
+
+Each strategy bundles a period choice and a trust policy:
+
+  * YOUNG             T = sqrt(2 mu C) + C,            never trust predictions
+  * DALY              T = sqrt(2 (mu + D + R) C) + C,  never trust
+  * RFO               T = sqrt(2 (mu - (D + R)) C),    never trust  (paper Eq. 13)
+  * OPTIMALPREDICTION T = T_pred (§4.3),               threshold beta_lim = C_p/p
+  * INEXACTPREDICTION same as OPTIMALPREDICTION, simulated with an uncertainty
+                      window (the window is a *simulation* parameter)
+  * SIMPLE(q)         T from §4.1 analysis,            fixed probability q
+  * BESTPERIOD        any of the above with a brute-force-searched period
+
+The module also exposes :func:`best_period`, the paper's BestPeriod search
+(numerical sweep, each candidate period evaluated on a set of random traces).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Sequence
+
+import numpy as np
+
+from .prediction import (PredictedPlatform, beta_lim,
+                         optimal_period_with_prediction, t_pred,
+                         waste_simple_policy)
+from .simulator import (AlwaysTrust, FixedProbabilityTrust, NeverTrust,
+                        ThresholdTrust, TrustPolicy, simulate)
+from .traces import EventTrace
+from .waste import Platform, t_daly, t_rfo, t_young
+
+__all__ = [
+    "Strategy",
+    "young",
+    "daly",
+    "rfo",
+    "optimal_prediction",
+    "inexact_prediction",
+    "simple_policy",
+    "best_period",
+    "evaluate",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Strategy:
+    """A named (period, trust policy) pair, ready to hand to the simulator."""
+
+    name: str
+    period: float
+    trust: TrustPolicy
+    inexact_window: float = 0.0  # simulation-side date uncertainty
+
+    def with_period(self, period: float) -> "Strategy":
+        return dataclasses.replace(self, period=period)
+
+
+def young(platform: Platform) -> Strategy:
+    return Strategy("Young", t_young(platform), NeverTrust())
+
+
+def daly(platform: Platform) -> Strategy:
+    return Strategy("Daly", t_daly(platform), NeverTrust())
+
+
+def rfo(platform: Platform) -> Strategy:
+    return Strategy("RFO", t_rfo(platform), NeverTrust())
+
+
+def optimal_prediction(pp: PredictedPlatform) -> Strategy:
+    """The refined policy of §4.2/§4.3 with its analytically optimal period."""
+    t, _, use_pred = optimal_period_with_prediction(pp)
+    trust: TrustPolicy = ThresholdTrust(beta_lim(pp)) if use_pred else NeverTrust()
+    return Strategy("OptimalPrediction", t, trust)
+
+
+def inexact_prediction(pp: PredictedPlatform, window: float | None = None) -> Strategy:
+    """OptimalPrediction simulated with uncertain fault dates (paper: 2C)."""
+    base = optimal_prediction(pp)
+    w = 2.0 * pp.platform.c if window is None else window
+    return dataclasses.replace(base, name="InexactPrediction", inexact_window=w)
+
+
+def simple_policy(pp: PredictedPlatform, q: float | None = None) -> Strategy:
+    """The fixed-probability policy of §4.1.
+
+    If q is None, picks the optimal q in {0, 1} at the period minimizing the
+    §4.1 waste (evaluated on a sweep, since Eq. 14's optimal T has no simple
+    closed form for arbitrary q).
+    """
+    plat = pp.platform
+    if q is None:
+        # Compare the best waste achievable with q=0 and with q=1.
+        candidates = np.geomspace(plat.c * 1.001, max(plat.mu, plat.c * 4), 512)
+        w0 = min(waste_simple_policy(t, 0.0, pp) for t in candidates)
+        w1 = min(waste_simple_policy(t, 1.0, pp) for t in candidates)
+        q = 0.0 if w0 <= w1 else 1.0
+    candidates = np.geomspace(plat.c * 1.001, max(plat.mu, plat.c * 4), 512)
+    t_best = min(candidates, key=lambda t: waste_simple_policy(float(t), q, pp))
+    trust: TrustPolicy
+    if q <= 0.0:
+        trust = NeverTrust()
+    elif q >= 1.0:
+        trust = AlwaysTrust()
+    else:
+        trust = FixedProbabilityTrust(q)
+    return Strategy(f"Simple(q={q:g})", float(t_best), trust)
+
+
+# ---------------------------------------------------------------------------
+# BestPeriod brute-force search (paper §5.1)
+# ---------------------------------------------------------------------------
+
+def evaluate(
+    strategy: Strategy,
+    traces: Sequence[EventTrace],
+    platform: Platform,
+    time_base: float,
+    cp: float,
+    *,
+    seed: int = 0,
+) -> float:
+    """Average makespan of a strategy over a fixed set of traces."""
+    total = 0.0
+    for i, trace in enumerate(traces):
+        rng = np.random.default_rng(seed + 7919 * i)
+        res = simulate(trace, platform, time_base, strategy.period,
+                       cp=cp, trust=strategy.trust,
+                       inexact_window=strategy.inexact_window, rng=rng)
+        total += res.makespan
+    return total / max(1, len(traces))
+
+
+def best_period(
+    strategy: Strategy,
+    traces: Sequence[EventTrace],
+    platform: Platform,
+    time_base: float,
+    cp: float,
+    *,
+    n_points: int = 24,
+    span: float = 8.0,
+    seed: int = 0,
+) -> tuple[Strategy, float]:
+    """Brute-force the best period for a strategy (paper's BestPeriod).
+
+    Sweeps ``n_points`` periods log-spaced in [T0/span, T0*span] around the
+    strategy's analytic period T0, evaluates each on the given traces, and
+    returns (best strategy, its average makespan).
+    """
+    t0 = strategy.period
+    lo = max(platform.c * 1.001, t0 / span)
+    hi = max(lo * 1.01, t0 * span)
+    # Include the analytic period itself: BestPeriod must never lose to it.
+    grid = np.append(np.geomspace(lo, hi, n_points), t0)
+    best_t, best_m = t0, math.inf
+    for t in grid:
+        m = evaluate(strategy.with_period(float(t)), traces, platform,
+                     time_base, cp, seed=seed)
+        if m < best_m:
+            best_t, best_m = float(t), m
+    refined = dataclasses.replace(strategy, name=f"BestPeriod({strategy.name})",
+                                  period=best_t)
+    return refined, best_m

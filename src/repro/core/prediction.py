@@ -1,0 +1,239 @@
+"""Checkpointing with fault prediction (paper §4).
+
+Implements:
+  * predictor algebra (recall r, precision p, event rates mu_P/mu_NP/mu_e);
+  * the simple fixed-probability-q policy waste (Eq. 14) and the result that
+    the optimal q is 0 or 1;
+  * the refined policy: Theorem 1 (single breakpoint beta_lim = C_p / p);
+  * the two-branch waste WASTE1/WASTE2 (Eq. 15) and its exact minimization
+    (§4.3): convex analysis on [C, C_p/p] and cubic root-finding on
+    [max(C, C_p/p), +inf);
+  * the large-mu asymptotic period sqrt(2 mu C / (1 - r)).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from .waste import ALPHA_CAP, Platform, t_rfo
+
+__all__ = [
+    "Predictor",
+    "PredictedPlatform",
+    "waste_simple_policy",
+    "optimal_q",
+    "beta_lim",
+    "waste1",
+    "waste2",
+    "waste_with_prediction",
+    "t_nopred",
+    "t_pred",
+    "optimal_period_with_prediction",
+    "t_pred_asymptotic",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Predictor:
+    """A fault predictor characterized by recall r and precision p (§2.2).
+
+    recall r   = True_P / (True_P + False_N)  — fraction of faults predicted.
+    precision p = True_P / (True_P + False_P) — fraction of predictions real.
+
+    Predictions whose lead time is < C_p are classified as unpredicted faults
+    (paper §2.2), which is a *recall adjustment* done by the caller.
+    """
+
+    recall: float
+    precision: float
+
+    def __post_init__(self) -> None:
+        if not (0.0 <= self.recall <= 1.0):
+            raise ValueError(f"recall must be in [0,1], got {self.recall}")
+        if not (0.0 < self.precision <= 1.0):
+            raise ValueError(f"precision must be in (0,1], got {self.precision}")
+
+    # -- event rates (paper §2.3) -------------------------------------------
+    def mu_np(self, mu: float) -> float:
+        """Mean time between *unpredicted* faults: mu / (1 - r)."""
+        if self.recall >= 1.0:
+            return math.inf
+        return mu / (1.0 - self.recall)
+
+    def mu_p(self, mu: float) -> float:
+        """Mean time between predictions (true or false): p mu / r."""
+        if self.recall <= 0.0:
+            return math.inf
+        return self.precision * mu / self.recall
+
+    def mu_e(self, mu: float) -> float:
+        """Mean time between events of any kind: 1/mu_e = 1/mu_P + 1/mu_NP."""
+        inv = 0.0
+        if self.recall > 0.0:
+            inv += 1.0 / self.mu_p(mu)
+        if self.recall < 1.0:
+            inv += 1.0 / self.mu_np(mu)
+        return math.inf if inv == 0.0 else 1.0 / inv
+
+    def mu_false(self, mu: float) -> float:
+        """Mean time between *false* predictions: mu_P / (1-p) = p mu / (r (1-p))."""
+        if self.precision >= 1.0 or self.recall <= 0.0:
+            return math.inf
+        return self.mu_p(mu) / (1.0 - self.precision)
+
+
+@dataclasses.dataclass(frozen=True)
+class PredictedPlatform:
+    """Platform + predictor + proactive checkpoint cost C_p."""
+
+    platform: Platform
+    predictor: Predictor
+    cp: float  # proactive checkpoint duration C_p
+
+    def __post_init__(self) -> None:
+        if self.cp <= 0:
+            raise ValueError(f"C_p must be positive, got {self.cp}")
+
+
+def beta_lim(pp: PredictedPlatform) -> float:
+    """Trust breakpoint beta_lim = C_p / p (Theorem 1).
+
+    A prediction arriving t seconds after the last periodic checkpoint should
+    be acted upon iff t >= beta_lim.
+    """
+    return pp.cp / pp.predictor.precision
+
+
+# ---------------------------------------------------------------------------
+# Simple policy (§4.1): trust with fixed probability q
+# ---------------------------------------------------------------------------
+
+def waste_simple_policy(t: float, q: float, pp: PredictedPlatform) -> float:
+    """Total waste of the simple policy (Eq. 14 plugged into Eq. 11)."""
+    plat, pred = pp.platform, pp.predictor
+    mu, c, cp = plat.mu, plat.c, pp.cp
+    r, p = pred.recall, pred.precision
+    if t < c:
+        raise ValueError(f"T={t} < C={c}")
+    wff = c / t
+    wfault = (1.0 / mu) * (
+        (1.0 - r * q) * t / 2.0
+        + plat.d + plat.r
+        + q * r / p * cp
+        - q * r * cp * cp / (p * t) * (1.0 - p / 2.0)
+    )
+    return wff + wfault - wff * wfault
+
+
+def optimal_q(t: float, pp: PredictedPlatform) -> int:
+    """Optimal fixed trust probability: 0 or 1 (waste is linear in q).
+
+    Compares the waste at q=0 and q=1 for the given period.
+    """
+    w0 = waste_simple_policy(t, 0.0, pp)
+    w1 = waste_simple_policy(t, 1.0, pp)
+    return 0 if w0 <= w1 else 1
+
+
+# ---------------------------------------------------------------------------
+# Refined policy (§4.2/§4.3): WASTE1 / WASTE2 and their minimization
+# ---------------------------------------------------------------------------
+
+def waste1(t: float, pp: PredictedPlatform) -> float:
+    """WASTE1(T): no proactive action taken (valid when T <= C_p/p). Eq. 15."""
+    plat = pp.platform
+    mu, c = plat.mu, plat.c
+    return (c * (1.0 - (plat.d + plat.r) / mu)) / t \
+        + (plat.d + plat.r - c / 2.0) / mu \
+        + t / (2.0 * mu)
+
+
+def _waste2_coeffs(pp: PredictedPlatform) -> tuple[float, float, float, float]:
+    """Coefficients (u, v, w, x) of WASTE2(T) = u/T^2 + v/T + w + x*T."""
+    plat, pred = pp.platform, pp.predictor
+    mu, c, cp = plat.mu, plat.c, pp.cp
+    r, p = pred.recall, pred.precision
+    dr = plat.d + plat.r
+    u = r * c * cp * cp / (2.0 * mu * p * p)
+    v = c * (1.0 - (r * cp / p + dr) / mu) - r * cp * cp / (2.0 * mu * p * p)
+    w = (-(1.0 - r) * c / 2.0 + r * cp / p + dr) / mu
+    x = (1.0 - r) / (2.0 * mu)
+    return u, v, w, x
+
+
+def waste2(t: float, pp: PredictedPlatform) -> float:
+    """WASTE2(T): proactive action for predictions in [C_p/p, T]. Eq. 15."""
+    u, v, w, x = _waste2_coeffs(pp)
+    return u / (t * t) + v / t + w + x * t
+
+
+def waste_with_prediction(t: float, pp: PredictedPlatform) -> float:
+    """Waste of the optimal (Theorem 1) strategy at period T: the two-branch Eq. 15."""
+    if t <= beta_lim(pp):
+        return waste1(t, pp)
+    return waste2(t, pp)
+
+
+def t_nopred(pp: PredictedPlatform, alpha: float = ALPHA_CAP,
+             enforce_cap: bool = False) -> float:
+    """Minimizer of WASTE1 on [C, C_p/p] (Eq. 16): clamp T_RFO to the interval."""
+    plat = pp.platform
+    hi = beta_lim(pp)
+    t = t_rfo(plat)
+    if enforce_cap:
+        t = min(t, alpha * plat.mu)
+    return max(plat.c, min(t, hi))
+
+
+def t_pred(pp: PredictedPlatform) -> float:
+    """Minimizer of WASTE2 on [max(C, C_p/p), +inf) (Eq. 17).
+
+    dWASTE2/dT = -2u/T^3 - v/T^2 + x = 0  <=>  x T^3 - v T - 2u = 0.
+    Handles both the convex case (v >= 0: unique positive root) and the
+    general case (v < 0: inspect all real roots and interval bounds).
+    """
+    u, v, _, x = _waste2_coeffs(pp)
+    lo = max(pp.platform.c, beta_lim(pp))
+    if x <= 0.0:
+        # r == 1: waste2 decreasing in T beyond the hyperbolic part; the
+        # stationary point solves -2u/T^3 - v/T^2 = 0 -> T = -2u/v (v<0).
+        if v < 0.0 and u > 0.0:
+            return max(lo, -2.0 * u / v)
+        return lo
+    roots = np.roots([x, 0.0, -v, -2.0 * u])
+    candidates = [lo]
+    for root in roots:
+        if abs(root.imag) < 1e-9 * max(1.0, abs(root.real)) and root.real > lo:
+            candidates.append(float(root.real))
+    best = min(candidates, key=lambda t: waste2(t, pp))
+    return best
+
+
+def optimal_period_with_prediction(pp: PredictedPlatform) -> tuple[float, float, bool]:
+    """Optimal period for the refined policy (§4.3).
+
+    Returns (T*, waste(T*), use_predictions) where ``use_predictions`` tells
+    whether the optimal regime is the WASTE2 branch (act on predictions past
+    beta_lim) or the WASTE1 branch (ignore the predictor entirely).
+    """
+    tn = t_nopred(pp)
+    tp = t_pred(pp)
+    w1 = waste1(tn, pp)
+    w2 = waste2(tp, pp)
+    if w1 <= w2:
+        return tn, w1, False
+    return tp, w2, True
+
+
+def t_pred_asymptotic(pp: PredictedPlatform) -> float:
+    """Large-mu approximation of the optimal period: sqrt(2 mu C / (1 - r)).
+
+    (paper §4.3 closing remark — equivalent to RFO with mu -> mu/(1-r).)
+    """
+    r = pp.predictor.recall
+    if r >= 1.0:
+        return math.inf
+    return math.sqrt(2.0 * pp.platform.mu * pp.platform.c / (1.0 - r))

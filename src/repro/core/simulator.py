@@ -1,0 +1,392 @@
+"""Discrete-event simulator for checkpointing under faults + predictions (paper §5.1).
+
+The simulator executes a job of ``time_base`` useful seconds on a platform
+described by :class:`repro.core.waste.Platform`, against a merged event trace
+(:class:`repro.core.traces.EventTrace`).  It reproduces the exact mechanics of
+the paper:
+
+  * periodic checkpoints of length C every period T (work W = T - C, then C);
+  * a final checkpoint at the end of the execution;
+  * on a fault: lose all work since the last completed checkpoint, pay
+    downtime D then recovery R, then start a fresh period;
+  * faults striking during a checkpoint, a downtime, or a recovery are
+    handled (checkpoint abandoned / downtime restarted);
+  * on a trusted prediction at date ``e``: take a proactive checkpoint of
+    length C_p scheduled to *complete exactly at* ``e`` (paper §4.1); if the
+    prediction is true the fault then destroys nothing, else C_p seconds
+    were lost for nothing;
+  * the trust decision is a threshold on the offset of the prediction date
+    within the current period (Theorem 1: act iff offset >= beta_lim = C_p/p;
+    the simple policy of §4.1 uses a fixed probability q instead);
+  * predictions that cannot be honoured (not enough time to fit C_p, or the
+    platform is checkpointing / down) are ignored by necessity (Fig. 2(b,c));
+  * InexactPrediction (§5.1): a true prediction announced for date ``e``
+    materializes at ``e + U(0, window)``; the proactive checkpoint still
+    completes at ``e``, so the work done in [e, actual fault) is lost.
+
+The engine is a small phase machine (WORK / CKPT / PROCKPT / DOWN / RECOVER)
+advanced event by event; between events it follows the periodic schedule.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from typing import Callable, Sequence
+
+import numpy as np
+
+from .traces import FALSE_PRED, FAULT_PRED, FAULT_UNPRED, EventTrace
+from .waste import Platform
+
+__all__ = [
+    "TrustPolicy",
+    "NeverTrust",
+    "AlwaysTrust",
+    "FixedProbabilityTrust",
+    "ThresholdTrust",
+    "SimResult",
+    "simulate",
+    "average_makespan",
+]
+
+# Phases of the execution machine.
+_WORK, _CKPT, _PROCKPT, _DOWN, _RECOVER = range(5)
+
+# Event kinds inside the simulator queue (trace kinds + deferred faults).
+_EV_FAULT = 0        # an actual fault strikes now
+_EV_PREDICTION = 1   # a prediction (true or false) is announced for date t
+
+
+# ---------------------------------------------------------------------------
+# Trust policies (whether to act on a prediction)
+# ---------------------------------------------------------------------------
+
+class TrustPolicy:
+    """Decides whether to act on a prediction given its offset in the period."""
+
+    def trust(self, offset: float, rng: np.random.Generator) -> bool:
+        raise NotImplementedError
+
+
+class NeverTrust(TrustPolicy):
+    def trust(self, offset: float, rng: np.random.Generator) -> bool:
+        return False
+
+
+class AlwaysTrust(TrustPolicy):
+    def trust(self, offset: float, rng: np.random.Generator) -> bool:
+        return True
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedProbabilityTrust(TrustPolicy):
+    """Paper §4.1: trust each actionable prediction with probability q."""
+
+    q: float
+
+    def trust(self, offset: float, rng: np.random.Generator) -> bool:
+        return bool(rng.random() < self.q)
+
+
+@dataclasses.dataclass(frozen=True)
+class ThresholdTrust(TrustPolicy):
+    """Paper Theorem 1: trust iff the prediction offset >= threshold."""
+
+    threshold: float
+
+    def trust(self, offset: float, rng: np.random.Generator) -> bool:
+        return offset >= self.threshold
+
+
+# ---------------------------------------------------------------------------
+# Simulation result
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SimResult:
+    makespan: float
+    time_base: float
+    n_faults: int = 0
+    n_faults_hit: int = 0          # faults that destroyed work or a phase
+    n_predictions: int = 0
+    n_trusted: int = 0             # proactive checkpoints taken
+    n_trusted_true: int = 0        # ... that did precede an actual fault
+    n_ignored_by_necessity: int = 0
+    n_periodic_ckpts: int = 0
+    time_ckpt: float = 0.0         # periodic checkpointing time
+    time_prockpt: float = 0.0      # proactive checkpointing time
+    time_down: float = 0.0         # downtime + recovery
+    time_lost: float = 0.0         # destroyed (re-executed) work
+
+    @property
+    def waste(self) -> float:
+        return 1.0 - self.time_base / self.makespan if self.makespan > 0 else 0.0
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+
+class _Machine:
+    """Phase machine executing the periodic schedule between events."""
+
+    def __init__(self, platform: Platform, cp: float, period,
+                 time_base: float, res: SimResult) -> None:
+        # ``period`` may be a float or a callable t -> T (dynamic policies,
+        # e.g. hazard-aware periods for Weibull faults; see
+        # benchmarks/beyond.py).  Evaluated at each period start.
+        self.period_fn = period if callable(period) else (lambda t: period)
+        if self.period_fn(0.0) < platform.c:
+            raise ValueError(
+                f"period {self.period_fn(0.0)} < checkpoint {platform.c}")
+        self.p = platform
+        self.cp = cp
+        self.work_per_period = self.period_fn(0.0) - platform.c
+        self.time_base = time_base
+        self.res = res
+
+        self.now = 0.0
+        self.done = 0.0          # useful work completed (volatile + saved)
+        self.saved = 0.0         # useful work secured by a completed checkpoint
+        self.phase = _WORK
+        self.phase_end = math.inf
+        self.period_start = 0.0  # completion time of the last checkpoint/recovery
+        self.w_rem = self._fresh_work()
+        self.finished = False
+
+    def _fresh_work(self) -> float:
+        return min(self.work_per_period, self.time_base - self.saved)
+
+    # -- schedule advancement ------------------------------------------------
+
+    def advance_to(self, target: float) -> None:
+        """Follow the fault-free schedule up to ``target`` (or completion)."""
+        while self.now < target and not self.finished:
+            if self.phase == _WORK:
+                if self.w_rem <= 0.0:
+                    self._start_ckpt()
+                    continue
+                dt = min(self.w_rem, target - self.now)
+                self.now += dt
+                self.done += dt
+                self.w_rem -= dt
+                if self.w_rem <= 0.0:
+                    self._start_ckpt()
+            else:
+                if self.phase_end <= target:
+                    self.now = self.phase_end
+                    self._complete_phase()
+                else:
+                    self.now = target
+
+    def run_to_completion(self) -> None:
+        self.advance_to(math.inf)
+
+    def _start_ckpt(self) -> None:
+        self.phase = _CKPT
+        self.phase_end = self.now + self.p.c
+
+    def _complete_phase(self) -> None:
+        if self.phase == _CKPT:
+            self.res.n_periodic_ckpts += 1
+            self.res.time_ckpt += self.p.c
+            self.saved = self.done
+            if self.saved >= self.time_base - 1e-9:
+                self.finished = True
+                return
+            self._new_period()
+        elif self.phase == _PROCKPT:
+            self.res.time_prockpt += self.cp
+            self.saved = self.done
+            # Period continues (paper §4.1); offsets for later predictions are
+            # measured from the last save, which is now.
+            self.period_start = self.now
+            self.phase = _WORK
+            self.phase_end = math.inf
+        elif self.phase == _DOWN:
+            self.res.time_down += self.p.d
+            self.phase = _RECOVER
+            self.phase_end = self.now + self.p.r
+        elif self.phase == _RECOVER:
+            self.res.time_down += self.p.r
+            self._new_period()
+
+    def _new_period(self) -> None:
+        self.phase = _WORK
+        self.phase_end = math.inf
+        self.period_start = self.now
+        self.work_per_period = max(1e-9,
+                                   self.period_fn(self.now) - self.p.c)
+        self.w_rem = self._fresh_work()
+
+    # -- event reactions ------------------------------------------------------
+
+    _DURATIONS = {}
+
+    def _phase_duration(self, phase: int) -> float:
+        return {_CKPT: self.p.c, _PROCKPT: self.cp, _DOWN: self.p.d,
+                _RECOVER: self.p.r}.get(phase, 0.0)
+
+    def fault(self, t: float) -> None:
+        """An actual fault strikes at absolute time t (requires now == t).
+
+        Accounting is accrual-exact: completed checkpoint/downtime phases
+        are charged at completion, so a fault mid-phase charges only the
+        elapsed fraction (to time_lost for aborted checkpoints, time_down
+        for interrupted down/recovery) — makespan then decomposes exactly
+        as base + ckpt + prockpt + lost + down.
+        """
+        self.res.n_faults_hit += 1
+        lost = self.done - self.saved
+        # Partial phase destroyed by the fault.
+        if self.phase in (_CKPT, _PROCKPT, _DOWN, _RECOVER) \
+                and self.phase_end != math.inf:
+            elapsed = self._phase_duration(self.phase) \
+                - (self.phase_end - self.now)
+            if self.phase in (_CKPT, _PROCKPT):
+                lost += max(0.0, elapsed)
+            else:
+                self.res.time_down += max(0.0, elapsed)
+        self.res.time_lost += lost
+        self.done = self.saved
+        # Restart (or start) downtime; a fault during DOWN/RECOVER restarts D.
+        self.phase = _DOWN
+        self.phase_end = t + self.p.d
+
+    def try_proactive(self, pred_date: float) -> bool:
+        """Attempt a proactive checkpoint completing exactly at ``pred_date``.
+
+        Returns True if the checkpoint was scheduled (platform is working and
+        there is room for C_p).  Must be called with now == pred_date - C_p.
+        """
+        if self.finished or self.phase != _WORK:
+            return False
+        self.phase = _PROCKPT
+        self.phase_end = pred_date
+        return True
+
+
+def simulate(
+    trace: EventTrace,
+    platform: Platform,
+    time_base: float,
+    period,
+    *,
+    cp: float | None = None,
+    trust: TrustPolicy | None = None,
+    inexact_window: float = 0.0,
+    start: float = 0.0,
+    rng: np.random.Generator | None = None,
+) -> SimResult:
+    """Simulate one execution; returns the :class:`SimResult`.
+
+    Args:
+      trace: merged platform event stream (faults + predictions).
+      platform: (mu, C, D, R) parameters.
+      time_base: useful work to complete (seconds).
+      period: checkpointing period T (>= C).
+      cp: proactive checkpoint duration C_p (defaults to C).
+      trust: trust policy for predictions (default: never trust).
+      inexact_window: width of the uncertainty window for true predictions
+        (paper's InexactPrediction uses 2C); 0 = exact dates.
+      start: job start offset into the trace (paper: one year).
+      rng: used for the trust policy randomness and inexact fault dates.
+    """
+    cp = platform.c if cp is None else cp
+    trust = trust or NeverTrust()
+    rng = rng or np.random.default_rng(0)
+
+    res = SimResult(makespan=0.0, time_base=time_base)
+    m = _Machine(platform, cp, period, time_base, res)
+
+    # Shift the trace so the job starts at time 0.
+    sel = trace.times >= start
+    times = trace.times[sel] - start
+    kinds = trace.kinds[sel]
+
+    # Event queue: (time, seq, ev_kind, payload). Predictions enter at their
+    # *predicted date* (the lead time is assumed >= C_p, §2.2); deferred
+    # actual faults (inexact mode / untrusted true predictions) are pushed
+    # back as _EV_FAULT.
+    queue: list[tuple[float, int, int, int]] = []
+    seq = 0
+    for t, k in zip(times, kinds):
+        if k == FAULT_UNPRED:
+            queue.append((float(t), seq, _EV_FAULT, 0))
+        else:
+            queue.append((float(t), seq, _EV_PREDICTION, int(k)))
+        seq += 1
+    heapq.heapify(queue)
+
+    while queue and not m.finished:
+        t, _, ev, payload = heapq.heappop(queue)
+        if ev == _EV_FAULT:
+            res.n_faults += 1
+            m.advance_to(t)
+            if m.finished:
+                break
+            m.fault(t)
+            continue
+
+        # A prediction announced for date t (true iff payload == FAULT_PRED).
+        res.n_predictions += 1
+        is_true = payload == FAULT_PRED
+        fault_date = t
+        if is_true and inexact_window > 0.0:
+            fault_date = t + float(rng.uniform(0.0, inexact_window))
+
+        # Advance to the latest proactive-checkpoint start time.
+        ckpt_start = t - cp
+        acted = False
+        if ckpt_start >= m.now:
+            m.advance_to(ckpt_start)
+            if m.finished:
+                break
+            if m.phase == _WORK:
+                offset = t - m.period_start
+                if trust.trust(offset, rng):
+                    acted = m.try_proactive(t)
+                    if acted:
+                        res.n_trusted += 1
+                        if is_true:
+                            res.n_trusted_true += 1
+            else:
+                res.n_ignored_by_necessity += 1
+        else:
+            res.n_ignored_by_necessity += 1
+
+        if is_true:
+            # The actual fault still strikes (at fault_date), whether or not
+            # we checkpointed proactively.
+            res.n_faults += 1
+            heapq.heappush(queue, (fault_date, seq, _EV_FAULT, 0))
+            seq += 1
+
+    m.run_to_completion()
+    if not m.finished:
+        # Trace horizon exceeded: continue fault-free (callers should size the
+        # horizon generously; this keeps the simulator total).
+        m.run_to_completion()
+    res.makespan = m.now
+    return res
+
+
+def average_makespan(
+    make_trace: Callable[[np.random.Generator], EventTrace],
+    platform: Platform,
+    time_base: float,
+    period,
+    *,
+    n_runs: int = 20,
+    seed: int = 0,
+    **kw,
+) -> float:
+    """Average makespan of ``simulate`` over ``n_runs`` random traces."""
+    total = 0.0
+    for i in range(n_runs):
+        rng = np.random.default_rng(seed + i)
+        trace = make_trace(rng)
+        total += simulate(trace, platform, time_base, period, rng=rng, **kw).makespan
+    return total / n_runs

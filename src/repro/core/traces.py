@@ -1,0 +1,272 @@
+"""Failure / prediction trace generation (paper §5.1).
+
+Produces the three event streams the simulator consumes:
+  * fault times           — renewal process (Exponential, Weibull, Uniform,
+                            log-based Empirical), either one platform-level
+                            stream scaled to the platform MTBF mu, or the
+                            superposition of N per-processor streams;
+  * predicted flags       — each fault is predicted with probability r (recall);
+  * false-prediction times — renewal process with mean mu_P/(1-p) = p mu /(r (1-p)).
+
+Event encoding used throughout: structured arrays (time, kind) with kinds
+  FAULT_UNPRED  actual fault, not predicted
+  FAULT_PRED    actual fault, predicted (prediction date == fault date; the
+                simulator adds the uncertainty window for InexactPrediction)
+  FALSE_PRED    prediction that does not materialize
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Iterable
+
+import numpy as np
+
+__all__ = [
+    "FAULT_UNPRED",
+    "FAULT_PRED",
+    "FALSE_PRED",
+    "EventTrace",
+    "Distribution",
+    "Exponential",
+    "Weibull",
+    "UniformDist",
+    "LogNormalDist",
+    "Empirical",
+    "renewal_trace",
+    "superposed_trace",
+    "make_event_trace",
+    "lanl_like_log",
+]
+
+FAULT_UNPRED = 0
+FAULT_PRED = 1
+FALSE_PRED = 2
+
+
+# ---------------------------------------------------------------------------
+# Inter-arrival distributions (all parameterized by their MEAN, so that they
+# can be rescaled to any platform MTBF as the paper does).
+# ---------------------------------------------------------------------------
+
+class Distribution:
+    """Base class: inter-arrival time distribution with a controllable mean."""
+
+    mean: float
+
+    def sample(self, rng: np.random.Generator, size: int) -> np.ndarray:
+        raise NotImplementedError
+
+    def rescaled(self, mean: float) -> "Distribution":
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class Exponential(Distribution):
+    mean: float
+
+    def sample(self, rng: np.random.Generator, size: int) -> np.ndarray:
+        return rng.exponential(self.mean, size)
+
+    def rescaled(self, mean: float) -> "Exponential":
+        return Exponential(mean)
+
+
+@dataclasses.dataclass(frozen=True)
+class Weibull(Distribution):
+    """Weibull with shape k; scale chosen so that the mean is ``mean``."""
+
+    shape: float
+    mean: float
+
+    @property
+    def scale(self) -> float:
+        return self.mean / math.gamma(1.0 + 1.0 / self.shape)
+
+    def sample(self, rng: np.random.Generator, size: int) -> np.ndarray:
+        return self.scale * rng.weibull(self.shape, size)
+
+    def rescaled(self, mean: float) -> "Weibull":
+        return Weibull(self.shape, mean)
+
+
+@dataclasses.dataclass(frozen=True)
+class UniformDist(Distribution):
+    """Uniform on [0, 2*mean] (used for false-prediction traces, Appendix B)."""
+
+    mean: float
+
+    def sample(self, rng: np.random.Generator, size: int) -> np.ndarray:
+        return rng.uniform(0.0, 2.0 * self.mean, size)
+
+    def rescaled(self, mean: float) -> "UniformDist":
+        return UniformDist(mean)
+
+
+@dataclasses.dataclass(frozen=True)
+class LogNormalDist(Distribution):
+    """LogNormal with given sigma; mu chosen to match the mean (extension)."""
+
+    sigma: float
+    mean: float
+
+    def sample(self, rng: np.random.Generator, size: int) -> np.ndarray:
+        mu = math.log(self.mean) - 0.5 * self.sigma ** 2
+        return rng.lognormal(mu, self.sigma, size)
+
+    def rescaled(self, mean: float) -> "LogNormalDist":
+        return LogNormalDist(self.sigma, mean)
+
+
+@dataclasses.dataclass(frozen=True)
+class Empirical(Distribution):
+    """Empirical distribution over observed availability intervals (paper §5.1,
+    log-based traces).  Sampling = resampling the interval set, which realizes
+    exactly the conditional law P(X >= t | X >= tau) described in the paper.
+    """
+
+    samples: tuple[float, ...]
+
+    @property
+    def mean(self) -> float:  # type: ignore[override]
+        return float(np.mean(self.samples))
+
+    def sample(self, rng: np.random.Generator, size: int) -> np.ndarray:
+        arr = np.asarray(self.samples, dtype=np.float64)
+        return rng.choice(arr, size=size, replace=True)
+
+    def rescaled(self, mean: float) -> "Empirical":
+        cur = self.mean
+        return Empirical(tuple(float(s) * mean / cur for s in self.samples))
+
+
+# ---------------------------------------------------------------------------
+# Renewal processes
+# ---------------------------------------------------------------------------
+
+def renewal_trace(dist: Distribution, horizon: float,
+                  rng: np.random.Generator) -> np.ndarray:
+    """Arrival times of a renewal process on [0, horizon)."""
+    if horizon <= 0:
+        return np.empty(0, dtype=np.float64)
+    # Draw in batches until the horizon is exceeded.
+    est = max(16, int(horizon / max(dist.mean, 1e-12) * 1.5) + 8)
+    chunks: list[np.ndarray] = []
+    total = 0.0
+    while total < horizon:
+        draws = dist.sample(rng, est)
+        draws = np.maximum(draws, 1e-9)  # guard zero inter-arrivals
+        chunks.append(draws)
+        total += float(draws.sum())
+        est = max(16, est // 2)
+    times = np.cumsum(np.concatenate(chunks))
+    return times[times < horizon]
+
+
+def superposed_trace(dist_ind: Distribution, n: int, horizon: float,
+                     rng: np.random.Generator) -> np.ndarray:
+    """Superposition of n i.i.d. per-processor renewal processes (paper §5.1).
+
+    Vectorized wave sampling: processors that have not yet exceeded the
+    horizon draw their next inter-arrival together.
+    """
+    t = np.zeros(n, dtype=np.float64)
+    out: list[np.ndarray] = []
+    active = np.arange(n)
+    while active.size:
+        draws = np.maximum(dist_ind.sample(rng, active.size), 1e-9)
+        t[active] = t[active] + draws
+        hit = t[active] < horizon
+        out.append(t[active][hit])
+        active = active[hit]
+    if not out:
+        return np.empty(0, dtype=np.float64)
+    return np.sort(np.concatenate(out))
+
+
+# ---------------------------------------------------------------------------
+# Full event traces
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EventTrace:
+    """Merged, time-sorted platform event stream."""
+
+    times: np.ndarray  # float64, ascending
+    kinds: np.ndarray  # int8, FAULT_UNPRED / FAULT_PRED / FALSE_PRED
+    horizon: float
+
+    def __post_init__(self) -> None:
+        if self.times.shape != self.kinds.shape:
+            raise ValueError("times/kinds shape mismatch")
+
+    @property
+    def fault_times(self) -> np.ndarray:
+        return self.times[self.kinds != FALSE_PRED]
+
+    @property
+    def n_faults(self) -> int:
+        return int(np.sum(self.kinds != FALSE_PRED))
+
+    def empirical_mtbf(self) -> float:
+        n = self.n_faults
+        return math.inf if n == 0 else self.horizon / n
+
+
+def make_event_trace(
+    fault_dist: Distribution,
+    mu: float,
+    recall: float,
+    precision: float,
+    horizon: float,
+    rng: np.random.Generator,
+    *,
+    false_pred_dist: Distribution | None = None,
+    n_processors: int | None = None,
+) -> EventTrace:
+    """Build the merged event trace for one simulated instance (paper §5.1).
+
+    If ``n_processors`` is given, faults come from the superposition of
+    per-processor streams using ``fault_dist`` as the *individual* law
+    (its mean is interpreted as mu_ind = mu * n).  Otherwise a single
+    platform-level stream rescaled to mean ``mu`` is used.
+
+    False predictions follow ``false_pred_dist`` (default: same family as
+    the fault distribution, per §5.2) rescaled to mean p*mu/(r*(1-p)).
+    """
+    if n_processors:
+        faults = superposed_trace(fault_dist.rescaled(mu * n_processors),
+                                  n_processors, horizon, rng)
+    else:
+        faults = renewal_trace(fault_dist.rescaled(mu), horizon, rng)
+
+    predicted = rng.random(faults.size) < recall
+    kinds = np.where(predicted, FAULT_PRED, FAULT_UNPRED).astype(np.int8)
+
+    if recall > 0.0 and precision < 1.0:
+        mean_false = precision * mu / (recall * (1.0 - precision))
+        fdist = (false_pred_dist or fault_dist).rescaled(mean_false)
+        false_preds = renewal_trace(fdist, horizon, rng)
+    else:
+        false_preds = np.empty(0, dtype=np.float64)
+
+    times = np.concatenate([faults, false_preds])
+    all_kinds = np.concatenate(
+        [kinds, np.full(false_preds.size, FALSE_PRED, dtype=np.int8)])
+    order = np.argsort(times, kind="stable")
+    return EventTrace(times[order], all_kinds[order], horizon)
+
+
+def lanl_like_log(rng: np.random.Generator, n_intervals: int = 3010,
+                  mu_ind_days: float = 691.0, shape: float = 0.6) -> Empirical:
+    """Synthesize a LANL-18-like availability-interval log (see DESIGN.md §7).
+
+    The real Failure Trace Archive files are not available offline; we generate
+    an interval set once from a Weibull(k=0.6) whose mean matches the published
+    per-processor MTBF, then treat it as an *empirical discrete distribution*
+    exactly the way the paper treats the LANL logs.
+    """
+    base = Weibull(shape, mu_ind_days * 86400.0)
+    samples = np.maximum(base.sample(rng, n_intervals), 60.0)
+    return Empirical(tuple(float(s) for s in samples))

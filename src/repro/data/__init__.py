@@ -1,0 +1,5 @@
+"""Data pipelines (synthetic deterministic LM stream)."""
+
+from .pipeline import DataConfig, DataState, SyntheticLM
+
+__all__ = ["DataConfig", "DataState", "SyntheticLM"]

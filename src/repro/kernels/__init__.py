@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+  flash_attention   prefill/train attention (online softmax, GQA, windows)
+  decode_attention  single-token KV-cache attention (serving)
+  ckpt_delta        int8 delta quantization for proactive checkpoints
+
+Each kernel ships with a pure-jnp oracle in ref.py; ops.py is the public
+dispatching API.  Kernels are validated in interpret mode on CPU and are
+TARGETED at TPU (BlockSpec VMEM tiling, MXU-aligned tiles).
+"""
+
+from . import ckpt_delta, decode_attention, flash_attention, ops, ref
+
+__all__ = ["ckpt_delta", "decode_attention", "flash_attention", "ops", "ref"]

@@ -1,0 +1,54 @@
+"""Jit'd public wrappers for the Pallas kernels, with impl dispatch.
+
+``impl``:
+  * "ref"               pure-jnp oracle (CPU default, always available);
+  * "pallas_interpret"  Pallas kernel body executed by the interpreter on
+                        CPU (correctness validation path);
+  * "pallas"            compiled Pallas kernel (real TPUs).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from . import ckpt_delta as _cd
+from . import decode_attention as _da
+from . import flash_attention as _fa
+from . import ref as _ref
+
+__all__ = ["flash_attention", "decode_attention", "quantize_delta",
+           "dequantize_delta"]
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, q_offset=0,
+                    impl="ref", bq=128, bk=128) -> jax.Array:
+    if impl == "ref":
+        return _ref.flash_attention_ref(q, k, v, causal=causal,
+                                        window=window, q_offset=q_offset)
+    return _fa.flash_attention_pallas(
+        q, k, v, causal=causal, window=window, q_offset=q_offset,
+        bq=bq, bk=bk, interpret=(impl == "pallas_interpret"))
+
+
+def decode_attention(q, k_cache, v_cache, length, *, window=0,
+                     impl="ref", bk=512) -> jax.Array:
+    if impl == "ref":
+        return _ref.decode_attention_ref(q, k_cache, v_cache, length,
+                                         window=window)
+    return _da.decode_attention_pallas(
+        q, k_cache, v_cache, length, window=window, bk=bk,
+        interpret=(impl == "pallas_interpret"))
+
+
+def quantize_delta(cur, base, *, block=256, impl="ref"):
+    if impl == "ref":
+        return _ref.quantize_delta_ref(cur, base, block=block)
+    return _cd.quantize_delta_pallas(cur, base, block=block,
+                                     interpret=(impl == "pallas_interpret"))
+
+
+def dequantize_delta(q, scales, base, *, block=256, impl="ref"):
+    if impl == "ref":
+        return _ref.dequantize_delta_ref(q, scales, base, block=block)
+    return _cd.dequantize_delta_pallas(
+        q, scales, base, block=block, interpret=(impl == "pallas_interpret"))

@@ -1,0 +1,101 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``*_ref`` function defines the exact contract its kernel must satisfy;
+tests sweep shapes/dtypes and ``assert_allclose`` kernel-vs-oracle in
+``interpret=True`` mode (CPU).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["flash_attention_ref", "decode_attention_ref",
+           "quantize_delta_ref", "dequantize_delta_ref"]
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0,
+                        q_offset: int = 0) -> jax.Array:
+    """Dense softmax attention with GQA. q (B,Sq,H,hd); k,v (B,Skv,KV,hd).
+
+    ``window`` > 0 limits attention to the last ``window`` keys (requires
+    causal).  ``q_offset`` is the absolute position of q[0].
+    """
+    b, sq, h, hd = q.shape
+    skv, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    qf = q.astype(jnp.float32) / math.sqrt(hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    qr = qf.reshape(b, sq, kv, g, hd)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qr, kf)          # (B,KV,g,Sq,Skv)
+    qp = q_offset + jnp.arange(sq)
+    kp = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= qp[:, None] >= kp[None, :]
+    if window:
+        mask &= qp[:, None] - kp[None, :] < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, vf)
+    return out.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def decode_attention_ref(q: jax.Array, k_cache: jax.Array,
+                         v_cache: jax.Array, length: jax.Array, *,
+                         window: int = 0) -> jax.Array:
+    """Single-token attention against a KV cache (GQA).
+
+    q (B,1,H,hd); caches (B,S,KV,hd); length (B,) = valid entries.  With
+    ``window`` > 0 the cache is a ring buffer of size S == window and the
+    number of valid entries is min(length, window).
+    """
+    b, _, h, hd = q.shape
+    s, kv = k_cache.shape[1], k_cache.shape[2]
+    g = h // kv
+    qf = q.reshape(b, kv, g, hd).astype(jnp.float32) / math.sqrt(hd)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qf, k_cache.astype(jnp.float32))
+    idx = jnp.arange(s)[None, :]
+    lim = jnp.minimum(length, window) if window else length
+    valid = idx < lim[:, None]
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+def _pad_blocks(x: jax.Array, block: int) -> tuple[jax.Array, int]:
+    flat = x.reshape(-1)
+    pad = (-flat.size) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, block), pad
+
+
+def quantize_delta_ref(cur: jax.Array, base: jax.Array, *,
+                       block: int = 256) -> tuple[jax.Array, jax.Array]:
+    """Blockwise-absmax int8 quantization of (cur - base).
+
+    Returns (q (n_blocks, block) int8, scales (n_blocks,) f32).  The flat
+    input is zero-padded to a block multiple.
+    """
+    delta = cur.astype(jnp.float32) - base.astype(jnp.float32)
+    blocks, _ = _pad_blocks(delta, block)
+    absmax = jnp.max(jnp.abs(blocks), axis=1)
+    scales = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(blocks / scales[:, None]), -127, 127)
+    return q.astype(jnp.int8), scales.astype(jnp.float32)
+
+
+def dequantize_delta_ref(q: jax.Array, scales: jax.Array, base: jax.Array, *,
+                         block: int = 256) -> jax.Array:
+    """Inverse of :func:`quantize_delta_ref`: base + q * scale."""
+    delta = (q.astype(jnp.float32) * scales[:, None]).reshape(-1)
+    delta = delta[: base.size].reshape(base.shape)
+    return (base.astype(jnp.float32) + delta).astype(base.dtype)

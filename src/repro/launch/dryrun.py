@@ -1,0 +1,170 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) pair.
+
+Proves the distribution config is coherent without hardware: 512 placeholder
+CPU devices host the production meshes (16x16 single-pod, 2x16x16 multi-pod);
+every pair's step function must ``.lower().compile()`` under its sharding
+spec.  The compiled artifacts yield ``memory_analysis()`` (does it fit 16 GB
+HBM?) and ``cost_analysis()`` + collective parsing (the §Roofline terms).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+        --mesh both --out dryrun_results.json
+
+NOTE: the XLA_FLAGS line above MUST run before any other import — jax locks
+the device count on first initialization.
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import REGISTRY, SHAPES, get, skip_reason
+from repro.launch import hlo
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import lower_step
+
+
+def model_flops(cfg, shape) -> float:
+    """Useful FLOPs per step: 6*N*D train, 2*N*D prefill, 2*N*B decode."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch  # decode: one token per seq
+
+
+def run_pair(cfg, shape, mesh, mesh_name: str, rules=None) -> dict:
+    t0 = time.time()
+    pair = lower_step(cfg, shape, mesh, compile_now=True, rules=rules)
+    compiled = pair.compiled
+    terms = hlo.roofline_terms(
+        compiled, arch=cfg.name, shape=shape.name, mesh_name=mesh_name,
+        n_devices=mesh.devices.size, model_flops=model_flops(cfg, shape))
+    mem = compiled.memory_analysis()
+    return {
+        "arch": cfg.name, "shape": shape.name, "mesh": mesh_name,
+        "status": "ok",
+        "compile_s": round(time.time() - t0, 1),
+        "bytes_per_device": terms.bytes_per_device,
+        "fits_hbm": terms.bytes_per_device <= hlo.V5E.hbm_bytes,
+        "hlo_flops_per_dev": terms.hlo_flops,
+        "hlo_bytes_per_dev": terms.hlo_bytes,
+        "coll_bytes_per_dev": terms.coll_bytes,
+        "n_collectives": terms.n_collectives,
+        "t_compute_s": terms.t_compute,
+        "t_memory_s": terms.t_memory,
+        "t_collective_s": terms.t_collective,
+        "dominant": terms.dominant,
+        "model_flops": terms.model_flops,
+        "useful_flops_ratio": terms.useful_flops_ratio,
+        "memory_analysis": {
+            "temp": getattr(mem, "temp_size_in_bytes", None),
+            "args": getattr(mem, "argument_size_in_bytes", None),
+            "output": getattr(mem, "output_size_in_bytes", None),
+            "alias": getattr(mem, "alias_size_in_bytes", None),
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="dryrun_results.json")
+    ap.add_argument("--append", action="store_true",
+                    help="merge results into --out instead of overwriting")
+    ap.add_argument("--set", action="append", default=[],
+                    help="cfg override key=value (python literal)")
+    ap.add_argument("--rules", default=None,
+                    choices=[None, "seq_parallel"])
+    ap.add_argument("--tag", default=None)
+    args = ap.parse_args()
+
+    import ast
+    import dataclasses as _dc
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            overrides[k] = ast.literal_eval(v)
+        except (ValueError, SyntaxError):
+            overrides[k] = v
+    rules = None
+    if args.rules == "seq_parallel":
+        from repro.parallel.sharding import SEQ_PARALLEL_RULES
+        rules = SEQ_PARALLEL_RULES
+
+    assert jax.device_count() == 512, (
+        f"expected 512 placeholder devices, got {jax.device_count()}")
+
+    archs = list(REGISTRY) if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    results = []
+    if args.append and os.path.exists(args.out):
+        results = json.load(open(args.out))
+    done = {(r["arch"], r["shape"], r["mesh"], r.get("tag"))
+            for r in results}
+
+    for multi in meshes:
+        mesh = make_production_mesh(multi_pod=multi)
+        mesh_name = "2x16x16" if multi else "16x16"
+        for arch in archs:
+            cfg = get(arch)
+            for shape_name in shapes:
+                shape = SHAPES[shape_name]
+                if (arch, shape_name, mesh_name, args.tag) in done:
+                    continue
+                reason = skip_reason(cfg, shape)
+                if reason:
+                    results.append({"arch": arch, "shape": shape_name,
+                                    "mesh": mesh_name, "status": "skipped",
+                                    "reason": reason})
+                    print(f"[skip] {arch} x {shape_name}: {reason}",
+                          flush=True)
+                    continue
+                print(f"[lower] {arch} x {shape_name} on {mesh_name} "
+                      f"{'(' + args.tag + ')' if args.tag else ''}...",
+                      flush=True)
+                try:
+                    cfg_run = (cfg if not overrides
+                               else _dc.replace(cfg, **overrides))
+                    row = run_pair(cfg_run, shape, mesh, mesh_name,
+                                   rules=rules)
+                    if args.tag:
+                        row["tag"] = args.tag
+                    print(f"  ok: {row['compile_s']}s compile, "
+                          f"{row['bytes_per_device']/1e9:.2f} GB/dev, "
+                          f"dominant={row['dominant']}", flush=True)
+                except Exception as e:  # noqa: BLE001 - report and continue
+                    row = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_name, "status": "error",
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-2000:]}
+                    print(f"  ERROR: {type(e).__name__}: {str(e)[:200]}",
+                          flush=True)
+                results.append(row)
+                json.dump(results, open(args.out, "w"), indent=1)
+
+    ok = sum(r["status"] == "ok" for r in results)
+    skip = sum(r["status"] == "skipped" for r in results)
+    err = sum(r["status"] == "error" for r in results)
+    print(f"\ndry-run complete: {ok} ok, {skip} skipped, {err} errors "
+          f"-> {args.out}")
+    if err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

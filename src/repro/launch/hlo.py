@@ -1,0 +1,168 @@
+"""HLO post-processing: collective-traffic and roofline-term extraction.
+
+``compiled.cost_analysis()`` reports FLOPs and bytes accessed but not
+collective traffic, so we parse the optimized HLO text: every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+op's *result* shape (per-device bytes after SPMD partitioning) is summed.
+This is the per-device traffic estimate feeding the collective roofline term.
+
+Hardware constants are TPU v5e (the assignment's target): 197 TFLOP/s bf16,
+819 GB/s HBM, ~50 GB/s per ICI link; the "pod" axis of the multi-pod mesh
+rides DCN at ~6.25 GB/s effective per host.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+__all__ = ["V5E", "CollectiveStats", "collective_bytes", "RooflineTerms",
+           "roofline_terms", "parse_memory_analysis"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %all-gather.3 = bf16[16,4096,1024]{2,1,0} all-gather(...)
+_OP_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+\[[\d,]*\])(?:\{[^}]*\})?)\s+"
+    r"(" + "|".join(_COLLECTIVES) + r")[\s(.]")
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    name: str
+    flops_bf16: float        # per chip
+    hbm_bw: float            # bytes/s per chip
+    ici_bw: float            # bytes/s per link
+    dcn_bw: float            # bytes/s per host (pod-axis traffic)
+    hbm_bytes: float         # capacity per chip
+
+
+V5E = Hardware(name="tpu_v5e", flops_bf16=197e12, hbm_bw=819e9,
+               ici_bw=50e9, dcn_bw=6.25e9, hbm_bytes=16e9)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    """Per-device bytes by collective kind (from the partitioned HLO)."""
+
+    by_kind: dict
+    n_ops: int
+
+    @property
+    def total(self) -> int:
+        return sum(self.by_kind.values())
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    by_kind: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    n = 0
+    for m in _OP_RE.finditer(hlo_text):
+        tuple_shapes, single, kind = m.group(1), m.group(2), m.group(3)
+        shape_str = tuple_shapes if tuple_shapes else single
+        by_kind[kind] += _shape_bytes(shape_str)
+        n += 1
+    return CollectiveStats({k: v for k, v in by_kind.items() if v}, n)
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    """Three-term roofline for one compiled (arch x shape x mesh)."""
+
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    hlo_flops: float           # whole-program FLOPs (per device, XLA view)
+    hlo_bytes: float           # bytes accessed (per device)
+    coll_bytes: float          # collective bytes (per device)
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    model_flops: float         # 6*N*D useful flops (global)
+    bytes_per_device: float    # peak memory from memory_analysis
+    n_collectives: int = 0
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (global HLO FLOPs): remat/dispatch overhead probe."""
+        total = self.hlo_flops * self.n_devices
+        return self.model_flops / total if total else 0.0
+
+    def as_row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "bytes_per_device": self.bytes_per_device,
+            "n_collectives": self.n_collectives,
+        }
+
+
+def parse_memory_analysis(mem) -> float:
+    """Extract peak per-device bytes from compiled.memory_analysis()."""
+    if mem is None:
+        return 0.0
+    for attr in ("temp_size_in_bytes",):
+        if hasattr(mem, attr):
+            temp = getattr(mem, attr)
+            args = getattr(mem, "argument_size_in_bytes", 0)
+            out = getattr(mem, "output_size_in_bytes", 0)
+            alias = getattr(mem, "alias_size_in_bytes", 0)
+            return float(temp + args + out - alias)
+    return 0.0
+
+
+def roofline_terms(compiled, *, arch: str, shape: str, mesh_name: str,
+                   n_devices: int, model_flops: float,
+                   hw: Hardware = V5E) -> RooflineTerms:
+    """Derive the three roofline terms from a compiled executable.
+
+    XLA's cost_analysis flops on the SPMD-partitioned module are per-device.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    stats = collective_bytes(compiled.as_text())
+    mem = parse_memory_analysis(compiled.memory_analysis())
+    return RooflineTerms(
+        arch=arch, shape=shape, mesh=mesh_name, n_devices=n_devices,
+        hlo_flops=flops, hlo_bytes=bytes_accessed,
+        coll_bytes=float(stats.total),
+        t_compute=flops / hw.flops_bf16,
+        t_memory=bytes_accessed / hw.hbm_bw,
+        t_collective=stats.total / hw.ici_bw,
+        model_flops=model_flops,
+        bytes_per_device=mem,
+        n_collectives=stats.n_ops,
+    )

@@ -1,0 +1,25 @@
+"""Production mesh construction.
+
+Target: TPU v5e pods of 16 x 16 = 256 chips; multi-pod adds a leading "pod"
+axis over DCN (2 x 16 x 16 = 512 chips).  Functions, not module-level
+constants, so importing this module never touches jax device state (the
+dry-run must set XLA_FLAGS before any device query).
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_cpu_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """16x16 single-pod mesh, or 2x16x16 multi-pod (pod axis = DCN)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_cpu_mesh() -> jax.sharding.Mesh:
+    """1x1 mesh over the single CPU device (smoke tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

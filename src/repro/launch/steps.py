@@ -1,0 +1,271 @@
+"""Sharded step builders: train_step / prefill_step / serve_step + specs.
+
+This module is the bridge between the model code and the distribution
+layer: it builds the jitted step functions with explicit in/out shardings
+derived from the logical-axes trees, and the matching ShapeDtypeStruct
+input stand-ins — everything the multi-pod dry-run needs to
+``.lower().compile()`` without allocating a byte of model state.
+
+``abstract_state`` uses eval_shape with a side channel for the axes tree
+(axes are plain-python tuples built during tracing, so they cannot travel
+through eval_shape's return value).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import InputShape, ModelConfig
+from ..models import transformer
+from ..models.model import _batch_shapes, cache_len_for, loss_fn
+from ..optim.adamw import AdamWConfig, adamw_init, adamw_update
+from ..parallel import sharding as shd
+
+__all__ = ["abstract_state", "abstract_cache", "make_train_step",
+           "make_prefill_step", "make_serve_step", "state_specs",
+           "batch_specs", "cache_specs", "lower_step"]
+
+
+# ---------------------------------------------------------------------------
+# Abstract state / cache (ShapeDtypeStructs + aligned axes, no allocation)
+# ---------------------------------------------------------------------------
+
+def abstract_state(cfg: ModelConfig, opt_cfg: AdamWConfig | None = None
+                   ) -> tuple[Any, Any, Any]:
+    """(params_abs, params_axes, opt_abs) as ShapeDtypeStructs."""
+    box: list[Any] = []
+
+    def build(key):
+        params, axes = transformer.init_params(cfg, key)
+        box.append(axes)
+        return params
+
+    params_abs = jax.eval_shape(build, jax.random.PRNGKey(0))
+    axes = box[0]
+    opt_abs = None
+    if opt_cfg is not None:
+        opt_abs = jax.eval_shape(
+            functools.partial(adamw_init, cfg=opt_cfg), params_abs)
+    return params_abs, axes, opt_abs
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, cache_len: int) -> Any:
+    return jax.eval_shape(
+        lambda: transformer.init_cache(cfg, batch, cache_len))
+
+
+# ---------------------------------------------------------------------------
+# Sharding specs
+# ---------------------------------------------------------------------------
+
+def state_specs(cfg: ModelConfig, mesh: Mesh, params_abs: Any, axes: Any,
+                opt_abs: Any = None, rules: shd.AxisRules | None = None):
+    """NamedSharding trees for (params, opt_state)."""
+    rules = rules or shd.DEFAULT_RULES
+    pspecs = shd.spec_tree(axes, params_abs, mesh, rules)
+    named = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                         is_leaf=lambda x: isinstance(x, P))
+    if opt_abs is None:
+        return named, None
+    ospecs = {
+        "m": named, "v": named,
+        "step": NamedSharding(mesh, P()),
+    }
+    return named, ospecs
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                rules: shd.AxisRules | None = None) -> dict:
+    """ShapeDtypeStructs (with shardings) for the train/prefill batch."""
+    rules = rules or shd.DEFAULT_RULES
+    axes_by_rank = {
+        2: ("batch", "seq"),
+        3: ("batch", "seq", "embed"),
+    }
+    out = {}
+    for name, (shp, dt) in _batch_shapes(cfg, shape).items():
+        if name == "positions_thw":
+            axes = ("batch", "seq", None)
+        elif name == "vision_embeds":
+            axes = ("batch", None, "embed")
+        else:
+            axes = axes_by_rank[len(shp)]
+        # Activations never shard "embed" on inputs (weights own that axis).
+        axes = tuple(None if a == "embed" else a for a in axes)
+        spec = shd.logical_to_spec(axes, shp, mesh, rules)
+        out[name] = jax.ShapeDtypeStruct(shp, dt,
+                                         sharding=NamedSharding(mesh, spec))
+    return out
+
+
+def cache_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                rules: shd.AxisRules | None = None):
+    """(cache_abs_with_shardings, cache_sharding_tree) for decode shapes."""
+    rules = rules or shd.DECODE_RULES
+    cache_abs = abstract_cache(cfg, shape.global_batch,
+                               cache_len_for(cfg, shape))
+    axes = transformer.cache_axes(cfg)
+    specs = shd.spec_tree(axes, cache_abs, mesh, rules)
+    named = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                         is_leaf=lambda x: isinstance(x, P))
+    cache_in = jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        cache_abs, named)
+    return cache_in, named
+
+
+# ---------------------------------------------------------------------------
+# Step functions
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    grad_shardings: Any = None) -> Callable:
+    """Microbatched train step: grad-accumulate over cfg.microbatches.
+
+    ``grad_shardings`` (the params' NamedSharding tree) pins the scan-carried
+    gradient accumulator: without it GSPMD replicates the carry, and a 405B
+    model materializes full-size fp32 grads on every device.
+    """
+    m = max(1, cfg.microbatches)
+    acc_dt = jnp.bfloat16 if cfg.grad_accum_dtype == "bfloat16" \
+        else jnp.float32
+
+    def pin(tree):
+        if grad_shardings is None:
+            return tree
+        return jax.tree.map(jax.lax.with_sharding_constraint, tree,
+                            grad_shardings)
+
+    def train_step(params, opt_state, batch):
+        if m == 1:
+            (_, metrics), grads = jax.value_and_grad(
+                lambda p: loss_fn(cfg, p, batch), has_aux=True)(params)
+        else:
+            mb = jax.tree.map(
+                lambda x: x.reshape((m, x.shape[0] // m) + x.shape[1:]),
+                batch)
+
+            def one(acc, mbatch):
+                (_, metrics), grads = jax.value_and_grad(
+                    lambda p: loss_fn(cfg, p, mbatch), has_aux=True)(params)
+                acc = pin(jax.tree.map(
+                    lambda a, g: a + g.astype(acc_dt), acc, grads))
+                return acc, metrics
+
+            zeros = pin(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dt), params))
+            grads, metrics_all = jax.lax.scan(one, zeros, mb)
+            grads = jax.tree.map(lambda g: g / m, grads)
+            metrics = jax.tree.map(lambda x: x.mean(), metrics_all)
+        new_params, new_opt, opt_metrics = adamw_update(
+            params, grads, opt_state, opt_cfg)
+        return new_params, new_opt, {**metrics, **opt_metrics}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, shape: InputShape) -> Callable:
+    """Prefill (decoder archs) or full encode (encoder-only archs)."""
+    if cfg.causal:
+        def prefill_step(params, batch):
+            return transformer.prefill(cfg, params, batch,
+                                       cache_len=shape.seq_len)
+    else:
+        def prefill_step(params, batch):
+            logits, _ = transformer.forward_train(cfg, params, batch)
+            return logits
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    def serve_step(params, token, cache):
+        return transformer.decode_step(cfg, params, token, cache)
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Lowering helper (dry-run entry)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class LoweredPair:
+    arch: str
+    shape: str
+    kind: str
+    lowered: Any
+    compiled: Any = None
+
+
+def lower_step(cfg: ModelConfig, shape: InputShape, mesh: Mesh, *,
+               opt_cfg: AdamWConfig | None = None,
+               rules: shd.AxisRules | None = None,
+               compile_now: bool = True) -> LoweredPair:
+    """Lower (and optionally compile) the right step for (cfg, shape)."""
+    cfg = cfg.for_shape(shape)
+    if shape.kind == "train":
+        opt_cfg = opt_cfg or AdamWConfig(moment_dtype=cfg.opt_dtype)
+        rules = rules or shd.DEFAULT_RULES
+        params_abs, axes, opt_abs = abstract_state(cfg, opt_cfg)
+        pshard, oshard = state_specs(cfg, mesh, params_abs, axes, opt_abs,
+                                     rules)
+        batch = batch_specs(cfg, shape, mesh, rules)
+        params_in = jax.tree.map(
+            lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+            params_abs, pshard)
+        opt_in = jax.tree.map(
+            lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+            opt_abs, oshard)
+        step = make_train_step(cfg, opt_cfg, grad_shardings=pshard)
+        with shd.use_rules(rules, mesh), mesh:
+            jitted = jax.jit(step,
+                             in_shardings=(pshard, oshard, None),
+                             out_shardings=(pshard, oshard, None))
+            # NOTE: on real TPUs pass donate_argnums=(0, 1) so the updated
+            # state aliases the old one; the CPU dry-run backend implements
+            # donation as copies, which would distort memory_analysis.
+            lowered = jitted.lower(params_in, opt_in, batch)
+    elif shape.kind == "prefill":
+        rules = rules or shd.DEFAULT_RULES
+        params_abs, axes, _ = abstract_state(cfg)
+        pshard, _ = state_specs(cfg, mesh, params_abs, axes, None, rules)
+        batch = batch_specs(cfg, shape, mesh, rules)
+        params_in = jax.tree.map(
+            lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+            params_abs, pshard)
+        step = make_prefill_step(cfg, shape)
+        with shd.use_rules(rules, mesh), mesh:
+            jitted = jax.jit(step, in_shardings=(pshard, None))
+            lowered = jitted.lower(params_in, batch)
+    elif shape.kind == "decode":
+        rules = rules or shd.DECODE_RULES
+        params_abs, axes, _ = abstract_state(cfg)
+        pshard, _ = state_specs(cfg, mesh, params_abs, axes, None, rules)
+        params_in = jax.tree.map(
+            lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+            params_abs, pshard)
+        cache_in, cache_shard = cache_specs(cfg, shape, mesh, rules)
+        token = jax.ShapeDtypeStruct(
+            (shape.global_batch,), jnp.int32,
+            sharding=NamedSharding(mesh, shd.logical_to_spec(
+                ("batch",), (shape.global_batch,), mesh, rules)))
+        step = make_serve_step(cfg)
+        with shd.use_rules(rules, mesh), mesh:
+            jitted = jax.jit(step,
+                             in_shardings=(pshard, token.sharding,
+                                           cache_shard),
+                             out_shardings=(None, cache_shard))
+            # NOTE: donate the cache (argnums=2) on real TPUs.
+            lowered = jitted.lower(params_in, token, cache_in)
+    else:
+        raise ValueError(shape.kind)
+
+    pair = LoweredPair(cfg.name, shape.name, shape.kind, lowered)
+    if compile_now:
+        pair.compiled = lowered.compile()
+    return pair

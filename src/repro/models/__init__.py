@@ -1,0 +1,9 @@
+"""Model definitions: layers, MoE, recurrent blocks, transformer assembly."""
+
+from . import layers, model, moe, rglru, transformer, xlstm
+from .model import (decode_step, forward_train, init_cache, init_params,
+                    input_specs, loss_fn, make_batch, prefill)
+
+__all__ = ["layers", "model", "moe", "rglru", "transformer", "xlstm",
+           "init_params", "forward_train", "prefill", "decode_step",
+           "init_cache", "loss_fn", "input_specs", "make_batch"]

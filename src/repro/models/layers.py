@@ -1,0 +1,257 @@
+"""Model primitives: RMSNorm, RoPE / M-RoPE, GQA attention, SwiGLU.
+
+All parameter-init helpers return aligned ``(params, logical_axes)`` pytrees;
+the distribution layer (repro.parallel) turns logical axes into
+PartitionSpecs.  Attention is implemented as a memory-bounded chunked
+online-softmax (flash-style) in pure jnp — this is the reference/compile
+path; the Pallas TPU kernels in repro.kernels implement the same contract
+for the hot paths and are validated against these functions.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict
+Axes = dict
+
+# ---------------------------------------------------------------------------
+# Init helpers: (params, axes) aligned trees
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key: jax.Array, in_dim: int, out_dim: int,
+               axes: tuple[str | None, str | None], dtype: Any,
+               scale: float | None = None) -> tuple[jax.Array, tuple]:
+    scale = 1.0 / math.sqrt(in_dim) if scale is None else scale
+    w = jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale
+    return w.astype(dtype), axes
+
+
+def norm_init(dim: int, dtype: Any) -> tuple[jax.Array, tuple]:
+    return jnp.ones((dim,), dtype), ("embed",)
+
+
+def merge(pairs: dict[str, tuple[Any, Any]]) -> tuple[Params, Axes]:
+    """Merge {name: (params, axes)} into aligned (params, axes) dicts."""
+    return ({k: v[0] for k, v in pairs.items()},
+            {k: v[1] for k, v in pairs.items()})
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE and M-RoPE
+# ---------------------------------------------------------------------------
+
+def rope_angles(positions: jax.Array, head_dim: int,
+                theta: float) -> tuple[jax.Array, jax.Array]:
+    """cos/sin tables. positions (..., S) -> (..., S, head_dim//2), fp32."""
+    half = head_dim // 2
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv_freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def mrope_angles(positions_thw: jax.Array, sections: tuple[int, int, int],
+                 head_dim: int, theta: float) -> tuple[jax.Array, jax.Array]:
+    """M-RoPE (Qwen2-VL): positions_thw (B, S, 3) -> (B, S, head_dim//2) tables.
+
+    The head_dim//2 rotary frequencies are split into (t, h, w) sections; each
+    frequency rotates by the corresponding positional component.  Text tokens
+    carry identical (t, h, w) = (pos, pos, pos), reducing to plain RoPE.
+    """
+    half = head_dim // 2
+    st, sh, sw = sections
+    if st + sh + sw != half:
+        raise ValueError(f"M-RoPE sections {sections} must sum to {half}")
+    comp = jnp.concatenate([
+        jnp.zeros((st,), jnp.int32),
+        jnp.ones((sh,), jnp.int32),
+        jnp.full((sw,), 2, jnp.int32),
+    ])  # (half,) -> which positional component drives each frequency
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    pos = jnp.take_along_axis(
+        positions_thw.astype(jnp.float32),
+        jnp.broadcast_to(comp[None, None, :],
+                         positions_thw.shape[:2] + (half,)),
+        axis=-1)  # (B, S, half)
+    ang = pos * inv_freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (B, S, H, hd); cos/sin (S, hd//2) or (B, S, hd//2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:      # (S, half)
+        cos_b = cos[None, :, None, :]
+        sin_b = sin[None, :, None, :]
+    else:                  # (B, S, half)
+        cos_b = cos[:, :, None, :]
+        sin_b = sin[:, :, None, :]
+    xf = x.dtype
+    x1, x2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos_b - x2 * sin_b,
+                           x2 * cos_b + x1 * sin_b], axis=-1)
+    return out.astype(xf)
+
+
+# ---------------------------------------------------------------------------
+# Attention (reference path): chunked online-softmax, GQA, causal / window /
+# bidirectional.
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _pick_chunk(s: int, target: int) -> int:
+    """Largest divisor of s that is <= target (power-of-two seqs make this easy)."""
+    c = min(s, target)
+    while s % c:
+        c -= 1
+    return c
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool, window: int = 0,
+                      q_offset: int = 0,
+                      q_chunk: int = 512, kv_chunk: int = 512,
+                      unroll: bool = False) -> jax.Array:
+    """Flash-style attention. q (B,Sq,H,hd); k,v (B,Skv,KV,hd) -> (B,Sq,H,hd).
+
+    Memory is O(q_chunk * kv_chunk) per program instead of O(Sq * Skv).
+    ``window`` > 0 restricts attention to the last ``window`` keys (inclusive
+    of self); requires ``causal``.  ``q_offset`` is the absolute position of
+    q[0] (used for prefill continuation and window masks).
+    """
+    b, sq, h, hd = q.shape
+    skv, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    qc = _pick_chunk(sq, q_chunk)
+    kc = _pick_chunk(skv, kv_chunk)
+    nq, nk = sq // qc, skv // kc
+    scale = 1.0 / math.sqrt(hd)
+
+    qr = q.reshape(b, nq, qc, kv, g, hd).astype(jnp.float32) * scale
+    kr = k.reshape(b, nk, kc, kv, hd).astype(jnp.float32)
+    vr = v.reshape(b, nk, kc, kv, hd).astype(jnp.float32)
+
+    q_pos = q_offset + jnp.arange(sq).reshape(nq, qc)
+    k_pos = jnp.arange(skv).reshape(nk, kc)
+
+    def one_q_block(qi, qblk):
+        # qblk: (b, qc, kv, g, hd)
+        qp = q_pos[qi]  # (qc,)
+
+        def kv_step(carry, inputs):
+            m, l, acc = carry
+            kblk, vblk, kp = inputs  # (b,kc,kv,hd), (b,kc,kv,hd), (kc,)
+            s = jnp.einsum("bqkgd,bckd->bkgqc", qblk, kblk)  # (b,kv,g,qc,kc)
+            mask = jnp.ones((qc, kc), bool)
+            if causal:
+                mask &= qp[:, None] >= kp[None, :]
+            if window:
+                mask &= qp[:, None] - kp[None, :] < window
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bkgqc,bckd->bkgqd", p, vblk)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kv, g, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kv, g, qc), jnp.float32)
+        a0 = jnp.zeros((b, kv, g, qc, hd), jnp.float32)
+        kvs = (kr.transpose(1, 0, 2, 3, 4), vr.transpose(1, 0, 2, 3, 4),
+               k_pos)
+        if unroll:  # roofline analysis: loop bodies visible to cost_analysis
+            carry = (m0, l0, a0)
+            for j in range(nk):
+                carry, _ = kv_step(carry,
+                                   jax.tree.map(lambda a: a[j], kvs))
+            m, l, acc = carry
+        else:
+            (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), kvs)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]    # (b,kv,g,qc,hd)
+        return out.transpose(0, 3, 1, 2, 4)             # (b,qc,kv,g,hd)
+
+    qrt = qr.transpose(1, 0, 2, 3, 4, 5)
+    if unroll:
+        outs = [one_q_block(i, qrt[i]) for i in range(nq)]
+        out = jnp.stack(outs)
+    else:
+        out = jax.lax.map(lambda args: one_q_block(*args),
+                          (jnp.arange(nq), qrt))
+    # out: (nq, b, qc, kv, g, hd) -> (b, sq, h, hd)
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, kv * g, hd)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     length: jax.Array, *, window: int = 0,
+                     ring_pos: jax.Array | None = None) -> jax.Array:
+    """Single-token attention against a KV cache.
+
+    q (B, 1, H, hd); caches (B, S, KV, hd); ``length`` = number of valid
+    entries (absolute tokens seen).  With ``window`` > 0 the cache is a ring
+    buffer of size S == window and ``ring_pos`` gives the next write slot;
+    validity is min(length, window) entries ending at ring_pos-1.
+    """
+    b, _, h, hd = q.shape
+    s, kv = k_cache.shape[1], k_cache.shape[2]
+    g = h // kv
+    scale = 1.0 / math.sqrt(hd)
+    qr = q.reshape(b, kv, g, hd).astype(jnp.float32) * scale
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qr, kf)  # (b,kv,g,s)
+    idx = jnp.arange(s)[None, :]                    # (1, s)
+    if window:
+        valid = idx < jnp.minimum(length, window)[:, None]
+    else:
+        valid = idx < length[:, None]
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, vf)
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def swiglu_init(key: jax.Array, d: int, f: int, dtype: Any) -> tuple[Params, Axes]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return merge({
+        "w_gate": dense_init(k1, d, f, ("embed", "mlp"), dtype),
+        "w_up": dense_init(k2, d, f, ("embed", "mlp"), dtype),
+        "w_down": dense_init(k3, f, d, ("mlp", "embed"), dtype),
+    })
+
+
+def swiglu(params: Params, x: jax.Array) -> jax.Array:
+    from ..parallel.sharding import constrain
+    gate = jax.nn.silu(x @ params["w_gate"])
+    # Interior activations must carry the model axis on the HIDDEN dim
+    # (never on seq): otherwise the w_down/w_up weight-gradient partial
+    # products materialize at full (d, f) size per device.
+    h = gate * (x @ params["w_up"])
+    axes = ("batch",) + (None,) * (h.ndim - 2) + ("mlp",)
+    return constrain(h, axes) @ params["w_down"]

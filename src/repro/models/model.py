@@ -1,0 +1,165 @@
+"""Public model API: losses, batch construction, input specs.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every model
+input of an (architecture x input-shape) pair — the dry-run lowers against
+these without allocating anything.  ``make_batch`` builds the matching
+concrete random batch for CPU smoke tests.  ``loss_fn`` dispatches between
+next-token LM loss (decoder archs) and masked-prediction loss (encoder-only
+audio archs), always computed in fp32 with a logsumexp cross-entropy.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import InputShape, ModelConfig
+from . import transformer
+from .transformer import (decode_step, forward_train, init_cache, init_params,
+                          param_dtype, prefill)
+
+__all__ = ["init_params", "forward_train", "prefill", "decode_step",
+           "init_cache", "loss_fn", "input_specs", "make_batch",
+           "cache_len_for", "state_bytes"]
+
+# Vision stub geometry for VLM input specs: fraction of the sequence that is
+# image patches (dynamic-resolution stand-in).
+_VISION_FRACTION = 0.25
+
+
+def cache_len_for(cfg: ModelConfig, shape: InputShape) -> int:
+    """Decode-cache length for a shape (cache covers the full context)."""
+    return shape.seq_len
+
+
+def _pick(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    """logits[..., targets] via a masked reduction over the vocab axis.
+
+    A gather (take_along_axis) over the model-sharded vocab axis would make
+    GSPMD all-gather the full logits tensor (hundreds of GB at train_4k
+    scale); the iota-mask reduction keeps the contraction local + a scalar
+    all-reduce.
+    """
+    v = logits.shape[-1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    hit = iota == targets[..., None]
+    return jnp.sum(jnp.where(hit, logits, 0.0), axis=-1)
+
+
+def _lm_loss(cfg: ModelConfig, logits: jax.Array, tokens: jax.Array
+             ) -> jax.Array:
+    """Next-token cross entropy: predict tokens[:, 1:] from logits[:, :-1]."""
+    logits = logits[:, :-1].astype(jnp.float32)
+    targets = tokens[:, 1:]
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    picked = _pick(logits, targets)
+    return jnp.mean(lse - picked)
+
+
+def _masked_loss(cfg: ModelConfig, logits: jax.Array, labels: jax.Array,
+                 mask: jax.Array) -> jax.Array:
+    """Masked-prediction CE over the codebook (HuBERT-style)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    picked = _pick(logits, labels)
+    per_tok = (lse - picked) * mask
+    return per_tok.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def loss_fn(cfg: ModelConfig, params: Any, batch: dict) -> tuple[jax.Array, dict]:
+    """Training loss (+ metrics dict). Differentiable in ``params``."""
+    logits, moe_aux = forward_train(cfg, params, batch)
+    if cfg.embed_inputs:
+        loss = _lm_loss(cfg, logits, batch["tokens"])
+    else:
+        loss = _masked_loss(cfg, logits, batch["labels"], batch["mask"])
+    total = loss + cfg.router_aux_coef * moe_aux
+    return total, {"loss": loss, "moe_aux": moe_aux}
+
+
+# ---------------------------------------------------------------------------
+# Input specs / batches
+# ---------------------------------------------------------------------------
+
+def _batch_shapes(cfg: ModelConfig, shape: InputShape) -> dict[str, tuple]:
+    """(shape, dtype) for each input of the *training/prefill* batch."""
+    b, s = shape.global_batch, shape.seq_len
+    dt = param_dtype(cfg)
+    if not cfg.embed_inputs:  # audio encoder: frame embeddings + targets
+        out = {"frames": ((b, s, cfg.d_model), dt),
+               "labels": ((b, s), jnp.int32),
+               "mask": ((b, s), jnp.bool_)}
+        return out
+    out = {"tokens": ((b, s), jnp.int32)}
+    if cfg.mrope_sections is not None:  # VLM: patches + 3-D positions
+        n_patches = int(s * _VISION_FRACTION)
+        out["vision_embeds"] = ((b, n_patches, cfg.d_model), dt)
+        out["vision_mask"] = ((b, s), jnp.bool_)
+        out["positions_thw"] = ((b, s, 3), jnp.int32)
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape,
+                sharding_fn=None) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the batch of (cfg, shape).
+
+    For decode shapes the spec is {"token": (B,), "cache": ...} matching
+    ``serve_step``.  ``sharding_fn(shape_tuple, kind)`` may attach shardings.
+    """
+    def sds(shp, dt):
+        return jax.ShapeDtypeStruct(shp, dt)
+
+    if shape.kind == "decode":
+        cache = init_cache_specs(cfg, shape.global_batch,
+                                 cache_len_for(cfg, shape))
+        return {"token": sds((shape.global_batch,), jnp.int32),
+                "cache": cache}
+    return {k: sds(*v) for k, v in _batch_shapes(cfg, shape).items()}
+
+
+def init_cache_specs(cfg: ModelConfig, batch: int, cache_len: int) -> Any:
+    """ShapeDtypeStruct tree matching :func:`transformer.init_cache`."""
+    return jax.eval_shape(
+        lambda: init_cache(cfg, batch, cache_len))
+
+
+def make_batch(cfg: ModelConfig, shape: InputShape, key: jax.Array) -> dict:
+    """Concrete random batch (CPU smoke tests)."""
+    b, s = shape.global_batch, shape.seq_len
+    dt = param_dtype(cfg)
+    ks = jax.random.split(key, 4)
+    if not cfg.embed_inputs:
+        return {
+            "frames": jax.random.normal(ks[0], (b, s, cfg.d_model), dt),
+            "labels": jax.random.randint(ks[1], (b, s), 0, cfg.vocab_size),
+            "mask": jax.random.bernoulli(ks[2], 0.35, (b, s)),
+        }
+    out = {"tokens": jax.random.randint(ks[0], (b, s), 0, cfg.vocab_size)}
+    if cfg.mrope_sections is not None:
+        n_patches = max(1, int(s * _VISION_FRACTION))
+        out["vision_embeds"] = jax.random.normal(
+            ks[1], (b, n_patches, cfg.d_model), dt)
+        # First n_patches positions are vision tokens (simple interleave stub).
+        pos = jnp.arange(s)
+        out["vision_mask"] = jnp.broadcast_to(pos < n_patches, (b, s))
+        # Text positions continue after the (t,h,w) grid of the image.
+        grid = int(n_patches ** 0.5) + 1
+        t = jnp.where(pos < n_patches, 0, pos - n_patches + grid)
+        h = jnp.where(pos < n_patches, (pos // grid) % grid,
+                      pos - n_patches + grid)
+        w = jnp.where(pos < n_patches, pos % grid, pos - n_patches + grid)
+        out["positions_thw"] = jnp.broadcast_to(
+            jnp.stack([t, h, w], axis=-1), (b, s, 3)).astype(jnp.int32)
+    return out
+
+
+def state_bytes(params: Any, opt_state: Any = None) -> int:
+    """Total bytes of a (params, optimizer) state tree (checkpoint payload)."""
+    total = 0
+    for leaf in jax.tree.leaves(params) + (
+            jax.tree.leaves(opt_state) if opt_state is not None else []):
+        total += leaf.size * leaf.dtype.itemsize
+    return total

@@ -1,0 +1,172 @@
+"""Mixture-of-Experts layer: top-k router + sort-based capacity dispatch.
+
+TPU-native adaptation (DESIGN.md §3): instead of emulating a GPU grouped-GEMM,
+tokens are dispatched to a dense per-expert buffer (experts sharded over the
+"model" mesh axis => expert parallelism; GSPMD inserts the all-to-all-like
+collectives for the scatter/gather).  The dispatch is sort-based (GShard-style
+capacity, Switch-style dropping) so expert FLOPs stay ~top_k/E of the dense
+equivalent rather than computing every expert on every token:
+
+  1. router logits -> top_k (expert, weight) per token;
+  2. flatten the (token, slot) assignments, order them by expert via the
+     counts/offsets of a bincount (no full argsort needed: we scatter with
+     per-expert positions computed from a cumulative count);
+  3. gather tokens into an (E, capacity, d) buffer, run the expert SwiGLU as
+     a single batched einsum, and scatter-add weighted results back.
+
+Tokens beyond an expert's capacity are dropped (their residual passes
+through), matching the classic capacity-factor trade-off.  Shared experts
+(Qwen2-MoE) run as a plain dense SwiGLU on every token.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import constrain
+from .layers import Axes, Params, dense_init, merge, swiglu, swiglu_init
+
+__all__ = ["moe_init", "moe_apply", "router_aux_loss"]
+
+
+def moe_init(key: jax.Array, d: int, n_experts: int, expert_ff: int,
+             n_shared: int, dtype: Any, pad_to: int = 0) -> tuple[Params, Axes]:
+    """``pad_to`` > n_experts appends dead experts so the expert dim is
+    mesh-divisible (e.g. 60 -> 64 on a 16-wide model axis); the router stays
+    n_experts wide and the dispatch masks the padding out."""
+    n_phys = max(n_experts, pad_to)
+    k_r, k_e, k_s = jax.random.split(key, 3)
+    ke = jax.random.split(k_e, 3)
+    scale = 1.0 / math.sqrt(d)
+    experts_p = {
+        "w_gate": jax.random.normal(ke[0], (n_phys, d, expert_ff),
+                                    jnp.float32).astype(dtype) * scale,
+        "w_up": jax.random.normal(ke[1], (n_phys, d, expert_ff),
+                                  jnp.float32).astype(dtype) * scale,
+        "w_down": jax.random.normal(ke[2], (n_phys, expert_ff, d),
+                                    jnp.float32).astype(dtype)
+        * (1.0 / math.sqrt(expert_ff)),
+    }
+    experts_a = {
+        "w_gate": ("experts", "embed", "mlp"),
+        "w_up": ("experts", "embed", "mlp"),
+        "w_down": ("experts", "mlp", "embed"),
+    }
+    pairs = {
+        "router": dense_init(k_r, d, n_experts, ("embed", "experts"),
+                             jnp.float32),
+        "experts": (experts_p, experts_a),
+    }
+    if n_shared:
+        pairs["shared"] = swiglu_init(k_s, d, n_shared * expert_ff, dtype)
+    return merge(pairs)
+
+
+def router_aux_loss(gates: jax.Array, top_idx: jax.Array,
+                    n_experts: int) -> jax.Array:
+    """Switch-style load-balance loss: E * sum_e f_e * P_e.
+
+    gates: (T, E) softmax probabilities; top_idx: (T, k) selected experts.
+    """
+    pe = gates.mean(axis=0)                                   # (E,)
+    fe = jnp.zeros((n_experts,), jnp.float32).at[top_idx.reshape(-1)].add(1.0)
+    fe = fe / jnp.maximum(1.0, top_idx.size)
+    return n_experts * jnp.sum(fe * pe)
+
+
+def moe_apply(params: Params, x: jax.Array, *, top_k: int,
+              capacity_factor: float | None = 1.25,
+              n_groups: int = 32) -> tuple[jax.Array, jax.Array]:
+    """Apply the MoE layer. x (..., d) -> (same shape, aux_loss scalar).
+
+    GShard-style *grouped* dispatch: tokens are split into ``n_groups``
+    groups aligned with the data-parallel sharding.  Routing, position
+    computation (log-depth prefix scan) and the scatter into the per-group
+    expert buffer are all group-local (zero communication); the single
+    resharding of the (G, E, C, d) buffer from group-sharded to
+    (group, expert)-sharded IS the MoE all-to-all, after which the expert
+    einsums run expert- and group-parallel.  The combine path is the exact
+    mirror (a gather per group + a k-way weighted sum — no scatter).
+
+    ``capacity_factor=None`` selects the *dropless* per-group capacity
+    (every assignment fits) — used for decode, where the token count is
+    small and dropping would be visible in generations.
+    """
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    xt = x.reshape(-1, d)                                     # (T, d)
+    t = xt.shape[0]
+    n_experts = params["router"].shape[-1]      # routable experts
+    n_phys = params["experts"]["w_gate"].shape[0]  # incl. dead padding
+
+    g = math.gcd(t, max(1, n_groups))
+    tl = t // g                                               # tokens/group
+    xg = constrain(xt.reshape(g, tl, d), ("batch", None, None))
+
+    logits = (xg.astype(jnp.float32) @ params["router"])      # (G, Tl, E)
+    gates = jax.nn.softmax(logits, axis=-1)
+    top_w, top_idx = jax.lax.top_k(gates, top_k)              # (G, Tl, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    aux = router_aux_loss(gates.reshape(t, n_experts),
+                          top_idx.reshape(t, top_k), n_experts)
+
+    # ---- group-local capacity dispatch -----------------------------------
+    ts_l = tl * top_k
+    flat_e = top_idx.reshape(g, ts_l)                         # (G, TSl)
+    flat_w = top_w.reshape(g, ts_l).astype(x.dtype)
+    if capacity_factor is None:
+        capacity = ts_l  # dropless
+    else:
+        capacity = max(
+            1, int(math.ceil(ts_l / n_experts * capacity_factor)))
+
+    # Position of each assignment inside its (group, expert) bucket: a
+    # log-depth prefix sum over the group-local one-hot.  (jnp.cumsum
+    # lowers to a quadratic reduce-window on some backends; the
+    # associative_scan form is O(TSl * E * log TSl) and scan-free on TPU.)
+    onehot = jax.nn.one_hot(flat_e, n_phys, dtype=jnp.int32)  # (G, TSl, E)
+    pos_in_e = jax.lax.associative_scan(jnp.add, onehot, axis=1) - 1
+    pos = jnp.take_along_axis(pos_in_e, flat_e[..., None], axis=2)[..., 0]
+    keep = pos < capacity
+    safe_pos = jnp.where(keep, pos, capacity)                 # overflow slot
+
+    # Replicate each token for its k assignments (pure reshape, no gather).
+    upd = jnp.broadcast_to(xg[:, :, None, :], (g, tl, top_k, d)) \
+        .reshape(g, ts_l, d)
+    upd = jnp.where(keep[..., None], upd, 0)
+
+    # Group-local scatter into (G, E, C+1, d); slot `capacity` = drops.
+    def scatter_group(buf_g, e_g, p_g, u_g):
+        return buf_g.at[e_g, p_g].add(u_g)
+
+    buf = jnp.zeros((g, n_phys, capacity + 1, d), x.dtype)
+    buf = jax.vmap(scatter_group)(buf, flat_e, safe_pos, upd)
+
+    # The one resharding = the MoE all-to-all: group axis stays on "data",
+    # expert axis picks up "model" (requires E % model == 0 — see
+    # ``pad_experts_to`` for non-divisible expert counts like 60).
+    buf = constrain(buf, ("batch", "experts", None, None))
+
+    # Expert SwiGLU, expert- and group-parallel: (G,E,C,d) x (E,d,f).
+    e = params["experts"]
+    gate = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, e["w_gate"]))
+    up = jnp.einsum("gecd,edf->gecf", buf, e["w_up"])
+    out_buf = jnp.einsum("gecf,efd->gecd", gate * up, e["w_down"])
+    out_buf = constrain(out_buf, ("batch", "experts", None, None))
+
+    # Combine: gather each assignment's row, weight, and sum over k.
+    def gather_group(ob_g, e_g, p_g):
+        return ob_g[e_g, p_g]
+
+    contrib = jax.vmap(gather_group)(out_buf, flat_e, safe_pos)
+    contrib = jnp.where(keep[..., None], contrib, 0) * flat_w[..., None]
+    yt = contrib.reshape(g, tl, top_k, d).sum(axis=2)         # (G, Tl, d)
+    yt = constrain(yt, ("batch", None, None)).reshape(t, d)
+
+    if "shared" in params:
+        yt = yt + swiglu(params["shared"], xt)
+    return yt.reshape(orig_shape), aux

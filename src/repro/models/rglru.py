@@ -1,0 +1,153 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+The block is: RMSNorm -> two parallel branches
+  * gate branch:      linear d -> w, GeLU
+  * recurrent branch: linear d -> w, short temporal conv1d (width 4), RG-LRU
+then elementwise product and a linear w -> d back.
+
+RG-LRU recurrence (per channel):
+    r_t = sigmoid(W_a y_t + b_a)          (recurrence gate)
+    i_t = sigmoid(W_x y_t + b_x)          (input gate)
+    a_t = exp(c * r_t * log sigmoid(Lambda))   (c = -8 in the paper)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * y_t)
+
+Training uses a parallel associative scan over time (the recurrence is a
+first-order linear one, so ``jax.lax.associative_scan`` applies); decode
+carries ``h`` plus the last (conv_width - 1) conv inputs as state — O(1)
+per token, which is what makes long_500k viable for this family.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Axes, Params, dense_init, merge
+
+__all__ = ["rglru_block_init", "rglru_block_apply", "rglru_decode_step",
+           "rglru_init_state"]
+
+_C = -8.0  # paper's fixed exponent scale
+
+
+def rglru_block_init(key: jax.Array, d: int, w: int, conv_width: int,
+                     dtype: Any) -> tuple[Params, Axes]:
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    # Lambda init so that a = sigmoid(Lambda)^(c*r) covers slow/fast decays:
+    # uniform a^2 in [0.9, 0.999] as in the Griffin paper.
+    u = jax.random.uniform(k6, (w,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.sqrt(u) / (1.0 - jnp.sqrt(u)))  # sigmoid^-1(sqrt(u))
+    conv = jax.random.normal(k3, (conv_width, w), jnp.float32) \
+        * (1.0 / math.sqrt(conv_width))
+    params, axes = merge({
+        "w_gate": dense_init(k1, d, w, ("embed", "lru"), dtype),
+        "w_in": dense_init(k2, d, w, ("embed", "lru"), dtype),
+        "w_out": dense_init(k4, w, d, ("lru", "embed"), dtype),
+        "w_rg": dense_init(k5, w, 2 * w, ("lru", "lru"), dtype,
+                           scale=1.0 / math.sqrt(w)),
+    })
+    params["conv"] = conv.astype(dtype)
+    axes["conv"] = ("conv", "lru")
+    params["lambda"] = lam  # keep fp32: gate parameter
+    axes["lambda"] = ("lru",)
+    params["b_rg"] = jnp.zeros((2 * w,), jnp.float32)
+    axes["b_rg"] = ("lru",)
+    return params, axes
+
+
+def _causal_conv(y: jax.Array, conv: jax.Array,
+                 prefix: jax.Array | None = None) -> jax.Array:
+    """Depthwise causal conv over time. y (B,S,w); conv (cw, w).
+
+    ``prefix`` (B, cw-1, w) supplies the state left of t=0 (zeros if None).
+    """
+    cw = conv.shape[0]
+    if prefix is None:
+        prefix = jnp.zeros(y.shape[:1] + (cw - 1,) + y.shape[2:], y.dtype)
+    ypad = jnp.concatenate([prefix, y], axis=1)  # (B, S+cw-1, w)
+    out = jnp.zeros_like(y)
+    for i in range(cw):  # cw is 4: unrolled taps
+        out = out + ypad[:, i:i + y.shape[1], :] * conv[cw - 1 - i]
+    return out
+
+
+def _rg_gates(params: Params, y: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Returns (log_a, gated_input) for the RG-LRU recurrence, fp32."""
+    w = params["lambda"].shape[0]
+    rg = y.astype(jnp.float32) @ params["w_rg"].astype(jnp.float32) \
+        + params["b_rg"]
+    r, i = rg[..., :w], rg[..., w:]
+    r = jax.nn.sigmoid(r)
+    i = jax.nn.sigmoid(i)
+    log_a = _C * r * jax.nn.log_sigmoid(params["lambda"])  # (..., w) <= 0
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12))
+    return log_a, beta * i * y.astype(jnp.float32)
+
+
+def _linear_scan(log_a: jax.Array, b: jax.Array,
+                 h0: jax.Array | None = None) -> jax.Array:
+    """h_t = exp(log_a_t) h_{t-1} + b_t over axis 1 via associative scan."""
+    if h0 is not None:
+        # Fold the carry into the first step.
+        b = b.at[:, 0].add(jnp.exp(log_a[:, 0]) * h0)
+
+    def combine(x, y):
+        la_x, bx = x
+        la_y, by = y
+        return la_x + la_y, jnp.exp(la_y) * bx + by
+
+    _, h = jax.lax.associative_scan(combine, (log_a, b), axis=1)
+    return h
+
+
+def rglru_block_apply(params: Params, x: jax.Array,
+                      state: Params | None = None,
+                      ) -> tuple[jax.Array, Params]:
+    """Full-sequence apply. x (B,S,d) -> (B,S,d), final recurrent state.
+
+    ``state`` = {"h": (B,w), "conv": (B,cw-1,w)} carries across segments.
+    """
+    dtype = x.dtype
+    gate = jax.nn.gelu(x @ params["w_gate"])
+    y = x @ params["w_in"]                       # (B,S,w)
+    prefix = state["conv"].astype(y.dtype) if state else None
+    yc = _causal_conv(y, params["conv"], prefix)
+    log_a, b = _rg_gates(params, yc)
+    h0 = state["h"] if state else None
+    h = _linear_scan(log_a, b, h0)               # (B,S,w) fp32
+    out = (gate.astype(jnp.float32) * h).astype(dtype) @ params["w_out"]
+    cw = params["conv"].shape[0]
+    if prefix is None:
+        prefix = jnp.zeros((y.shape[0], cw - 1, y.shape[2]), y.dtype)
+    ytail = jnp.concatenate([prefix, y], axis=1)[:, -(cw - 1):, :]
+    new_state = {"h": h[:, -1], "conv": ytail}
+    return out, new_state
+
+
+def rglru_init_state(batch: int, w: int, conv_width: int,
+                     dtype: Any) -> Params:
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, conv_width - 1, w), dtype),
+    }
+
+
+def rglru_decode_step(params: Params, x: jax.Array,
+                      state: Params) -> tuple[jax.Array, Params]:
+    """One-token step. x (B,1,d); state from :func:`rglru_init_state`."""
+    dtype = x.dtype
+    gate = jax.nn.gelu(x @ params["w_gate"])[:, 0]   # (B,w)
+    y = (x @ params["w_in"])[:, 0]                   # (B,w)
+    cw = params["conv"].shape[0]
+    hist = jnp.concatenate([state["conv"], y[:, None, :]], axis=1)  # (B,cw,w)
+    yc = jnp.einsum("bcw,cw->bw", hist.astype(jnp.float32),
+                    params["conv"].astype(jnp.float32))
+    log_a, b = _rg_gates(params, yc)
+    h = jnp.exp(log_a) * state["h"] + b              # (B,w)
+    out = (gate.astype(jnp.float32) * h).astype(dtype)[:, None, :] \
+        @ params["w_out"]
+    return out, {"h": h, "conv": hist[:, 1:, :].astype(state["conv"].dtype)}

@@ -1,0 +1,650 @@
+"""Block assembly: heterogeneous layer stacks with scan-over-repeats.
+
+A :class:`repro.configs.ModelConfig` describes the per-layer block pattern
+(``cfg.blocks``): global attention ("attn"), sliding-window attention
+("local"), RG-LRU ("rec"), and xLSTM ("mlstm"/"slstm") blocks, each an
+optional FFN (SwiGLU or MoE).  Layers are grouped into ``n_repeats`` copies
+of the unit pattern and executed with ``jax.lax.scan`` over the repeats
+(stacked parameters, leading "layers" axis) so the lowered HLO stays compact
+for 100+-layer configs; remainder layers run unrolled.
+
+Three execution modes share the same parameters:
+  * ``forward_train``: full-sequence teacher-forced pass -> logits (+ MoE aux);
+  * ``prefill``: full-sequence pass that also materializes the decode cache;
+  * ``decode_step``: one token against the cache (attention KV / ring buffers,
+    recurrent states), O(1) or O(window) per token.
+
+Caches per kind:
+  attn   {"k","v"}: (B, S_max, KV, hd) append buffer (valid prefix = length)
+  local  {"k","v"}: (B, window, KV, hd) ring buffer (write slot = length mod w)
+  rec    {"h": (B,w), "conv": (B,cw-1,w)}
+  mlstm  (C~, n~, m) per head
+  slstm  (c, n, m, h)
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..parallel.sharding import constrain
+from .layers import (Axes, Params, apply_rope, chunked_attention,
+                     decode_attention, dense_init, merge, mrope_angles,
+                     norm_init, rms_norm, rope_angles, swiglu, swiglu_init)
+from .moe import moe_apply, moe_init
+from .rglru import (rglru_block_apply, rglru_block_init, rglru_decode_step,
+                    rglru_init_state)
+from .xlstm import (mlstm_block_apply, mlstm_block_init, mlstm_decode_step,
+                    mlstm_init_state, slstm_block_apply, slstm_block_init,
+                    slstm_decode_step, slstm_init_state)
+
+__all__ = ["init_params", "forward_train", "prefill", "decode_step",
+           "init_cache", "param_dtype"]
+
+
+def param_dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Per-block init
+# ---------------------------------------------------------------------------
+
+def _attn_init(cfg: ModelConfig, key: jax.Array) -> tuple[Params, Axes]:
+    d, hd = cfg.d_model, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    dt = param_dtype(cfg)
+    return merge({
+        "w_q": dense_init(ks[0], d, cfg.n_heads * hd, ("embed", "heads"), dt),
+        "w_k": dense_init(ks[1], d, cfg.n_kv_heads * hd, ("embed", "kv_heads"), dt),
+        "w_v": dense_init(ks[2], d, cfg.n_kv_heads * hd, ("embed", "kv_heads"), dt),
+        "w_o": dense_init(ks[3], cfg.n_heads * hd, d, ("heads", "embed"), dt),
+    })
+
+
+def _ffn_init(cfg: ModelConfig, key: jax.Array) -> tuple[Params, Axes] | None:
+    dt = param_dtype(cfg)
+    if cfg.n_experts:
+        return moe_init(key, cfg.d_model, cfg.n_experts,
+                        cfg.expert_d_ff or cfg.d_ff, cfg.n_shared_experts,
+                        dt, pad_to=cfg.pad_experts_to)
+    if cfg.d_ff:
+        return swiglu_init(key, cfg.d_model, cfg.d_ff, dt)
+    return None
+
+
+def _block_init(cfg: ModelConfig, kind: str, key: jax.Array
+                ) -> tuple[Params, Axes]:
+    dt = param_dtype(cfg)
+    k_t, k_f = jax.random.split(key)
+    pairs: dict[str, tuple[Any, Any]] = {
+        "norm_t": norm_init(cfg.d_model, dt),
+    }
+    if kind in ("attn", "local"):
+        pairs["attn"] = _attn_init(cfg, k_t)
+    elif kind == "rec":
+        pairs["rec"] = rglru_block_init(k_t, cfg.d_model, cfg.lru_width,
+                                        cfg.conv1d_width, dt)
+    elif kind == "mlstm":
+        pairs["mlstm"] = mlstm_block_init(k_t, cfg.d_model, cfg.n_heads, dt)
+    elif kind == "slstm":
+        pairs["slstm"] = slstm_block_init(k_t, cfg.d_model, cfg.n_heads, dt)
+    else:
+        raise ValueError(f"unknown block kind {kind!r}")
+    ffn = _ffn_init(cfg, k_f)
+    if ffn is not None and kind not in ("mlstm", "slstm"):
+        pairs["norm_f"] = norm_init(cfg.d_model, dt)
+        pairs["ffn"] = ffn
+    return merge(pairs)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> tuple[Params, Axes]:
+    """Initialize the full parameter tree (+ aligned logical-axes tree)."""
+    dt = param_dtype(cfg)
+    unit = cfg.block_unit
+    n_rep = cfg.n_layers // len(unit)
+    n_tail = cfg.n_layers - n_rep * len(unit)
+    k_emb, k_head, k_layers, k_tail = jax.random.split(key, 4)
+
+    pairs: dict[str, tuple[Any, Any]] = {}
+    if cfg.embed_inputs:
+        emb = jax.random.normal(k_emb, (cfg.vocab_size, cfg.d_model),
+                                jnp.float32) * (1.0 / math.sqrt(cfg.d_model))
+        pairs["embed"] = (emb.astype(dt), ("vocab", "embed"))
+    pairs["norm_out"] = norm_init(cfg.d_model, dt)
+    if not cfg.tie_embeddings:
+        pairs["head"] = dense_init(k_head, cfg.d_model, cfg.vocab_size,
+                                   ("embed", "vocab"), dt)
+
+    # Stacked repeats: vmap the per-unit init over n_rep keys.
+    def unit_init(k):
+        ks = jax.random.split(k, len(unit))
+        ps, axs = [], []
+        for kind, kk in zip(unit, ks):
+            p, a = _block_init(cfg, kind, kk)
+            ps.append(p)
+            axs.append(a)
+        return tuple(ps), tuple(axs)
+
+    rep_keys = jax.random.split(k_layers, max(n_rep, 1))
+    stacked = jax.vmap(lambda k: unit_init(k)[0])(rep_keys)
+    _, unit_axes = unit_init(rep_keys[0])
+    stacked_axes = jax.tree.map(
+        lambda a: ("layers",) + tuple(a), unit_axes,
+        is_leaf=lambda x: isinstance(x, tuple) and len(x) > 0 and all(
+            isinstance(e, (str, type(None))) for e in x))
+    pairs["layers"] = (stacked, stacked_axes)
+
+    if n_tail:
+        tail_kinds = cfg.blocks[n_rep * len(unit):]
+        tks = jax.random.split(k_tail, n_tail)
+        tail = [_block_init(cfg, kind, k) for kind, k in zip(tail_kinds, tks)]
+        pairs["tail"] = (tuple(t[0] for t in tail), tuple(t[1] for t in tail))
+    return merge(pairs)
+
+
+# ---------------------------------------------------------------------------
+# Position tables
+# ---------------------------------------------------------------------------
+
+def _rope_tables(cfg: ModelConfig, batch: dict, positions: jax.Array):
+    """cos/sin for the attention layers ((S,half) or (B,S,half) for M-RoPE)."""
+    if cfg.mrope_sections is not None:
+        thw = batch.get("positions_thw")
+        if thw is None:  # text-only: (t,h,w) all equal the text position
+            thw = jnp.broadcast_to(
+                positions[..., None],
+                positions.shape + (3,)).astype(jnp.int32)
+            if thw.ndim == 2:
+                thw = thw[None]
+        return mrope_angles(thw, cfg.mrope_sections, cfg.head_dim,
+                            cfg.rope_theta)
+    return rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+
+
+# ---------------------------------------------------------------------------
+# Per-block apply (three modes)
+# ---------------------------------------------------------------------------
+
+def _attn_apply(cfg: ModelConfig, kind: str, p: Params, x: jax.Array,
+                cos, sin, *, q_offset: int = 0) -> jax.Array:
+    b, s, d = x.shape
+    hd = cfg.head_dim
+    q = (x @ p["w_q"]).reshape(b, s, cfg.n_heads, hd)
+    k = (x @ p["w_k"]).reshape(b, s, cfg.n_kv_heads, hd)
+    v = (x @ p["w_v"]).reshape(b, s, cfg.n_kv_heads, hd)
+    # Interior constraint: heads own the model axis (never seq here — a
+    # seq-sharded interior forces full-size attention-weight grad partials).
+    q = constrain(q, ("batch", None, "heads", None))
+    k = apply_rope(k, cos, sin)
+    q = apply_rope(q, cos, sin)
+    if cfg.attn_layout == "repeat_kv":
+        # Expand k/v to H heads so attention compute shards over the full
+        # head dim even when KV heads < the model-axis extent.
+        g = cfg.n_heads // cfg.n_kv_heads
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+        k = constrain(k, ("batch", "seq", "heads", None))
+        v = constrain(v, ("batch", "seq", "heads", None))
+    window = cfg.attn_window if kind == "local" else 0
+    if cfg.attn_impl != "ref":
+        from ..kernels import ops as _kops
+        out = _kops.flash_attention(q, k, v, causal=cfg.causal,
+                                    window=window, q_offset=q_offset,
+                                    impl=cfg.attn_impl)
+    else:
+        out = chunked_attention(q, k, v, causal=cfg.causal, window=window,
+                                q_offset=q_offset, q_chunk=cfg.attn_q_chunk,
+                                kv_chunk=cfg.attn_kv_chunk,
+                                unroll=cfg.unroll_inner)
+    out = out.reshape(b, s, cfg.n_heads * hd)
+    out = constrain(out, ("batch", None, "heads"))
+    return out @ p["w_o"]
+
+
+def _block_apply_full(cfg: ModelConfig, kind: str, p: Params, x: jax.Array,
+                      cos, sin) -> tuple[jax.Array, jax.Array]:
+    """Training-mode apply: returns (x_out, moe_aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(x, p["norm_t"], cfg.norm_eps)
+    if kind in ("attn", "local"):
+        x = x + _attn_apply(cfg, kind, p["attn"], h, cos, sin)
+    elif kind == "rec":
+        out, _ = rglru_block_apply(p["rec"], h)
+        x = x + out
+    elif kind == "mlstm":
+        out, _ = mlstm_block_apply(p["mlstm"], h, n_heads=cfg.n_heads,
+                                   chunk=cfg.mlstm_chunk,
+                                   unroll=cfg.unroll_inner)
+        return x + out, aux
+    elif kind == "slstm":
+        out, _ = slstm_block_apply(p["slstm"], h, n_heads=cfg.n_heads)
+        return x + out, aux
+    if "ffn" in p:
+        h = rms_norm(x, p["norm_f"], cfg.norm_eps)
+        if cfg.n_experts:
+            out, aux = moe_apply(p["ffn"], h, top_k=cfg.top_k,
+                                 capacity_factor=cfg.capacity_factor)
+        else:
+            out = swiglu(p["ffn"], h)
+        x = x + out
+    x = constrain(x, ("batch", "seq", "embed"))
+    return x, aux
+
+
+def _block_prefill(cfg: ModelConfig, kind: str, p: Params, x: jax.Array,
+                   cos, sin, cache_len: int) -> tuple[jax.Array, Any]:
+    """Prefill-mode apply: returns (x_out, cache_entry)."""
+    b, s, d = x.shape
+    hd = cfg.head_dim
+    h = rms_norm(x, p["norm_t"], cfg.norm_eps)
+    if kind in ("attn", "local"):
+        a = p["attn"]
+        q = (h @ a["w_q"]).reshape(b, s, cfg.n_heads, hd)
+        k = (h @ a["w_k"]).reshape(b, s, cfg.n_kv_heads, hd)
+        v = (h @ a["w_v"]).reshape(b, s, cfg.n_kv_heads, hd)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        window = cfg.attn_window if kind == "local" else 0
+        if cfg.attn_layout == "repeat_kv":
+            g = cfg.n_heads // cfg.n_kv_heads
+            kx = constrain(jnp.repeat(k, g, axis=2),
+                           ("batch", "seq", "heads", None))
+            vx = constrain(jnp.repeat(v, g, axis=2),
+                           ("batch", "seq", "heads", None))
+        else:
+            kx, vx = k, v
+        out = chunked_attention(q, kx, vx, causal=cfg.causal, window=window,
+                                q_chunk=cfg.attn_q_chunk,
+                                kv_chunk=cfg.attn_kv_chunk,
+                                unroll=cfg.unroll_inner)
+        out = out.reshape(b, s, cfg.n_heads * hd) @ a["w_o"]
+        x = x + out
+        if kind == "local":
+            w = cfg.attn_window
+            # Ring buffer holding the last `w` keys; slot for pos t = t mod w.
+            kw, vw = k[:, -w:], v[:, -w:]
+            pad = w - kw.shape[1]
+            if pad > 0:
+                kw = jnp.pad(kw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                vw = jnp.pad(vw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            else:
+                # Roll so that cache[t mod w] holds key at absolute pos t.
+                shift = s % w
+                kw = jnp.roll(kw, shift, axis=1)
+                vw = jnp.roll(vw, shift, axis=1)
+            entry = {"k": kw, "v": vw}
+        else:
+            pad = cache_len - s
+            entry = {
+                "k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+                "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            }
+    elif kind == "rec":
+        out, st = rglru_block_apply(p["rec"], h)
+        x = x + out
+        entry = st
+    elif kind == "mlstm":
+        out, st = mlstm_block_apply(p["mlstm"], h, n_heads=cfg.n_heads,
+                                    chunk=cfg.mlstm_chunk,
+                                    unroll=cfg.unroll_inner)
+        return x + out, st
+    elif kind == "slstm":
+        out, st = slstm_block_apply(p["slstm"], h, n_heads=cfg.n_heads)
+        return x + out, st
+    if "ffn" in p:
+        hf = rms_norm(x, p["norm_f"], cfg.norm_eps)
+        if cfg.n_experts:
+            out, _ = moe_apply(p["ffn"], hf, top_k=cfg.top_k,
+                               capacity_factor=cfg.capacity_factor)
+        else:
+            out = swiglu(p["ffn"], hf)
+        x = x + out
+    return x, entry
+
+
+def _block_decode(cfg: ModelConfig, kind: str, p: Params, x: jax.Array,
+                  cache: Any, length: jax.Array, cos, sin
+                  ) -> tuple[jax.Array, Any]:
+    """Decode-mode apply: x (B,1,d); returns (x_out, new_cache_entry)."""
+    b = x.shape[0]
+    hd = cfg.head_dim
+    h = rms_norm(x, p["norm_t"], cfg.norm_eps)
+    if kind in ("attn", "local"):
+        a = p["attn"]
+        q = (h @ a["w_q"]).reshape(b, 1, cfg.n_heads, hd)
+        k = (h @ a["w_k"]).reshape(b, 1, cfg.n_kv_heads, hd)
+        v = (h @ a["w_v"]).reshape(b, 1, cfg.n_kv_heads, hd)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        if kind == "local":
+            w = cfg.attn_window
+            slot = (length % w)[:, None]  # (B,1)
+            kc = _scatter_time(cache["k"], k, slot)
+            vc = _scatter_time(cache["v"], v, slot)
+            win = w
+        else:
+            slot = length[:, None]
+            kc = _scatter_time(cache["k"], k, slot)
+            vc = _scatter_time(cache["v"], v, slot)
+            win = 0
+        if cfg.attn_impl != "ref":
+            from ..kernels import ops as _kops
+            out = _kops.decode_attention(q, kc, vc, length + 1, window=win,
+                                         impl=cfg.attn_impl)
+        else:
+            out = decode_attention(q, kc, vc, length + 1, window=win)
+        out = out.reshape(b, 1, cfg.n_heads * hd) @ a["w_o"]
+        x = x + out
+        entry = {"k": kc, "v": vc}
+    elif kind == "rec":
+        out, entry = rglru_decode_step(p["rec"], h, cache)
+        x = x + out
+    elif kind == "mlstm":
+        out, entry = mlstm_decode_step(p["mlstm"], h, cache,
+                                       n_heads=cfg.n_heads)
+        return x + out, entry
+    elif kind == "slstm":
+        out, entry = slstm_decode_step(p["slstm"], h, cache)
+        return x + out, entry
+    if "ffn" in p:
+        hf = rms_norm(x, p["norm_f"], cfg.norm_eps)
+        if cfg.n_experts:
+            out, _ = moe_apply(p["ffn"], hf, top_k=cfg.top_k,
+                               capacity_factor=None)  # dropless for decode
+        else:
+            out = swiglu(p["ffn"], hf)
+        x = x + out
+    return x, entry
+
+
+def _scatter_time(cache: jax.Array, new: jax.Array,
+                  slot: jax.Array) -> jax.Array:
+    """Write new (B,1,KV,hd) into cache (B,S,KV,hd) at per-batch slot (B,1)."""
+    b, s = cache.shape[:2]
+    oh = jax.nn.one_hot(slot[:, 0], s, dtype=cache.dtype)  # (B,S)
+    return cache * (1.0 - oh[:, :, None, None]) + oh[:, :, None, None] * new
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _embed_lookup(shape, dtype_name, table: jax.Array,
+                  tokens: jax.Array) -> jax.Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def _embed_lookup_fwd(shape, dtype_name, table, tokens):
+    return _embed_lookup(shape, dtype_name, table, tokens), tokens
+
+
+def _embed_lookup_bwd(shape, dtype_name, tokens, g):
+    # Sharded embedding gradient: the default scatter-add gradient
+    # materializes a replicated full-size fp32 (V, d) buffer per
+    # microbatch; pinning the scatter operand to the embedding-table
+    # sharding keeps it (vocab -> model, embed -> data) partitioned.
+    # Accumulate in the incoming gradient dtype (bf16 under mixed
+    # precision): an fp32 upcast here costs a 4.3 GB/device transient at
+    # 405B scale for <1 useful bit (each vocab row sums only a handful of
+    # token gradients per microbatch).
+    zeros = constrain(jnp.zeros(shape, g.dtype), ("vocab", "embed"))
+    flat_tok = tokens.reshape(-1)
+    flat_g = g.reshape(-1, shape[1])
+    dtable = zeros.at[flat_tok].add(flat_g)
+    dtable = constrain(dtable, ("vocab", "embed"))
+    return dtable.astype(dtype_name), None
+
+
+_embed_lookup.defvjp(_embed_lookup_fwd, _embed_lookup_bwd)
+
+
+def _embed(cfg: ModelConfig, params: Params, batch: dict) -> jax.Array:
+    if not cfg.embed_inputs:
+        return batch["frames"]
+    table = params["embed"]
+    x = _embed_lookup(table.shape, str(table.dtype), table,
+                      batch["tokens"])
+    if "vision_embeds" in batch:
+        # Replace token embeddings at vision positions by patch embeddings
+        # (frontend stub output), in order.
+        mask = batch["vision_mask"]                    # (B,S) bool
+        idx = jnp.clip(jnp.cumsum(mask, axis=1) - 1, 0,
+                       batch["vision_embeds"].shape[1] - 1)
+        gathered = jnp.take_along_axis(
+            batch["vision_embeds"], idx[..., None], axis=1)
+        x = jnp.where(mask[..., None], gathered.astype(x.dtype), x)
+    return x
+
+
+def _head(cfg: ModelConfig, params: Params, x: jax.Array) -> jax.Array:
+    x = rms_norm(x, params["norm_out"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].T
+    else:
+        logits = x @ params["head"]
+    # Vocab MUST own the model axis here even under seq-parallel rules
+    # (seq is listed first and would steal it): an unsharded-vocab dlogits
+    # makes the head-weight gradient materialize as a full-size fp32
+    # partial product on every device (8.4 GB for llama3-405b).
+    return constrain(logits, ("batch", None, "vocab"))
+
+
+# ---------------------------------------------------------------------------
+# Full passes
+# ---------------------------------------------------------------------------
+
+def _scan_over_repeats(cfg: ModelConfig, params: Params, x: jax.Array,
+                       body_one):
+    """Run the stacked repeats with lax.scan, then the unrolled tail.
+
+    ``body_one(kind, layer_params, x, extra) -> (x, per_layer_out)``;
+    returns (x, list of per-layer outs for the tail, stacked outs for scan).
+    """
+    unit = cfg.block_unit
+
+    def step(x, unit_params):
+        outs = []
+        for kind, p in zip(unit, unit_params):
+            x, o = body_one(kind, p, x)
+            outs.append(o)
+        return x, tuple(outs)
+
+    if cfg.remat:
+        policy = (jax.checkpoint_policies.nothing_saveable
+                  if cfg.remat_policy == "nothing" else None)
+        step_fn = jax.checkpoint(step, policy=policy)
+    else:
+        step_fn = step
+    if cfg.scan_layers:
+        x, stacked_outs = jax.lax.scan(step_fn, x, params["layers"])
+    else:  # unrolled (roofline analysis variants)
+        n_rep = cfg.n_layers // len(unit)
+        outs = []
+        for i in range(n_rep):
+            sl = jax.tree.map(lambda p: p[i], params["layers"])
+            x, o = step_fn(x, sl)
+            outs.append(o)
+        stacked_outs = jax.tree.map(lambda *xs: jnp.stack(xs), *outs) \
+            if outs else ()
+    tail_outs = []
+    for kind, p in zip(cfg.blocks[len(cfg.blocks) - len(params.get("tail", ())):],
+                       params.get("tail", ())):
+        x, o = body_one(kind, p, x)
+        tail_outs.append(o)
+    return x, stacked_outs, tuple(tail_outs)
+
+
+def forward_train(cfg: ModelConfig, params: Params, batch: dict
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Teacher-forced pass. Returns (logits (B,S,V), moe_aux_loss scalar)."""
+    x = _embed(cfg, params, batch)
+    x = constrain(x, ("batch", "seq", "embed"))
+    s = x.shape[1]
+    positions = jnp.arange(s)
+    cos, sin = _rope_tables(cfg, batch, positions)
+
+    def body_one(kind, p, x):
+        x, aux = _block_apply_full(cfg, kind, p, x, cos, sin)
+        return x, aux
+
+    x, aux_s, aux_t = _scan_over_repeats(cfg, params, x, body_one)
+    aux = sum(a.sum() for a in aux_s) + sum(aux_t, jnp.zeros((), jnp.float32))
+    return _head(cfg, params, x), aux
+
+
+def prefill(cfg: ModelConfig, params: Params, batch: dict, *,
+            cache_len: int) -> tuple[jax.Array, dict]:
+    """Full-sequence pass materializing the decode cache.
+
+    Returns (logits for the last position (B,V), cache).
+    """
+    x = _embed(cfg, params, batch)
+    b, s = x.shape[:2]
+    positions = jnp.arange(s)
+    cos, sin = _rope_tables(cfg, batch, positions)
+
+    def body_one(kind, p, x):
+        return _block_prefill(cfg, kind, p, x, cos, sin, cache_len)
+
+    x, stacked, tail = _scan_over_repeats(cfg, params, x, body_one)
+    logits = _head(cfg, params, x[:, -1:])[:, 0]
+    cache = {
+        "layers": stacked,
+        "tail": tail,
+        "length": jnp.full((b,), s, jnp.int32),
+    }
+    return logits, cache
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, cache_len: int) -> dict:
+    """Zero-initialized decode cache (for serve_step dry-runs and tests)."""
+    dt = param_dtype(cfg)
+    unit = cfg.block_unit
+    n_rep = cfg.n_layers // len(unit)
+
+    def entry(kind):
+        if kind == "attn":
+            shape = (batch_size, cache_len, cfg.n_kv_heads, cfg.head_dim)
+            return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+        if kind == "local":
+            # Ring buffer is always window-sized (prefill allocates the
+            # same, so init_cache and prefill caches are interchangeable).
+            w = cfg.attn_window
+            shape = (batch_size, w, cfg.n_kv_heads, cfg.head_dim)
+            return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+        if kind == "rec":
+            return rglru_init_state(batch_size, cfg.lru_width,
+                                    cfg.conv1d_width, dt)
+        if kind == "mlstm":
+            return mlstm_init_state(batch_size, cfg.n_heads,
+                                    2 * cfg.d_model // cfg.n_heads)
+        if kind == "slstm":
+            return slstm_init_state(batch_size, cfg.d_model)
+        raise ValueError(kind)
+
+    stacked = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[tuple(entry(k) for k in unit) for _ in range(n_rep)]) \
+        if n_rep > 1 else jax.tree.map(lambda x: x[None],
+                                       tuple(entry(k) for k in unit))
+    n_tail = cfg.n_layers - n_rep * len(unit)
+    tail = tuple(entry(k) for k in cfg.blocks[cfg.n_layers - n_tail:])
+    return {"layers": stacked, "tail": tail,
+            "length": jnp.zeros((batch_size,), jnp.int32)}
+
+
+def cache_axes(cfg: ModelConfig) -> dict:
+    """Logical-axes tree aligned with :func:`init_cache`'s output.
+
+    The "seq" axis of KV caches is what decode-mode sharding rules map to the
+    "model" mesh axis (32k-deep caches do not fit per-device otherwise); all
+    recurrent states shard on batch only.
+    """
+    def entry(kind):
+        if kind in ("attn", "local"):
+            kv = ("batch", "seq", "kv_heads", None)
+            return {"k": kv, "v": kv}
+        if kind == "rec":
+            return {"h": ("batch", "lru"), "conv": ("batch", None, "lru")}
+        if kind == "mlstm":
+            return (("batch", "heads", None, None),
+                    ("batch", "heads", None), ("batch", "heads"))
+        if kind == "slstm":
+            return tuple(("batch", None) for _ in range(4))
+        raise ValueError(kind)
+
+    unit = cfg.block_unit
+    n_rep = cfg.n_layers // len(unit)
+    is_axes = lambda x: isinstance(x, tuple) and len(x) > 0 and all(
+        isinstance(e, (str, type(None))) for e in x)
+    stacked = jax.tree.map(lambda a: ("layers",) + a,
+                           tuple(entry(k) for k in unit), is_leaf=is_axes)
+    n_tail = cfg.n_layers - n_rep * len(unit)
+    tail = tuple(entry(k) for k in cfg.blocks[cfg.n_layers - n_tail:])
+    return {"layers": stacked, "tail": tail, "length": ("batch",)}
+
+
+def decode_step(cfg: ModelConfig, params: Params, token: jax.Array,
+                cache: dict, positions_thw: jax.Array | None = None
+                ) -> tuple[jax.Array, dict]:
+    """One decode step. token (B,) int32 -> (logits (B,V), new cache).
+
+    ``positions_thw`` (B, 3) overrides the M-RoPE position of the new token
+    for VLM archs (text continuation positions depend on the image grid);
+    default is (length, length, length).
+    """
+    batch = {"tokens": token[:, None]}
+    if not cfg.embed_inputs:
+        raise ValueError(f"{cfg.name}: encoder-only model has no decode step")
+    x = _embed(cfg, params, batch)
+    length = cache["length"]
+    positions = length[:, None]                      # (B,1) per-batch position
+    if cfg.mrope_sections is not None:
+        if positions_thw is None:
+            thw = jnp.broadcast_to(positions[..., None],
+                                   positions.shape + (3,)).astype(jnp.int32)
+        else:
+            thw = positions_thw[:, None, :].astype(jnp.int32)
+        cos, sin = mrope_angles(thw, cfg.mrope_sections, cfg.head_dim,
+                                cfg.rope_theta)
+    else:
+        cos, sin = rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+
+    unit = cfg.block_unit
+
+    def step(x, xs):
+        unit_params, unit_cache = xs
+        new_entries = []
+        for kind, p, c in zip(unit, unit_params, unit_cache):
+            x, e = _block_decode(cfg, kind, p, x, c, length, cos, sin)
+            new_entries.append(e)
+        return x, tuple(new_entries)
+
+    if cfg.scan_layers:
+        x, new_stacked = jax.lax.scan(
+            step, x, (params["layers"], cache["layers"]))
+    else:  # unrolled (roofline analysis variants)
+        n_rep = cfg.n_layers // len(unit)
+        outs = []
+        for i in range(n_rep):
+            sl = jax.tree.map(lambda p: p[i], params["layers"])
+            cl = jax.tree.map(lambda c: c[i], cache["layers"])
+            x, o = step(x, (sl, cl))
+            outs.append(o)
+        new_stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    new_tail = []
+    tail_params = params.get("tail", ())
+    tail_kinds = cfg.blocks[cfg.n_layers - len(tail_params):]
+    for kind, p, c in zip(tail_kinds, tail_params, cache["tail"]):
+        x, e = _block_decode(cfg, kind, p, x, c, length, cos, sin)
+        new_tail.append(e)
+    logits = _head(cfg, params, x)[:, 0]
+    return logits, {"layers": new_stacked, "tail": tuple(new_tail),
+                    "length": length + 1}

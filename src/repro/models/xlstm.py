@@ -1,0 +1,295 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory) [arXiv:2405.04517].
+
+mLSTM — per head, a matrix memory C (hd x hd) with exponential gating:
+
+    C_t = f_t C_{t-1} + i_t v_t k_t^T      n_t = f_t n_{t-1} + i_t k_t
+    h_t = (C_t q_t) / max(|n_t . q_t|, 1)
+
+Training uses the *chunkwise-parallel* stabilized form (state carried between
+chunks of length L; within a chunk a decay matrix D plays the role of the
+attention matrix).  This keeps memory O(L^2) per chunk instead of O(S^2) —
+the TPU-friendly formulation (MXU-sized chunk matmuls) — and is exactly what
+makes prefill_32k lowerable.  The log-space stabilizer m follows the paper's
+Appendix: the carried state is (C~, n~, m) with true C = C~ * exp(m).
+
+sLSTM — scalar memory with recurrent gate connections (block-diagonal per
+head), which forces a sequential ``lax.scan`` over time:
+
+    i/f/z/o from W x_t + R h_{t-1};  c_t = f c_{t-1} + i z;  n_t = f n + i
+    h_t = o * c_t / n_t               (log-space stabilized as above)
+
+Decode carries O(1) state for both kinds => long_500k runs natively.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Axes, Params, dense_init, merge, rms_norm
+
+__all__ = [
+    "mlstm_block_init", "mlstm_block_apply", "mlstm_init_state",
+    "mlstm_decode_step",
+    "slstm_block_init", "slstm_block_apply", "slstm_init_state",
+    "slstm_decode_step",
+]
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_block_init(key: jax.Array, d: int, n_heads: int,
+                     dtype: Any) -> tuple[Params, Axes]:
+    """mLSTM block: up-proj (2x) -> [mlstm | silu gate] -> down-proj."""
+    up = 2 * d
+    hd = up // n_heads
+    ks = jax.random.split(key, 8)
+    params, axes = merge({
+        "w_up": dense_init(ks[0], d, up, ("embed", "mlp"), dtype),
+        "w_gate": dense_init(ks[1], d, up, ("embed", "mlp"), dtype),
+        "w_q": dense_init(ks[2], up, up, ("mlp", "heads_mlp"), dtype),
+        "w_k": dense_init(ks[3], up, up, ("mlp", "heads_mlp"), dtype),
+        "w_v": dense_init(ks[4], up, up, ("mlp", "heads_mlp"), dtype),
+        "w_down": dense_init(ks[5], up, d, ("mlp", "embed"), dtype),
+        "w_if": dense_init(ks[6], up, 2 * n_heads, ("mlp", None),
+                           jnp.float32),
+    })
+    # Gate biases: forget-gate bias init positive (remember by default).
+    params["b_if"] = jnp.concatenate(
+        [jnp.zeros((n_heads,)), jnp.linspace(3.0, 6.0, n_heads)]).astype(
+            jnp.float32)
+    axes["b_if"] = (None,)
+    params["ln_inner"] = jnp.ones((up,), dtype)
+    axes["ln_inner"] = ("mlp",)
+    return params, axes
+
+
+def _mlstm_chunk(q, k, v, log_i, log_f, state):
+    """One chunk of the stabilized chunkwise mLSTM.
+
+    q,k,v: (B,H,L,hd) fp32 (q pre-scaled); log_i/log_f: (B,H,L);
+    state: (C~ (B,H,hd,hd), n~ (B,H,hd), m (B,H)).
+    Returns h (B,H,L,hd) and the new state.
+    """
+    c_p, n_p, m_p = state
+    fcum = jnp.cumsum(log_f, axis=-1)                      # F_j, (B,H,L)
+    # Intra-chunk log decay matrix: F_j - F_t + log i_t for t <= j.
+    ld = fcum[..., :, None] - fcum[..., None, :] + log_i[..., None, :]
+    l = q.shape[-2]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    ld = jnp.where(mask, ld, -jnp.inf)
+    m_intra = ld.max(axis=-1)                              # (B,H,L)
+    m_inter = fcum + m_p[..., None]                        # (B,H,L)
+    m = jnp.maximum(m_intra, m_inter)
+    m = jnp.maximum(m, -1e30)                              # guard all--inf rows
+    d_mat = jnp.exp(ld - m[..., None])                     # (B,H,L,L)
+    inter_scale = jnp.exp(m_inter - m)                     # (B,H,L)
+
+    s = jnp.einsum("bhld,bhtd->bhlt", q, k) * d_mat
+    num = jnp.einsum("bhlt,bhtd->bhld", s, v) \
+        + inter_scale[..., None] * jnp.einsum("bhld,bhde->bhle", q, c_p)
+    den = s.sum(axis=-1) + inter_scale * jnp.einsum("bhld,bhd->bhl", q, n_p)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m))[..., None]
+
+    # State update to the end of the chunk (position L).
+    f_tot = fcum[..., -1]                                  # (B,H)
+    m_new = jnp.maximum(f_tot + m_p, (f_tot[..., None] - fcum + log_i
+                                      ).max(axis=-1))
+    carry = jnp.exp(f_tot + m_p - m_new)
+    w = jnp.exp(f_tot[..., None] - fcum + log_i - m_new[..., None])
+    c_new = carry[..., None, None] * c_p \
+        + jnp.einsum("bht,bhtd,bhte->bhde", w, k, v)
+    n_new = carry[..., None] * n_p + jnp.einsum("bht,bhtd->bhd", w, k)
+    return h, (c_new, n_new, m_new)
+
+
+def _mlstm_qkvif(params: Params, xin: jax.Array, n_heads: int):
+    """Project the up-projected input to per-head q,k,v and gate logits."""
+    b, s, up = xin.shape
+    hd = up // n_heads
+    xf = xin.astype(jnp.float32)
+
+    def heads(w):
+        return (xin @ w).reshape(b, s, n_heads, hd).transpose(0, 2, 1, 3) \
+            .astype(jnp.float32)
+
+    q = heads(params["w_q"]) / math.sqrt(hd)
+    k = heads(params["w_k"]) / math.sqrt(hd)
+    v = heads(params["w_v"])
+    gates = xf @ params["w_if"] + params["b_if"]           # (B,S,2H)
+    log_i = gates[..., :n_heads].transpose(0, 2, 1)        # (B,H,S)
+    log_f = jax.nn.log_sigmoid(gates[..., n_heads:]).transpose(0, 2, 1)
+    return q, k, v, log_i, log_f
+
+
+def mlstm_init_state(batch: int, n_heads: int, hd: int) -> tuple:
+    return (jnp.zeros((batch, n_heads, hd, hd), jnp.float32),
+            jnp.zeros((batch, n_heads, hd), jnp.float32),
+            jnp.full((batch, n_heads), -1e30, jnp.float32))
+
+
+def mlstm_block_apply(params: Params, x: jax.Array,
+                      state: tuple | None = None, *,
+                      n_heads: int, chunk: int = 256,
+                      unroll: bool = False) -> tuple[jax.Array, tuple]:
+    """Full-sequence mLSTM block. x (B,S,d) -> (B,S,d), new state."""
+    dtype = x.dtype
+    b, s, d = x.shape
+    xin = x @ params["w_up"]
+    gate = jax.nn.silu(x @ params["w_gate"])
+    q, k, v, log_i, log_f = _mlstm_qkvif(params, xin, n_heads)
+    up = xin.shape[-1]
+    hd = up // n_heads
+
+    if state is None:
+        state = mlstm_init_state(b, n_heads, hd)
+    c = min(chunk, s)
+    while s % c:
+        c -= 1
+    nchunks = s // c
+
+    def chunk_of(a, i):  # (B,H,S,...) -> (B,H,c,...)
+        return a.reshape(a.shape[:2] + (nchunks, c) + a.shape[3:])[:, :, i]
+
+    def step(carry, i):
+        h, new = _mlstm_chunk(chunk_of(q, i), chunk_of(k, i), chunk_of(v, i),
+                              chunk_of(log_i, i), chunk_of(log_f, i), carry)
+        return new, h
+
+    if unroll:  # roofline analysis: make every chunk visible to XLA's
+        hs_list = []
+        for i in range(nchunks):
+            state, h_i = step(state, i)
+            hs_list.append(h_i)
+        hs = jnp.stack(hs_list)
+    else:
+        state, hs = jax.lax.scan(step, state, jnp.arange(nchunks))
+    # hs: (nchunks, B, H, c, hd) -> (B, S, up)
+    h = hs.transpose(1, 0, 3, 2, 4).reshape(b, s, up)
+    h = rms_norm(h.astype(dtype), params["ln_inner"])
+    out = (h * gate) @ params["w_down"]
+    return out, state
+
+
+def mlstm_decode_step(params: Params, x: jax.Array, state: tuple, *,
+                      n_heads: int) -> tuple[jax.Array, tuple]:
+    """One-token mLSTM step. x (B,1,d)."""
+    dtype = x.dtype
+    b = x.shape[0]
+    xin = x @ params["w_up"]
+    gate = jax.nn.silu(x @ params["w_gate"])
+    q, k, v, log_i, log_f = _mlstm_qkvif(params, xin, n_heads)
+    q, k, v = q[:, :, 0], k[:, :, 0], v[:, :, 0]           # (B,H,hd)
+    log_i, log_f = log_i[:, :, 0], log_f[:, :, 0]          # (B,H)
+
+    c_p, n_p, m_p = state
+    m_new = jnp.maximum(log_f + m_p, log_i)
+    f_t = jnp.exp(log_f + m_p - m_new)
+    i_t = jnp.exp(log_i - m_new)
+    c = f_t[..., None, None] * c_p \
+        + i_t[..., None, None] * k[..., :, None] * v[..., None, :]
+    n = f_t[..., None] * n_p + i_t[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, c)
+    den = jnp.einsum("bhd,bhd->bh", q, n)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    up = params["w_up"].shape[-1]
+    h = h.reshape(b, 1, up).astype(dtype)
+    h = rms_norm(h, params["ln_inner"])
+    out = (h * gate) @ params["w_down"]
+    return out, (c, n, m_new)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_block_init(key: jax.Array, d: int, n_heads: int,
+                     dtype: Any) -> tuple[Params, Axes]:
+    hd = d // n_heads
+    ks = jax.random.split(key, 4)
+    # Input projections for the 4 gates (i, f, z, o) together.
+    params, axes = merge({
+        "w_in": dense_init(ks[0], d, 4 * d, ("embed", "mlp"), dtype),
+        # GLU feed-forward after the recurrence (proj factor 4/3).
+        "w_ff_gate": dense_init(ks[1], d, (4 * d) // 3, ("embed", "mlp"),
+                                dtype),
+        "w_ff_down": dense_init(ks[2], (4 * d) // 3, d, ("mlp", "embed"),
+                                dtype),
+    })
+    # Block-diagonal recurrent weights: (4, H, hd, hd).
+    r = jax.random.normal(ks[3], (4, n_heads, hd, hd), jnp.float32) \
+        * (1.0 / math.sqrt(hd))
+    params["r"] = r.astype(jnp.float32)
+    axes["r"] = (None, "heads", None, None)
+    b = jnp.zeros((4, d), jnp.float32)
+    # forget bias positive.
+    b = b.at[1].set(2.0)
+    params["b"] = b
+    axes["b"] = (None, "embed")
+    params["ln_inner"] = jnp.ones((d,), dtype)
+    axes["ln_inner"] = ("embed",)
+    return params, axes
+
+
+def slstm_init_state(batch: int, d: int) -> tuple:
+    z = jnp.zeros((batch, d), jnp.float32)
+    return (z, z, jnp.full((batch, d), -1e30, jnp.float32), z)  # c,n,m,h
+
+
+def _slstm_cell(params: Params, wx: jax.Array, state: tuple, n_heads: int):
+    """One sLSTM time step.  wx (B,4,d) = W x_t (pre-computed), fp32."""
+    c, n, m, h = state
+    b, d = h.shape
+    hd = d // n_heads
+    hh = h.reshape(b, n_heads, hd)
+    rec = jnp.einsum("bhk,ghkl->bghl", hh, params["r"]).reshape(b, 4, d)
+    pre = wx + rec + params["b"]                           # (B,4,d)
+    log_i = pre[:, 0]
+    log_f = jax.nn.log_sigmoid(pre[:, 1])
+    z = jnp.tanh(pre[:, 2])
+    o = jax.nn.sigmoid(pre[:, 3])
+    m_new = jnp.maximum(log_f + m, log_i)
+    f_t = jnp.exp(log_f + m - m_new)
+    i_t = jnp.exp(log_i - m_new)
+    c_new = f_t * c + i_t * z
+    n_new = jnp.maximum(f_t * n + i_t, jnp.exp(-m_new))
+    h_new = o * c_new / n_new
+    return (c_new, n_new, m_new, h_new), h_new
+
+
+def slstm_block_apply(params: Params, x: jax.Array,
+                      state: tuple | None = None, *,
+                      n_heads: int) -> tuple[jax.Array, tuple]:
+    """Full-sequence sLSTM (sequential scan over time). x (B,S,d)."""
+    dtype = x.dtype
+    b, s, d = x.shape
+    if state is None:
+        state = slstm_init_state(b, d)
+    wx = (x @ params["w_in"]).reshape(b, s, 4, d).astype(jnp.float32)
+
+    def step(carry, wxt):
+        return _slstm_cell(params, wxt, carry, n_heads)
+
+    state, hs = jax.lax.scan(step, state, wx.transpose(1, 0, 2, 3))
+    h = hs.transpose(1, 0, 2).astype(dtype)                # (B,S,d)
+    h = rms_norm(h, params["ln_inner"])
+    ff = jax.nn.silu(h @ params["w_ff_gate"]) @ params["w_ff_down"]
+    return ff, state
+
+
+def slstm_decode_step(params: Params, x: jax.Array,
+                      state: tuple) -> tuple[jax.Array, tuple]:
+    """One-token sLSTM step. x (B,1,d)."""
+    dtype = x.dtype
+    b, _, d = x.shape
+    wx = (x @ params["w_in"]).reshape(b, 4, d).astype(jnp.float32)
+    n_heads = params["r"].shape[1]
+    state, h = _slstm_cell(params, wx, state, n_heads)
+    h = rms_norm(h[:, None, :].astype(dtype), params["ln_inner"])
+    ff = jax.nn.silu(h @ params["w_ff_gate"]) @ params["w_ff_down"]
+    return ff, state

@@ -1,0 +1,9 @@
+"""Optimizers and schedules (pure JAX, no optax)."""
+
+from .adamw import (AdamWConfig, adamw_init, adamw_update,
+                    clip_by_global_norm, constant_schedule, cosine_schedule,
+                    global_norm, linear_schedule)
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "global_norm",
+           "clip_by_global_norm", "cosine_schedule", "linear_schedule",
+           "constant_schedule"]

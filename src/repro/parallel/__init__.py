@@ -1,0 +1,7 @@
+"""Distribution layer: logical-axis sharding rules over ("pod","data","model")."""
+
+from .sharding import (AxisRules, DEFAULT_RULES, logical_to_spec, spec_tree,
+                       shard_batch_spec, constrain)
+
+__all__ = ["AxisRules", "DEFAULT_RULES", "logical_to_spec", "spec_tree",
+           "shard_batch_spec", "constrain"]

@@ -1,0 +1,177 @@
+"""Logical-axis sharding: map model-level axis names to mesh axes.
+
+Every parameter (and the main activations) carries a tuple of *logical* axis
+names (e.g. ``("vocab", "embed")``).  :class:`AxisRules` maps those names to
+mesh axes with divisibility fallbacks: an axis whose size does not divide the
+assigned mesh-axis extent is replicated instead (this is what makes the same
+model code lower on a 1-device CPU, a 16x16 pod, and a 2x16x16 multi-pod
+mesh without per-arch special cases — e.g. qwen2-moe's 60 experts do not
+divide 16, so its experts replicate and its per-expert FFN dim shards).
+
+Default placement (Megatron/FSDP hybrid, TPU-native):
+  * "model"-assigned: attention heads, FFN hidden, vocab, experts, LRU width.
+  * "data"-assigned (FSDP-style weight sharding): the d_model ("embed") dim.
+  * batch: ("pod", "data") — pods are pure data parallelism over DCN.
+  * everything else replicated.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["AxisRules", "DEFAULT_RULES", "DECODE_RULES", "SEQ_PARALLEL_RULES",
+           "logical_to_spec", "spec_tree", "shard_batch_spec", "constrain",
+           "use_rules"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    """Mapping logical axis name -> preferred mesh axis (or None)."""
+
+    rules: tuple[tuple[str, str | None], ...]
+
+    def mesh_axis(self, logical: str | None) -> str | None:
+        if logical is None:
+            return None
+        for name, target in self.rules:
+            if name == logical:
+                return target
+        return None
+
+    def replace(self, **kw: str | None) -> "AxisRules":
+        rules = tuple((k, kw.get(k, v)) for k, v in self.rules)
+        extra = tuple((k, v) for k, v in kw.items()
+                      if k not in dict(self.rules))
+        return AxisRules(rules + extra)
+
+
+DEFAULT_RULES = AxisRules((
+    ("batch", "data"),        # batch additionally shards over "pod" (below)
+    ("embed", "data"),        # FSDP-style: d_model dim of weights over data
+    ("heads", "model"),
+    ("kv_heads", "model"),
+    ("mlp", "model"),
+    ("vocab", "model"),
+    ("experts", "model"),     # expert parallelism
+    ("capacity", "data"),     # MoE dispatch-buffer token slots
+    ("lru", "model"),
+    ("seq", None),
+    ("head_dim", None),
+    ("layers", None),
+    ("conv", None),
+))
+
+# Decode-mode rules: the KV-cache time axis shards over "model" — a 32k-deep
+# cache for a 100+-layer model does not fit per-device otherwise.  GSPMD
+# turns the softmax reductions over the sharded axis into all-reduces.
+DECODE_RULES = DEFAULT_RULES.replace(seq="model")
+
+# Train-mode sequence-parallel rules (hillclimb knob): activations shard
+# their seq axis over "model" between blocks, Megatron-SP style.
+SEQ_PARALLEL_RULES = DEFAULT_RULES.replace(seq="model")
+
+_ACTIVE_RULES: AxisRules = DEFAULT_RULES
+_ACTIVE_MESH: Mesh | None = None
+
+
+@contextlib.contextmanager
+def use_rules(rules: "AxisRules", mesh: Mesh | None = None):
+    """Scoped override of the rules (and mesh) used by :func:`constrain`.
+
+    The mesh must be passed explicitly: inside a jit trace the legacy
+    ``with mesh:`` context does NOT surface through
+    ``jax.sharding.get_abstract_mesh()`` (it returns an empty AbstractMesh),
+    so activation constraints would silently no-op without it.
+    """
+    global _ACTIVE_RULES, _ACTIVE_MESH
+    old = (_ACTIVE_RULES, _ACTIVE_MESH)
+    _ACTIVE_RULES = rules
+    _ACTIVE_MESH = mesh
+    try:
+        yield rules
+    finally:
+        _ACTIVE_RULES, _ACTIVE_MESH = old
+
+
+def _divisible(size: int, mesh: Mesh, axis: str | None) -> bool:
+    if axis is None:
+        return False
+    if axis not in mesh.shape:
+        return False
+    return size % mesh.shape[axis] == 0
+
+
+def logical_to_spec(axes: tuple[str | None, ...], shape: tuple[int, ...],
+                    mesh: Mesh, rules: AxisRules = DEFAULT_RULES) -> P:
+    """PartitionSpec for one array given its logical axes and shape."""
+    if len(axes) != len(shape):
+        raise ValueError(f"axes {axes} do not match shape {shape}")
+    used: set[str] = set()
+    out: list[Any] = []
+    for name, size in zip(axes, shape):
+        target = rules.mesh_axis(name)
+        if name == "batch":
+            # Batch shards over ("pod","data") jointly when divisible.
+            cand = [a for a in ("pod", "data") if a in mesh.shape]
+            extent = 1
+            for a in cand:
+                extent *= mesh.shape[a]
+            if cand and size % extent == 0 and not (set(cand) & used):
+                out.append(tuple(cand) if len(cand) > 1 else cand[0])
+                used.update(cand)
+                continue
+            target = "data"
+        if target in used or not _divisible(size, mesh, target):
+            out.append(None)
+        else:
+            out.append(target)
+            used.add(target)  # a mesh axis may appear only once per spec
+    # Trim trailing Nones for tidiness.
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def spec_tree(axes_tree: Any, params_tree: Any, mesh: Mesh,
+              rules: AxisRules = DEFAULT_RULES) -> Any:
+    """Map a pytree of logical-axes tuples + matching params to PartitionSpecs."""
+    return jax.tree.map(
+        lambda axes, p: logical_to_spec(tuple(axes), p.shape, mesh, rules),
+        axes_tree, params_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and len(x) > 0 and all(
+            isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def shard_batch_spec(mesh: Mesh, batch: int) -> P:
+    """PartitionSpec for a (batch, ...) input array."""
+    return logical_to_spec(("batch",), (batch,), mesh)
+
+
+def constrain(x: jax.Array, axes: tuple[str | None, ...],
+              rules: AxisRules | None = None) -> jax.Array:
+    """Best-effort with_sharding_constraint using logical axes.
+
+    No-op when tracing outside any mesh (CPU smoke tests); inside a jit whose
+    arguments carry NamedShardings, GSPMD propagates from the in_shardings and
+    this constraint pins the key activations (batch/heads/mlp dims).
+    """
+    if rules is None:
+        rules = _ACTIVE_RULES
+    mesh = _ACTIVE_MESH
+    if mesh is None:
+        try:
+            am = jax.sharding.get_abstract_mesh()
+            if am is None or am.empty or not am.shape:
+                return x
+            mesh = am
+        except Exception:
+            return x
+    spec = logical_to_spec(axes, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec) if isinstance(mesh, Mesh) else spec)

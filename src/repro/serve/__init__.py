@@ -1,0 +1,5 @@
+"""Batched serving engine (prefill + decode)."""
+
+from .engine import GenerateResult, ServingEngine
+
+__all__ = ["GenerateResult", "ServingEngine"]

@@ -1,0 +1,81 @@
+"""Batched serving engine: prefill + decode with KV / recurrent caches.
+
+The engine serves a batch of requests in lockstep (static-batch serving):
+``prefill`` encodes the prompts and materializes the decode cache, then
+``generate`` runs jitted single-token steps with greedy or temperature
+sampling.  ``serve_step`` — one new token against a seq_len-deep cache — is
+exactly what the decode input-shapes of the assignment lower in the dry-run.
+
+Proactive checkpointing applies to serving too: the engine exposes its cache
+as state so the fault-tolerance layer can snapshot in-flight batches; for the
+paper's experiments the checkpointed unit is the training state, so serving
+checkpoints are left to the caller.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models.model import decode_step, init_cache, prefill
+
+__all__ = ["GenerateResult", "ServingEngine"]
+
+
+@dataclasses.dataclass
+class GenerateResult:
+    tokens: jax.Array        # (B, n_new)
+    logprobs: jax.Array      # (B, n_new)
+    steps: int
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params: Any, *,
+                 cache_len: int = 4096) -> None:
+        if not cfg.causal:
+            raise ValueError(f"{cfg.name} is encoder-only; nothing to serve")
+        self.cfg = cfg
+        self.params = params
+        self.cache_len = cache_len
+
+        def _prefill(params, batch):
+            return prefill(cfg, params, batch, cache_len=cache_len)
+
+        def _step(params, token, cache, key, temperature):
+            logits, cache = decode_step(cfg, params, token, cache)
+            logits = logits.astype(jnp.float32)
+            greedy = jnp.argmax(logits, axis=-1)
+            sampled = jax.random.categorical(key, logits / temperature)
+            tok = jnp.where(temperature > 0, sampled, greedy).astype(jnp.int32)
+            lp = jax.nn.log_softmax(logits)
+            lp = jnp.take_along_axis(lp, tok[:, None], axis=-1)[:, 0]
+            return tok, lp, cache
+
+        self._prefill = jax.jit(_prefill)
+        self._step = jax.jit(_step)
+
+    def prefill(self, batch: dict) -> tuple[jax.Array, dict]:
+        """Encode prompts. Returns (last-position logits, cache)."""
+        return self._prefill(self.params, batch)
+
+    def generate(self, batch: dict, n_new: int, *, temperature: float = 0.0,
+                 seed: int = 0) -> GenerateResult:
+        logits, cache = self.prefill(batch)
+        key = jax.random.PRNGKey(seed)
+        tok = jnp.argmax(logits.astype(jnp.float32), axis=-1).astype(jnp.int32)
+        toks, lps = [], []
+        for i in range(n_new):
+            key, sub = jax.random.split(key)
+            tok, lp, cache = self._step(self.params, tok, cache, sub,
+                                        jnp.asarray(temperature, jnp.float32))
+            toks.append(tok)
+            lps.append(lp)
+        return GenerateResult(jnp.stack(toks, axis=1),
+                              jnp.stack(lps, axis=1), n_new)
+
+    def fresh_cache(self, batch_size: int) -> dict:
+        return init_cache(self.cfg, batch_size, self.cache_len)

@@ -1,0 +1,7 @@
+"""Shared pytest config. NOTE: no XLA_FLAGS here — tests see 1 CPU device."""
+
+import pytest
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running CPU test")

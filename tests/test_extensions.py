@@ -1,0 +1,162 @@
+"""Beyond-paper extensions: two-level checkpointing, online estimation,
+hazard-aware dynamic periods."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import PlatformConfig
+from repro.core.multilevel import (TwoLevelPlatform, optimal_two_level,
+                                   simulate_two_level, waste_two_level)
+from repro.core.simulator import NeverTrust, simulate
+from repro.core.traces import EventTrace, Exponential, make_event_trace
+from repro.core.waste import Platform, t_rfo, waste
+from repro.ft.estimator import AdaptiveScheduler, OnlineEstimator
+
+
+# ---------------------------------------------------------------------------
+# Two-level checkpointing
+# ---------------------------------------------------------------------------
+
+def test_two_level_reduces_to_single_level_at_k1():
+    """k=1 (every checkpoint durable) == the paper's model with C = C2."""
+    p2 = TwoLevelPlatform(mu=10_000.0, phi=0.0, c1=10.0, c2=100.0,
+                          r1=10.0, r2=100.0, d=5.0)
+    p1 = Platform(mu=10_000.0, c=100.0, d=5.0, r=100.0)
+    for t in (500.0, 1000.0, 2000.0):
+        assert waste_two_level(t, 1, p2) == pytest.approx(waste(t, p1))
+
+
+def test_two_level_t1_star_is_argmin():
+    p = TwoLevelPlatform(mu=20_000.0, phi=0.7, c1=5.0, c2=120.0,
+                         r1=5.0, r2=120.0, d=2.0)
+    t1, k, w = optimal_two_level(p)
+    assert k >= 2  # cheap local ckpts should be used
+    for f in (0.7, 0.9, 1.1, 1.4):
+        assert waste_two_level(t1 * f, k, p) >= w - 1e-12
+    for kk in (max(1, k - 1), k + 1):
+        t1k = max(p.c1, math.sqrt(
+            2 * p.mu * ((kk - 1) * p.c1 + p.c2)
+            / (kk * (p.phi + (1 - p.phi) * kk))))
+        assert waste_two_level(t1k, kk, p) >= w - 1e-12
+
+
+def test_two_level_beats_single_level_with_soft_faults():
+    """With mostly-soft faults and C2 >> C1, hierarchy wins analytically
+    AND in simulation."""
+    mu, phi = 5_000.0, 0.8
+    p2 = TwoLevelPlatform(mu=mu, phi=phi, c1=5.0, c2=150.0,
+                          r1=5.0, r2=150.0, d=2.0)
+    p1 = Platform(mu=mu, c=150.0, d=2.0, r=150.0)
+    t1, k, w2 = optimal_two_level(p2)
+    w1 = waste(t_rfo(p1), p1)
+    assert w2 < w1
+
+    rng = np.random.default_rng(0)
+    time_base = 200_000.0
+    m2 = m1 = 0.0
+    for seed in range(8):
+        r = np.random.default_rng(seed)
+        faults = np.cumsum(r.exponential(mu, size=400))
+        soft = r.random(len(faults)) < phi
+        m2 += simulate_two_level(faults, soft, p2, time_base, t1, k).makespan
+        trace = EventTrace(faults, np.zeros(len(faults), np.int8), 1e12)
+        m1 += simulate(trace, p1, time_base, t_rfo(p1),
+                       trust=NeverTrust()).makespan
+    assert m2 < m1
+
+
+def test_two_level_simulation_matches_analytic():
+    p = TwoLevelPlatform(mu=8_000.0, phi=0.7, c1=10.0, c2=100.0,
+                         r1=10.0, r2=100.0, d=5.0)
+    t1, k, w_analytic = optimal_two_level(p)
+    time_base = 500_000.0
+    wastes = []
+    for seed in range(10):
+        r = np.random.default_rng(seed)
+        faults = np.cumsum(r.exponential(p.mu, size=600))
+        soft = r.random(len(faults)) < p.phi
+        wastes.append(
+            simulate_two_level(faults, soft, p, time_base, t1, k).waste)
+    assert np.mean(wastes) == pytest.approx(w_analytic, abs=0.03)
+
+
+@given(st.floats(0.0, 1.0), st.floats(2_000.0, 1e6))
+@settings(max_examples=30, deadline=None)
+def test_two_level_waste_bounded(phi, mu):
+    p = TwoLevelPlatform(mu=mu, phi=phi, c1=5.0, c2=100.0, r1=5.0,
+                         r2=100.0, d=1.0)
+    t1, k, w = optimal_two_level(p)
+    assert 0.0 < w
+    assert t1 >= p.c1 and k >= 1
+
+
+# ---------------------------------------------------------------------------
+# Online estimation
+# ---------------------------------------------------------------------------
+
+def test_estimator_converges_to_true_mtbf():
+    est = OnlineEstimator(halflife=30.0)
+    rng = np.random.default_rng(0)
+    t = 0.0
+    for _ in range(400):
+        t += rng.exponential(500.0)
+        est.observe_fault(t, was_predicted=False)
+    assert est.state.mu == pytest.approx(500.0, rel=0.25)
+
+
+def test_estimator_recall_precision():
+    est = OnlineEstimator(halflife=50.0, match_window=5.0)
+    rng = np.random.default_rng(1)
+    t = 0.0
+    r_true, p_true = 0.8, 0.6
+    for _ in range(600):
+        t += rng.exponential(100.0)
+        predicted = rng.random() < r_true
+        if predicted:
+            est.observe_prediction(t)
+        est.observe_fault(t, was_predicted=predicted)
+        # False predictions at the right rate: r/p * (1-p) per fault.
+        if rng.random() < r_true * (1 - p_true) / p_true:
+            est.observe_prediction(t + 20.0)
+            est.expire_predictions(t + 40.0)
+    st_ = est.state
+    assert st_.recall == pytest.approx(r_true, abs=0.1)
+    assert st_.precision == pytest.approx(p_true, abs=0.15)
+
+
+def test_adaptive_scheduler_replans_on_drift():
+    prior = PlatformConfig(mu_ind=10_000.0, c=60.0, cp=20.0, d=5.0,
+                           r=30.0, recall=0.85, precision=0.82)
+    ada = AdaptiveScheduler(prior, n_devices=1, c=60.0, cp=20.0,
+                            halflife=10.0)
+    t0 = ada.scheduler.period
+    # Feed faults 10x more frequent than the prior (recall at its prior
+    # rate — feeding all-predicted would legitimately drive r-hat -> 1 and
+    # the optimal period -> sqrt(2 mu C / (1-r)) -> infinity).
+    rng = np.random.default_rng(2)
+    t = 0.0
+    for _ in range(60):
+        t += rng.exponential(1_000.0)
+        ada.estimator.observe_fault(t, was_predicted=rng.random() < 0.85)
+    assert ada.maybe_replan()
+    assert ada.scheduler.period < t0  # higher rate -> shorter period
+    assert ada.n_replans == 1
+    # Stable estimates: no further replanning.
+    assert not ada.maybe_replan()
+
+
+def test_adaptive_scheduler_hysteresis():
+    prior = PlatformConfig(mu_ind=10_000.0, c=60.0, cp=20.0, d=5.0,
+                           r=30.0, recall=0.85, precision=0.82)
+    ada = AdaptiveScheduler(prior, n_devices=1, c=60.0, cp=20.0,
+                            replan_threshold=0.5)
+    # Small drift below the threshold: no replan.
+    t = 0.0
+    rng = np.random.default_rng(3)
+    for _ in range(50):
+        t += rng.exponential(9_000.0)
+        ada.estimator.observe_fault(t, was_predicted=rng.random() < 0.85)
+    assert not ada.maybe_replan()

@@ -1,0 +1,219 @@
+"""Per-arch smoke tests (reduced configs) + decode/prefill consistency.
+
+The assignment requires, per architecture, a REDUCED variant (<= 2-3 layers,
+d_model <= 512, <= 4 experts) running one forward/train step on CPU with
+shape + finiteness assertions.  The consistency tests additionally pin the
+semantics: prefill + decode_step must reproduce the teacher-forced logits.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import REGISTRY, SHAPES, pairs, skip_reason
+from repro.configs.base import InputShape
+from repro.models import (decode_step, forward_train, init_cache,
+                          init_params, loss_fn, make_batch, prefill)
+from repro.models.model import input_specs
+from repro.models.transformer import cache_axes
+
+ARCHS = sorted(REGISTRY)
+SMOKE_SHAPE = InputShape("smoke", 64, 2, "train")
+
+
+@pytest.fixture(scope="module")
+def params_cache():
+    cache = {}
+
+    def get(name, **over):
+        key = (name, tuple(sorted(over.items())))
+        if key not in cache:
+            cfg = REGISTRY[name].reduced()
+            if over:
+                cfg = dataclasses.replace(cfg, **over)
+            params, axes = init_params(cfg, jax.random.PRNGKey(0))
+            cache[key] = (cfg, params, axes)
+        return cache[key]
+
+    return get
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_loss(arch, params_cache):
+    """One forward + loss on the reduced config: shapes + no NaNs."""
+    cfg, params, _ = params_cache(arch)
+    batch = make_batch(cfg, SMOKE_SHAPE, jax.random.PRNGKey(1))
+    logits, aux = forward_train(cfg, params, batch)
+    assert logits.shape == (2, 64, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+    loss, metrics = loss_fn(cfg, params, batch)
+    assert np.isfinite(float(loss))
+    if cfg.n_experts:
+        assert float(metrics["moe_aux"]) > 0.0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch, params_cache):
+    """One grad step: finite global grad norm for every family."""
+    cfg, params, _ = params_cache(arch)
+    batch = make_batch(cfg, SMOKE_SHAPE, jax.random.PRNGKey(2))
+    grads = jax.grad(lambda p: loss_fn(cfg, p, batch)[0])(params)
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(grads))
+    assert np.isfinite(float(sq)) and float(sq) > 0.0
+
+
+DECODE_ARCHS = [a for a in ARCHS if REGISTRY[a].causal]
+
+
+@pytest.mark.parametrize("arch", DECODE_ARCHS)
+def test_prefill_decode_consistency(arch, params_cache):
+    """prefill + decode_step == teacher-forced forward (fp32, dropless)."""
+    cfg, params, _ = params_cache(arch, dtype="float32", remat=False,
+                                  capacity_factor=None)
+    shp = InputShape("t", 32, 2, "train")
+    batch = make_batch(cfg, shp, jax.random.PRNGKey(3))
+    logits_full, _ = forward_train(cfg, params, batch)
+    s_pre = 24
+    pre = {k: (v[:, :s_pre] if v.ndim >= 2 and v.shape[1] == 32 else v)
+           for k, v in batch.items()}
+    lg, cache = prefill(cfg, params, pre, cache_len=40)
+    np.testing.assert_allclose(np.asarray(lg),
+                               np.asarray(logits_full[:, s_pre - 1]),
+                               atol=5e-3)
+    for t in range(s_pre, 31):
+        thw = batch["positions_thw"][:, t] \
+            if "positions_thw" in batch else None
+        lg, cache = decode_step(cfg, params, batch["tokens"][:, t], cache,
+                                positions_thw=thw)
+        np.testing.assert_allclose(np.asarray(lg),
+                                   np.asarray(logits_full[:, t]),
+                                   atol=5e-3)
+
+
+@pytest.mark.parametrize("arch", DECODE_ARCHS)
+def test_init_cache_matches_prefill_structure(arch, params_cache):
+    """init_cache (used by serve_step dry-runs) matches prefill's cache."""
+    cfg, params, _ = params_cache(arch)
+    shp = InputShape("t", 16, 2, "train")
+    batch = make_batch(cfg, shp, jax.random.PRNGKey(4))
+    _, cache_p = prefill(cfg, params, batch, cache_len=16)
+    cache_i = init_cache(cfg, 2, 16)
+    s1 = jax.tree.structure(cache_p)
+    s2 = jax.tree.structure(cache_i)
+    assert s1 == s2
+    for a, b in zip(jax.tree.leaves(cache_p), jax.tree.leaves(cache_i)):
+        assert a.shape == b.shape, (arch, a.shape, b.shape)
+
+
+@pytest.mark.parametrize("arch", DECODE_ARCHS)
+def test_decode_from_init_cache(arch, params_cache):
+    """Decoding from a zero cache (length 0) runs and yields finite logits."""
+    cfg, params, _ = params_cache(arch)
+    cache = init_cache(cfg, 2, 16)
+    tok = jnp.array([1, 2], jnp.int32)
+    for _ in range(3):
+        logits, cache = decode_step(cfg, params, tok, cache)
+        assert logits.shape == (2, cfg.vocab_size)
+        assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+    assert int(cache["length"][0]) == 3
+
+
+def test_cache_axes_aligned_with_cache():
+    """cache_axes tree must align leaf-for-leaf with init_cache."""
+    for arch in DECODE_ARCHS:
+        cfg = REGISTRY[arch].reduced()
+        cache = jax.eval_shape(lambda c=cfg: init_cache(c, 2, 16))
+        axes = cache_axes(cfg)
+        is_axes = lambda x: (isinstance(x, tuple) and len(x) > 0 and
+                             all(isinstance(e, (str, type(None)))
+                                 for e in x))
+        flat_axes = jax.tree.flatten(axes, is_leaf=is_axes)[0]
+        flat_cache = jax.tree.leaves(cache)
+        assert len(flat_axes) == len(flat_cache), arch
+        for a, leaf in zip(flat_axes, flat_cache):
+            assert len(a) == len(leaf.shape), (arch, a, leaf.shape)
+
+
+def test_pairs_grid():
+    """The assigned grid: 40 combinations, 2 documented skips."""
+    all_pairs = list(pairs(include_skipped=True))
+    assert len(all_pairs) == 40
+    skipped = [(c.name, s.name) for c, s, r in all_pairs if r]
+    assert sorted(skipped) == [("hubert-xlarge", "decode_32k"),
+                               ("hubert-xlarge", "long_500k")]
+
+
+def test_input_specs_no_allocation():
+    """input_specs returns ShapeDtypeStructs for every (arch x shape)."""
+    for cfg, shape, _ in pairs():
+        specs = input_specs(cfg, shape)
+        for leaf in jax.tree.leaves(specs):
+            assert isinstance(leaf, jax.ShapeDtypeStruct)
+
+
+def test_reduced_constraints():
+    """Reduced variants respect the assignment's smoke limits."""
+    for arch in ARCHS:
+        r = REGISTRY[arch].reduced()
+        assert r.n_layers <= 3
+        assert r.d_model <= 512
+        assert r.n_experts <= 4
+        assert r.vocab_size <= 512
+
+
+def test_encoder_has_no_decode():
+    cfg = REGISTRY["hubert-xlarge"].reduced()
+    params, _ = init_params(cfg, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError):
+        decode_step(cfg, params, jnp.zeros((2,), jnp.int32),
+                    init_cache(cfg, 2, 8))
+
+
+# Published sizes [source citations in each config file]; tolerance covers
+# head/embedding accounting differences.
+PUBLISHED_SIZES_B = {
+    "llama3-405b": (405.0, 0.05),
+    "internlm2-20b": (20.0, 0.08),
+    "qwen3-moe-235b-a22b": (235.0, 0.05),
+    "tinyllama-1.1b": (1.1, 0.05),
+    "qwen2-vl-72b": (72.0, 0.05),
+    "llama3.2-1b": (1.24, 0.05),
+}
+PUBLISHED_ACTIVE_B = {
+    "qwen3-moe-235b-a22b": (22.0, 0.10),
+    "qwen2-moe-a2.7b": (2.7, 0.10),
+}
+
+
+@pytest.mark.parametrize("arch", sorted(PUBLISHED_SIZES_B))
+def test_param_count_matches_published(arch):
+    total, tol = PUBLISHED_SIZES_B[arch]
+    ours = REGISTRY[arch].param_count() / 1e9
+    assert abs(ours / total - 1) < tol, f"{arch}: {ours:.2f}B vs {total}B"
+
+
+@pytest.mark.parametrize("arch", sorted(PUBLISHED_ACTIVE_B))
+def test_active_params_match_published(arch):
+    active, tol = PUBLISHED_ACTIVE_B[arch]
+    ours = REGISTRY[arch].active_param_count() / 1e9
+    assert abs(ours / active - 1) < tol
+
+
+def test_extra_architectures_smoke():
+    """Extra (non-assigned) configs run a forward/loss step when reduced."""
+    from repro.configs import EXTRAS
+    assert set(EXTRAS) == {"mixtral-8x7b", "gemma2-9b"}
+    for name, cfg_full in EXTRAS.items():
+        cfg = cfg_full.reduced()
+        params, _ = init_params(cfg, jax.random.PRNGKey(0))
+        batch = make_batch(cfg, SMOKE_SHAPE, jax.random.PRNGKey(1))
+        loss, _ = loss_fn(cfg, params, batch)
+        assert np.isfinite(float(loss)), name
+    # Published sizes: mixtral 46.7B total / 12.9B active.
+    mix = EXTRAS["mixtral-8x7b"]
+    assert abs(mix.param_count() / 46.7e9 - 1) < 0.08
+    assert abs(mix.active_param_count() / 12.9e9 - 1) < 0.10

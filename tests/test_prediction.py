@@ -1,0 +1,164 @@
+"""Paper §4: predictor algebra, Theorem 1, optimal periods with prediction."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.prediction import (PredictedPlatform, Predictor, beta_lim,
+                                   optimal_period_with_prediction, optimal_q,
+                                   t_nopred, t_pred, t_pred_asymptotic,
+                                   waste1, waste2, waste_simple_policy,
+                                   waste_with_prediction)
+from repro.core.waste import Platform
+
+MU_IND = 125.0 * 365.0 * 86400.0
+
+
+def pp(n=2**16, c=600.0, cp=600.0, d=60.0, r=600.0, recall=0.85,
+       precision=0.82) -> PredictedPlatform:
+    plat = Platform(mu=MU_IND / n, c=c, d=d, r=r)
+    return PredictedPlatform(plat, Predictor(recall, precision), cp)
+
+
+# -- §2.3 event-rate algebra ---------------------------------------------------
+
+def test_event_rates():
+    pred = Predictor(recall=0.85, precision=0.82)
+    mu = 1000.0
+    assert pred.mu_np(mu) == pytest.approx(mu / 0.15)
+    assert pred.mu_p(mu) == pytest.approx(0.82 * mu / 0.85)
+    inv = 1.0 / pred.mu_p(mu) + 1.0 / pred.mu_np(mu)
+    assert pred.mu_e(mu) == pytest.approx(1.0 / inv)
+    # False-prediction rate: (1-p) of predictions.
+    assert pred.mu_false(mu) == pytest.approx(pred.mu_p(mu) / (1 - 0.82))
+
+
+def test_event_rates_edge_cases():
+    assert Predictor(1.0, 0.9).mu_np(100.0) == math.inf
+    assert Predictor(0.0, 0.9).mu_p(100.0) == math.inf
+    assert Predictor(0.9, 1.0).mu_false(100.0) == math.inf
+
+
+# -- §4.1 simple policy ---------------------------------------------------------
+
+@given(st.floats(0.05, 0.99), st.floats(0.05, 0.99),
+       st.integers(2**10, 2**19))
+@settings(max_examples=50, deadline=None)
+def test_optimal_q_is_extreme(r, p, n):
+    """Waste is linear in q, so the optimum is always q in {0, 1}."""
+    ppl = pp(n=n, recall=r, precision=p)
+    t = 2.0 * ppl.platform.c + 1000.0
+    w0 = waste_simple_policy(t, 0.0, ppl)
+    w1 = waste_simple_policy(t, 1.0, ppl)
+    wmid = waste_simple_policy(t, 0.5, ppl)
+    assert wmid == pytest.approx(0.5 * (w0 + w1), rel=1e-9)  # linearity
+    assert optimal_q(t, ppl) in (0, 1)
+
+
+# -- §4.2 Theorem 1 --------------------------------------------------------------
+
+def test_beta_lim():
+    assert beta_lim(pp(cp=600.0, precision=0.82)) == pytest.approx(600 / 0.82)
+
+
+def test_waste_branches_coincide_at_beta_lim():
+    ppl = pp()
+    t = beta_lim(ppl)
+    if t >= ppl.platform.c:
+        assert waste1(t, ppl) == pytest.approx(waste2(t, ppl), rel=1e-9)
+
+
+def test_waste2_equals_waste1_when_r0():
+    """With recall 0 no proactive action: branches coincide for all T."""
+    ppl = pp(recall=1e-12)
+    for t in (1000.0, 5000.0, 20000.0):
+        assert waste1(t, ppl) == pytest.approx(waste2(t, ppl), rel=1e-6)
+
+
+def test_theorem1_breakpoint_optimality():
+    """Acting iff offset >= C_p/p beats earlier/later thresholds (numeric).
+
+    We evaluate the §4.2 waste integral for a family of threshold policies
+    directly (trust iff t >= beta): the expected waste per prediction is
+    int_0^beta p (t + D + R) dt + int_beta^T (p (C_p + D + R) + (1-p) C_p) dt.
+    The minimizing beta must be C_p / p.
+    """
+    ppl = pp()
+    plat, pred = ppl.platform, ppl.predictor
+    p = pred.precision
+    t_end = 20000.0
+
+    def pred_cost(beta):
+        a = p * (beta**2 / 2 + (plat.d + plat.r) * beta)
+        b = (p * (ppl.cp + plat.d + plat.r) + (1 - p) * ppl.cp) \
+            * (t_end - beta)
+        return a + b
+
+    b_star = beta_lim(ppl)
+    c_star = pred_cost(b_star)
+    for b in np.linspace(0.0, t_end, 101):
+        assert pred_cost(float(b)) >= c_star - 1e-6
+
+
+# -- §4.3 optimal period ----------------------------------------------------------
+
+@pytest.mark.parametrize("n", [2**10, 2**14, 2**16, 2**19])
+@pytest.mark.parametrize("cp_ratio", [1.0, 0.1, 2.0])
+def test_t_pred_is_argmin_of_waste2(n, cp_ratio):
+    ppl = pp(n=n, cp=600.0 * cp_ratio)
+    t0 = t_pred(ppl)
+    w0 = waste2(t0, ppl)
+    lo = max(ppl.platform.c, beta_lim(ppl))
+    for t in np.geomspace(lo, 50 * t0, 200):
+        assert waste2(float(t), ppl) >= w0 - 1e-12
+
+
+def test_optimal_period_beats_grid():
+    """The §4.3 closed-form beats a dense grid search on Eq. 15."""
+    ppl = pp(n=2**16)
+    t_star, w_star, use = optimal_period_with_prediction(ppl)
+    grid = np.geomspace(ppl.platform.c, 100 * t_star, 400)
+    w_grid = min(waste_with_prediction(float(t), ppl) for t in grid)
+    assert w_star <= w_grid + 1e-12
+    assert use  # a good predictor should be used at this scale
+
+
+def test_prediction_reduces_waste():
+    """At large scale, the predicted-optimal waste < RFO waste (paper §5)."""
+    from repro.core.waste import t_rfo, waste
+    for n in (2**16, 2**19):
+        ppl = pp(n=n)
+        _, w_pred, _ = optimal_period_with_prediction(ppl)
+        w_rfo = waste(t_rfo(ppl.platform), ppl.platform)
+        assert w_pred < w_rfo
+
+
+def test_asymptotic_period():
+    """T* ~ sqrt(2 mu C / (1-r)) for large mu (paper §4.3 remark)."""
+    ppl = pp(n=2**8)  # large mu
+    t_star, _, _ = optimal_period_with_prediction(ppl)
+    assert t_star == pytest.approx(t_pred_asymptotic(ppl), rel=0.05)
+
+
+def test_t_nopred_clamped_to_interval():
+    ppl = pp(n=2**19, cp=60.0)  # beta_lim = 73 s < C: degenerate interval
+    assert t_nopred(ppl) == ppl.platform.c  # clamped to the C lower bound
+    ppl2 = pp(n=2**19, cp=6000.0)  # beta_lim = 7317 s, T_RFO ~ 2869 s
+    t2 = t_nopred(ppl2)
+    assert ppl2.platform.c <= t2 <= beta_lim(ppl2) + 1e-9
+
+
+@given(st.floats(0.1, 0.95), st.floats(0.1, 0.95),
+       st.sampled_from([0.1, 0.5, 1.0, 2.0]), st.integers(2**10, 2**19))
+@settings(max_examples=60, deadline=None)
+def test_optimal_never_worse_than_no_prediction(r, p, cp_ratio, n):
+    """min(WASTE1*, WASTE2*) <= WASTE1* by construction — and the chosen
+    branch's waste must match waste_with_prediction at T*."""
+    ppl = pp(n=n, recall=r, precision=p, cp=600.0 * cp_ratio)
+    t_star, w_star, use = optimal_period_with_prediction(ppl)
+    w1 = waste1(t_nopred(ppl), ppl)
+    assert w_star <= w1 + 1e-12
+    assert w_star == pytest.approx(
+        waste_with_prediction(max(t_star, ppl.platform.c), ppl), rel=1e-6)

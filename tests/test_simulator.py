@@ -1,0 +1,167 @@
+"""Discrete-event simulator: mechanics + agreement with the analytic model."""
+
+import numpy as np
+import pytest
+
+from repro.core.prediction import (PredictedPlatform, Predictor, beta_lim,
+                                   optimal_period_with_prediction)
+from repro.core.simulator import (AlwaysTrust, NeverTrust, ThresholdTrust,
+                                  simulate)
+from repro.core.traces import EventTrace, Exponential, make_event_trace
+from repro.core.waste import Platform, t_rfo, waste
+
+MU_IND = 125.0 * 365.0 * 86400.0
+
+
+def trace_of(times, kinds, horizon=1e9):
+    return EventTrace(np.asarray(times, float), np.asarray(kinds, np.int8),
+                      horizon)
+
+
+def test_fault_free_execution():
+    """No faults: makespan = ceil(W / (T-C)) periods of T (final ckpt incl.)."""
+    p = Platform(mu=1e12, c=10.0, d=1.0, r=2.0)
+    res = simulate(trace_of([], []), p, time_base=360.0, period=100.0)
+    # 4 chunks of 90 => 4 checkpoints of 10 => 400 s.
+    assert res.makespan == pytest.approx(400.0)
+    assert res.n_periodic_ckpts == 4
+    assert res.waste == pytest.approx(0.1)
+
+
+def test_single_fault_rollback():
+    """One fault mid-period destroys work since the last checkpoint."""
+    p = Platform(mu=1e12, c=10.0, d=5.0, r=20.0)
+    # Fault at t=150: first period [0,100) saved 90; 50 s into period 2,
+    # 50 s destroyed (40 work + 10 in ckpt? no: work till 190 then ckpt).
+    res = simulate(trace_of([150.0], [0]), p, time_base=360.0, period=100.0)
+    # Timeline: [0,90) work, [90,100) ckpt, [100,150) 50 work destroyed,
+    # downtime 5 + recovery 20 -> 175, then remaining 270 work in 3 periods
+    # = 3*100, makespan = 175 + 300 = 475.
+    assert res.makespan == pytest.approx(475.0)
+    assert res.n_faults_hit == 1
+    assert res.time_lost == pytest.approx(50.0)
+    assert res.time_down == pytest.approx(25.0)
+
+
+def test_fault_during_checkpoint_rolls_back_to_previous():
+    p = Platform(mu=1e12, c=10.0, d=0.0, r=0.0)
+    # Fault at t=95 (inside the first checkpoint): the 90 work units since
+    # the last save are destroyed.
+    res = simulate(trace_of([95.0], [0]), p, time_base=180.0, period=100.0)
+    # 90 s of work + 5 s of aborted checkpoint.
+    assert res.time_lost == pytest.approx(95.0)
+    # 95 (wasted) + 90+10 + 90+10 = 295.
+    assert res.makespan == pytest.approx(295.0)
+
+
+def test_trusted_prediction_saves_work():
+    """A true prediction with a proactive ckpt loses only C_p + D + R."""
+    p = Platform(mu=1e12, c=10.0, d=2.0, r=3.0)
+    cp = 4.0
+    res = simulate(trace_of([50.0], [1]), p, time_base=360.0, period=100.0,
+                   cp=cp, trust=AlwaysTrust())
+    # Proactive ckpt at [46, 50): fault at 50 destroys nothing; D+R=5 -> 55.
+    # Remaining 360-46=314 work: period restarts -> 4 more periods
+    # (90+10)*3 + 44+10... let the engine count; check the key quantities:
+    assert res.n_trusted == 1
+    assert res.n_trusted_true == 1
+    assert res.time_lost == pytest.approx(0.0)
+    assert res.time_prockpt == pytest.approx(cp)
+    assert res.time_down == pytest.approx(5.0)
+
+
+def test_untrusted_prediction_costs_rollback():
+    p = Platform(mu=1e12, c=10.0, d=2.0, r=3.0)
+    res = simulate(trace_of([50.0], [1]), p, time_base=360.0, period=100.0,
+                   cp=4.0, trust=NeverTrust())
+    assert res.n_trusted == 0
+    assert res.time_lost == pytest.approx(50.0)
+
+
+def test_false_prediction_costs_cp_only():
+    p = Platform(mu=1e12, c=10.0, d=2.0, r=3.0)
+    res = simulate(trace_of([50.0], [2]), p, time_base=360.0, period=100.0,
+                   cp=4.0, trust=AlwaysTrust())
+    assert res.n_trusted == 1
+    assert res.n_trusted_true == 0
+    assert res.time_lost == pytest.approx(0.0)
+    assert res.time_prockpt == pytest.approx(4.0)
+    assert res.time_down == pytest.approx(0.0)
+
+
+def test_threshold_trust_ignores_early_predictions():
+    p = Platform(mu=1e12, c=10.0, d=0.0, r=0.0)
+    # Prediction at offset 20 < threshold 30: ignored.
+    res = simulate(trace_of([20.0], [2]), p, time_base=180.0, period=100.0,
+                   cp=4.0, trust=ThresholdTrust(30.0))
+    assert res.n_trusted == 0
+    res = simulate(trace_of([40.0], [2]), p, time_base=180.0, period=100.0,
+                   cp=4.0, trust=ThresholdTrust(30.0))
+    assert res.n_trusted == 1
+
+
+def test_prediction_too_early_in_period_unhonourable():
+    """A prediction < C_p after the period start cannot be honoured."""
+    p = Platform(mu=1e12, c=10.0, d=0.0, r=0.0)
+    res = simulate(trace_of([2.0], [2]), p, time_base=90.0, period=100.0,
+                   cp=4.0, trust=AlwaysTrust())
+    assert res.n_ignored_by_necessity == 1
+    assert res.n_trusted == 0
+
+
+def test_inexact_prediction_window():
+    """InexactPrediction: fault strikes in [date, date+window); work done
+    between the proactive save and the actual fault is destroyed."""
+    p = Platform(mu=1e12, c=10.0, d=0.0, r=0.0)
+    rng = np.random.default_rng(0)
+    res = simulate(trace_of([50.0], [1]), p, time_base=360.0, period=100.0,
+                   cp=4.0, trust=AlwaysTrust(), inexact_window=20.0, rng=rng)
+    assert res.n_trusted_true == 1
+    assert 0.0 < res.time_lost < 20.0
+
+
+def simulated_waste(n, recall, precision, period, trust, n_runs=8, cp=600.0):
+    mu = MU_IND / n
+    p = Platform(mu=mu, c=600.0, d=60.0, r=600.0)
+    time_base = 10_000 * 365 * 86400 / n
+    tot = 0.0
+    for seed in range(n_runs):
+        rng = np.random.default_rng(seed)
+        tr = make_event_trace(Exponential(1.0), mu, recall, precision,
+                              horizon=30 * time_base, rng=rng)
+        res = simulate(tr, p, time_base, period, cp=cp, trust=trust, rng=rng)
+        tot += res.waste
+    return tot / n_runs
+
+
+@pytest.mark.slow
+def test_simulator_matches_analytic_waste_nopred():
+    n = 2**16
+    p = Platform(mu=MU_IND / n, c=600.0, d=60.0, r=600.0)
+    t = t_rfo(p)
+    w_sim = simulated_waste(n, 0.0, 1.0, t, NeverTrust())
+    assert w_sim == pytest.approx(waste(t, p), abs=0.02)
+
+
+@pytest.mark.slow
+def test_simulator_matches_analytic_waste_pred():
+    n = 2**16
+    plat = Platform(mu=MU_IND / n, c=600.0, d=60.0, r=600.0)
+    ppl = PredictedPlatform(plat, Predictor(0.85, 0.82), 600.0)
+    t, w_analytic, use = optimal_period_with_prediction(ppl)
+    assert use
+    w_sim = simulated_waste(n, 0.85, 0.82, t, ThresholdTrust(beta_lim(ppl)))
+    assert w_sim == pytest.approx(w_analytic, abs=0.02)
+
+
+@pytest.mark.slow
+def test_prediction_beats_rfo_in_simulation():
+    """OptimalPrediction < RFO measured waste (paper Tables 3-5 direction)."""
+    n = 2**19
+    plat = Platform(mu=MU_IND / n, c=600.0, d=60.0, r=600.0)
+    ppl = PredictedPlatform(plat, Predictor(0.85, 0.82), 600.0)
+    t_pred_, _, _ = optimal_period_with_prediction(ppl)
+    w_pred = simulated_waste(n, 0.85, 0.82, t_pred_,
+                             ThresholdTrust(beta_lim(ppl)))
+    w_rfo = simulated_waste(n, 0.85, 0.82, t_rfo(plat), NeverTrust())
+    assert w_pred < w_rfo

@@ -1,0 +1,106 @@
+"""Trace generation: renewal processes, superposition, recall/precision."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.traces import (FALSE_PRED, FAULT_PRED, FAULT_UNPRED,
+                               Empirical, Exponential, LogNormalDist,
+                               UniformDist, Weibull, lanl_like_log,
+                               make_event_trace, renewal_trace,
+                               superposed_trace)
+
+
+@pytest.mark.parametrize("dist", [
+    Exponential(100.0), Weibull(0.7, 100.0), Weibull(0.5, 100.0),
+    UniformDist(100.0), LogNormalDist(1.0, 100.0),
+])
+def test_distribution_means(dist):
+    rng = np.random.default_rng(0)
+    s = dist.sample(rng, 200_000)
+    assert s.mean() == pytest.approx(100.0, rel=0.05)
+    assert (s >= 0).all()
+
+
+@pytest.mark.parametrize("dist", [
+    Exponential(123.0), Weibull(0.7, 123.0), UniformDist(123.0),
+])
+def test_rescaled(dist):
+    r = dist.rescaled(42.0)
+    rng = np.random.default_rng(1)
+    assert r.sample(rng, 100_000).mean() == pytest.approx(42.0, rel=0.05)
+
+
+def test_renewal_trace_rate():
+    rng = np.random.default_rng(2)
+    t = renewal_trace(Exponential(10.0), 100_000.0, rng)
+    assert len(t) == pytest.approx(10_000, rel=0.05)
+    assert (np.diff(t) > 0).all()
+    assert t[-1] < 100_000.0
+
+
+@given(st.integers(2, 64))
+@settings(max_examples=10, deadline=None)
+def test_superposition_mtbf(n):
+    """Paper Prop. 2 empirically: N streams of mean mu_ind -> rate N/mu_ind."""
+    rng = np.random.default_rng(3)
+    mu_ind = 1000.0
+    horizon = 50_000.0
+    t = superposed_trace(Weibull(0.7, mu_ind), n, horizon, rng)
+    expected = horizon * n / mu_ind
+    assert len(t) == pytest.approx(expected, rel=0.25)
+    assert (np.diff(t) >= 0).all()
+
+
+def test_event_trace_composition():
+    rng = np.random.default_rng(4)
+    mu, r, p = 100.0, 0.85, 0.4
+    tr = make_event_trace(Exponential(1.0), mu, r, p, horizon=200_000.0,
+                          rng=rng)
+    kinds = tr.kinds
+    n_faults = int((kinds != FALSE_PRED).sum())
+    n_pred_faults = int((kinds == FAULT_PRED).sum())
+    n_false = int((kinds == FALSE_PRED).sum())
+    # Fault rate ~ 1/mu.
+    assert n_faults == pytest.approx(200_000 / mu, rel=0.1)
+    # Recall: fraction of faults predicted.
+    assert n_pred_faults / n_faults == pytest.approx(r, abs=0.03)
+    # Precision: true predictions / all predictions.
+    assert n_pred_faults / (n_pred_faults + n_false) == pytest.approx(
+        p, abs=0.03)
+    assert tr.empirical_mtbf() == pytest.approx(mu, rel=0.1)
+    # Times sorted.
+    assert (np.diff(tr.times) >= 0).all()
+
+
+def test_event_trace_no_false_preds_when_precision_1():
+    rng = np.random.default_rng(5)
+    tr = make_event_trace(Exponential(1.0), 100.0, 0.9, 1.0, 50_000.0, rng)
+    assert int((tr.kinds == FALSE_PRED).sum()) == 0
+
+
+def test_event_trace_superposed_matches_platform_rate():
+    rng = np.random.default_rng(6)
+    tr = make_event_trace(Weibull(0.7, 1.0), 100.0, 0.0, 1.0, 100_000.0,
+                          rng, n_processors=32)
+    assert tr.n_faults == pytest.approx(1000, rel=0.15)
+
+
+def test_empirical_distribution():
+    emp = Empirical(tuple(float(x) for x in range(1, 101)))
+    assert emp.mean == pytest.approx(50.5)
+    r = emp.rescaled(101.0)
+    assert r.mean == pytest.approx(101.0)
+    rng = np.random.default_rng(7)
+    s = emp.sample(rng, 10_000)
+    assert set(np.unique(s)).issubset(set(float(x) for x in range(1, 101)))
+
+
+def test_lanl_like_log():
+    rng = np.random.default_rng(8)
+    emp = lanl_like_log(rng, n_intervals=3010, mu_ind_days=691.0)
+    assert len(emp.samples) == 3010
+    assert emp.mean == pytest.approx(691.0 * 86400.0, rel=0.2)
+    assert min(emp.samples) >= 60.0

@@ -1,0 +1,112 @@
+"""Paper §3: first-order waste model, periods, exact Exponential optimum."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.waste import (ALPHA_CAP, Platform, clamp_period,
+                              expected_makespan_exponential,
+                              expected_makespan_first_order, lambert_w,
+                              platform_mtbf, t_daly, t_exact_exponential,
+                              t_rfo, t_young, waste, waste_fault, waste_ff)
+
+MU_IND = 125.0 * 365.0 * 86400.0  # paper: 125-year individual MTBF
+
+
+def plat(n: int, c=600.0, d=60.0, r=600.0) -> Platform:
+    return Platform(mu=platform_mtbf(MU_IND, n), c=c, d=d, r=r)
+
+
+# Paper Table 2 rows: N -> (Young, Daly, RFO, Optimal), seconds.
+TABLE2 = {
+    2**10: (68567, 68573, 67961, 68240),
+    2**12: (34584, 34595, 33972, 34189),
+    2**14: (17592, 17615, 16968, 17194),
+    2**16: (9096, 9142, 8449, 8701),
+    2**18: (4848, 4940, 4154, 4458),
+    2**19: (3604, 3733, 2869, 3218),
+}
+
+
+@pytest.mark.parametrize("n", sorted(TABLE2))
+def test_table2_periods(n):
+    """Young/Daly/RFO/exact periods reproduce paper Table 2 (0.1% tol)."""
+    p = plat(n)
+    young, daly, rfo, opt = TABLE2[n]
+    assert t_young(p) == pytest.approx(young, rel=1e-3)
+    assert t_daly(p) == pytest.approx(daly, rel=1e-3)
+    assert t_rfo(p) == pytest.approx(rfo, rel=1e-3)
+    assert t_exact_exponential(p) == pytest.approx(opt, rel=2e-2)
+
+
+def test_table2_error_pattern():
+    """Young/Daly overestimate the optimum, RFO underestimates (paper §3)."""
+    for n in TABLE2:
+        p = plat(n)
+        opt = t_exact_exponential(p)
+        assert t_young(p) > opt
+        assert t_daly(p) > opt
+        assert t_rfo(p) < opt
+
+
+def test_waste_composition():
+    p = plat(2**16)
+    t = t_rfo(p)
+    wff, wf = waste_ff(t, p.c), waste_fault(t, p)
+    assert waste(t, p) == pytest.approx(wff + wf - wff * wf)
+
+
+def test_waste_ff_requires_c_le_t():
+    with pytest.raises(ValueError):
+        waste_ff(10.0, 600.0)
+
+
+@given(st.integers(min_value=2**8, max_value=2**20))
+@settings(max_examples=30, deadline=None)
+def test_rfo_minimizes_waste(n):
+    """T_RFO is the argmin of the first-order waste (convexity, Eq. 12)."""
+    p = plat(n)
+    t0 = t_rfo(p)
+    w0 = waste(t0, p)
+    for f in (0.5, 0.8, 0.95, 1.05, 1.25, 2.0):
+        t = max(p.c, t0 * f)
+        assert waste(t, p) >= w0 - 1e-12
+
+
+@given(st.floats(min_value=-0.36, max_value=50.0))
+@settings(max_examples=200, deadline=None)
+def test_lambert_w_identity(z):
+    w = lambert_w(z)
+    assert w * math.exp(w) == pytest.approx(z, abs=1e-9, rel=1e-9)
+
+
+def test_exact_exponential_is_optimal():
+    """The Lambert-W period beats its neighbourhood on the exact makespan."""
+    p = plat(2**16)
+    t0 = t_exact_exponential(p)
+    m0 = expected_makespan_exponential(t0, 7200.0, p)
+    for f in (0.9, 0.95, 1.05, 1.1):
+        assert expected_makespan_exponential(t0 * f, 7200.0, p) >= m0
+
+
+def test_clamp_period():
+    p = plat(2**19)
+    assert clamp_period(1.0, p) == p.c
+    assert clamp_period(1e9, p, enforce_cap=True) == ALPHA_CAP * p.mu
+    assert clamp_period(1e9, p) == 1e9  # uncapped by default (paper §3 end)
+
+
+def test_first_order_makespan_monotone_in_waste():
+    p = plat(2**16)
+    t = t_rfo(p)
+    assert expected_makespan_first_order(t, 1e6, p) > 1e6
+
+
+def test_platform_mtbf_scaling():
+    """Prop. 2: platform MTBF scales as mu_ind / N."""
+    assert platform_mtbf(100.0, 4) == 25.0
+    with pytest.raises(ValueError):
+        platform_mtbf(100.0, 0)
+    with pytest.raises(ValueError):
+        platform_mtbf(-1.0, 4)
