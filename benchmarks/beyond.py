@@ -19,81 +19,51 @@ with mu replaced by 1/h(t).  With a predictor, the same substitution
 extends OptimalPrediction: T(t) = sqrt(2 C / ((1-r) h(t))) with the
 Theorem-1 trust rule unchanged (beta_lim does not depend on mu).
 
-This module measures static RFO / OptimalPrediction vs their dynamic
-counterparts on the paper's Weibull settings.  The simulator accepts a
-callable period (evaluated at each period start).
+The dynamic strategies are registered (``dynamic_rfo`` /
+``dynamic_prediction``, implemented by
+:class:`repro.experiments.registry.HazardPeriod`); they read the Weibull
+shape from the scenario's fault distribution, so a single
+:class:`ExperimentSpec` sweeping ``dist.params.shape`` compares static and
+hazard-tracking periods cell by cell.
 """
 
 from __future__ import annotations
 
-import math
-
-import numpy as np
-
-from repro.core.prediction import beta_lim, optimal_period_with_prediction
-from repro.core.simulator import NeverTrust, ThresholdTrust, simulate
-from repro.core.traces import Weibull
-from repro.core.waste import t_rfo
-
-from .common import PREDICTORS, SECONDS_PER_DAY, Scenario
+from repro.experiments import (DistributionSpec, ExperimentSpec, ScenarioSpec,
+                               StrategySpec, SweepSpec, register_experiment,
+                               run_experiment)
 
 
-def aggregate_hazard(n: int, shape: float, mu_ind: float, t: float) -> float:
-    """h(t) for N superposed fresh Weibull(shape) processors."""
-    lam = mu_ind / math.gamma(1.0 + 1.0 / shape)
-    t = max(t, 1.0)
-    return n * (shape / lam) * (t / lam) ** (shape - 1.0)
-
-
-def dynamic_period(sc: Scenario, shape: float, recall: float = 0.0,
-                   floor_mult: float = 1.0):
-    """T(t) = sqrt(2 C / ((1-r) h(t_cal))) with t_cal = job start + t."""
-    c = sc.c
-
-    def period(t: float) -> float:
-        h = aggregate_hazard(sc.n, shape, sc.mu_ind, sc.start + t)
-        mu_eff = 1.0 / max(h, 1e-12)
-        t_opt = math.sqrt(2.0 * mu_eff * c / max(1.0 - recall, 1e-6))
-        return max(floor_mult * c, t_opt)
-
-    return period
-
-
-def run_cell(sc: Scenario, shape: float, n_runs: int) -> dict:
-    traces = sc.traces(n_runs)
-    plat = sc.platform
-    pp = sc.pp
-    t_static = t_rfo(plat)
-    t_pred, _, use = optimal_period_with_prediction(pp)
-    bl = beta_lim(pp)
-    strategies = {
-        "RFO": (t_static, NeverTrust()),
-        "DynamicRFO": (dynamic_period(sc, shape), NeverTrust()),
-        "OptimalPrediction": (t_pred, ThresholdTrust(bl) if use
-                              else NeverTrust()),
-        "DynamicPrediction": (
-            dynamic_period(sc, shape, recall=pp.predictor.recall),
-            ThresholdTrust(bl)),
-    }
-    out = {}
-    for name, (period, trust) in strategies.items():
-        tot = 0.0
-        for i, tr in enumerate(traces):
-            res = simulate(tr, plat, sc.time_base, period, cp=pp.cp,
-                           trust=trust, rng=np.random.default_rng(i))
-            tot += res.makespan
-        out[name] = tot / len(traces) / SECONDS_PER_DAY
-    return out
+@register_experiment("beyond", "Beyond the paper: hazard-aware dynamic "
+                               "periods vs static RFO/OptimalPrediction")
+def experiment(quick: bool = True) -> ExperimentSpec:
+    return ExperimentSpec(
+        name="beyond",
+        description="Static vs hazard-tracking periods on Weibull faults",
+        scenario=ScenarioSpec(dist=DistributionSpec("weibull", {"shape": 0.7}),
+                              n_traces=5 if quick else 30),
+        sweep=SweepSpec(
+            axes={"dist.params.shape": [0.5, 0.7],
+                  "n": [2 ** 16, 2 ** 19]},
+            names={"dist.params.shape": "shape"}),
+        strategies=(StrategySpec("rfo"),
+                    StrategySpec("dynamic_rfo"),
+                    StrategySpec("optimal_prediction"),
+                    StrategySpec("dynamic_prediction")),
+        metrics=("makespan_days",),
+    )
 
 
 def run(quick: bool = True) -> list[dict]:
-    n_runs = 5 if quick else 30
+    exp = experiment(quick)
+    shapes = list(exp.sweep.axes["dist.params.shape"])
+    n_exps = [int(n).bit_length() - 1 for n in exp.sweep.axes["n"]]
+    table = run_experiment(exp)
     rows = []
-    for shape in (0.5, 0.7):
-        for n_exp in (16, 19):
-            sc = Scenario(n=2 ** n_exp, dist=Weibull(shape, 1.0),
-                          predictor=PREDICTORS["good"])
-            res = run_cell(sc, shape, n_runs)
+    for shape in shapes:
+        for n_exp in n_exps:
+            res = table.strategy_dict("makespan_days", shape=shape,
+                                      n=2 ** n_exp)
             gain_rfo = 100 * (1 - res["DynamicRFO"] / res["RFO"])
             gain_pred = 100 * (1 - res["DynamicPrediction"]
                                / res["OptimalPrediction"])

@@ -1,116 +1,46 @@
-"""Shared benchmark utilities: paper parameter sets + experiment drivers."""
+"""Shared benchmark utilities on top of :mod:`repro.experiments`.
+
+Benchmarks declare their scenarios/sweeps as :class:`ExperimentSpec`s (each
+module registers its experiment with ``@register_experiment``, so
+``python -m benchmarks.run --list`` enumerates them) and evaluate through
+the batched runner.  This module keeps only the paper parameter sets and
+small table/printing helpers shared across scripts.
+"""
 
 from __future__ import annotations
 
-import dataclasses
-import math
 import sys
-import time
 
-import numpy as np
+from repro.experiments import (MU_IND_SYNTH, SECONDS_PER_DAY, PREDICTORS,
+                               StrategySpec)
 
-from repro.core.policies import (Strategy, best_period, daly, evaluate,
-                                 inexact_prediction, optimal_prediction, rfo,
-                                 young)
-from repro.core.prediction import PredictedPlatform, Predictor
-from repro.core.traces import (Distribution, Exponential, UniformDist,
-                               Weibull, lanl_like_log, make_event_trace)
-from repro.core.waste import Platform
+__all__ = [
+    "MU_IND_SYNTH",
+    "SECONDS_PER_DAY",
+    "PREDICTORS",
+    "CP_SCENARIOS",
+    "STANDARD_STRATEGIES",
+    "predictor_axis",
+    "gain",
+    "print_table",
+]
 
-MU_IND_SYNTH = 125.0 * 365.0 * 86400.0     # paper §5.1, 125 years
-PREDICTORS = {
-    "good": Predictor(recall=0.85, precision=0.82),   # Yu et al. [7]
-    "fair": Predictor(recall=0.70, precision=0.40),   # Zheng et al. [8]
-}
+# Proactive checkpoint cost scenarios C_p = ratio * C (paper §5.2 / Fig. 10-11).
 CP_SCENARIOS = {"equal": 1.0, "cheap": 0.1, "expensive": 2.0}
 
-SECONDS_PER_DAY = 86400.0
+# The five heuristics compared throughout §5 (paper Tables 3-7).
+STANDARD_STRATEGIES = (
+    StrategySpec("young"),
+    StrategySpec("daly"),
+    StrategySpec("rfo"),
+    StrategySpec("optimal_prediction"),
+    StrategySpec("inexact_prediction"),   # 2C uncertainty window (paper §5.1)
+)
 
 
-@dataclasses.dataclass
-class Scenario:
-    """One experiment cell: platform x predictor x distribution."""
-
-    n: int
-    dist: Distribution
-    predictor: Predictor
-    cp_ratio: float = 1.0
-    c: float = 600.0
-    r: float = 600.0
-    d: float = 60.0
-    mu_ind: float = MU_IND_SYNTH
-    time_base_years_total: float = 10_000.0   # paper: 10000 years / N
-    false_pred_dist: Distribution | None = None
-    # Paper §5.1: faults are the superposition of per-processor renewal
-    # streams (this, not the marginal law, is what makes Weibull k<1 hurt:
-    # fresh processors burn in together), and the job starts one year into
-    # the trace to avoid the synchronized-start artifact.
-    per_processor: bool = True
-    procs_per_stream: int = 1      # log-based traces: 4-processor nodes
-    start: float = 365.0 * SECONDS_PER_DAY
-
-    @property
-    def mu(self) -> float:
-        return self.mu_ind / self.n
-
-    @property
-    def platform(self) -> Platform:
-        return Platform(mu=self.mu, c=self.c, d=self.d, r=self.r)
-
-    @property
-    def pp(self) -> PredictedPlatform:
-        return PredictedPlatform(self.platform, self.predictor,
-                                 cp=self.cp_ratio * self.c)
-
-    @property
-    def time_base(self) -> float:
-        return self.time_base_years_total * 365.0 * SECONDS_PER_DAY / self.n
-
-    def traces(self, n_runs: int, seed: int = 0):
-        from repro.core.traces import EventTrace
-        out = []
-        n_streams = max(1, self.n // self.procs_per_stream) \
-            if self.per_processor else None
-        for i in range(n_runs):
-            rng = np.random.default_rng(seed + 1009 * i)
-            horizon = self.start \
-                + max(60.0 * self.time_base, 50.0 * self.mu)
-            tr = make_event_trace(
-                self.dist, self.mu, self.predictor.recall,
-                self.predictor.precision, horizon, rng,
-                false_pred_dist=self.false_pred_dist,
-                n_processors=n_streams)
-            # Shift so the job starts `start` seconds into the trace.
-            sel = tr.times >= self.start
-            out.append(EventTrace(tr.times[sel] - self.start,
-                                  tr.kinds[sel], horizon - self.start))
-        return out
-
-
-def standard_strategies(sc: Scenario) -> list[Strategy]:
-    return [
-        young(sc.platform),
-        daly(sc.platform),
-        rfo(sc.platform),
-        optimal_prediction(sc.pp),
-        inexact_prediction(sc.pp),   # 2C uncertainty window (paper §5.1)
-    ]
-
-
-def run_scenario(sc: Scenario, n_runs: int = 10, seed: int = 0,
-                 with_best_period: bool = False) -> dict[str, float]:
-    """Average makespans (in days) of the standard strategies."""
-    traces = sc.traces(n_runs, seed)
-    out: dict[str, float] = {}
-    for strat in standard_strategies(sc):
-        m = evaluate(strat, traces, sc.platform, sc.time_base,
-                     sc.pp.cp, seed=seed)
-        out[strat.name] = m / SECONDS_PER_DAY
-        if with_best_period and strat.name in ("RFO", "OptimalPrediction"):
-            refined, mbest = best_period(strat, traces, sc.platform,
-                                         sc.time_base, sc.pp.cp, seed=seed)
-            out[refined.name] = mbest / SECONDS_PER_DAY
-    return out
+def predictor_axis(names: tuple[str, ...] = ("good", "fair")):
+    """(axis values, labels) for a ``"recall,precision"`` sweep axis."""
+    return [PREDICTORS[n] for n in names], list(names)
 
 
 def gain(row: dict[str, float], name: str, base: str = "RFO") -> float:

@@ -1,17 +1,20 @@
 """Paper Tables 3-5: job execution times under the five heuristics.
 
 Grid: {Exponential, Weibull k=0.7, Weibull k=0.5} x {2^16, 2^19 processors}
-x {good, fair} predictors, C_p = C.  Reports execution time in days and the
+x {good, fair} predictors, C_p = C — one :class:`ExperimentSpec` with a
+cartesian sweep, evaluated by the batched runner (one trace bank per cell,
+shared across the five strategies).  Reports execution time in days and the
 gain of OptimalPrediction / InexactPrediction over RFO, next to the paper's
-numbers.  ``--quick`` trims the trace count (the paper averages 100 runs;
+numbers.  Quick mode trims the trace count (the paper averages 100 runs;
 the trend, not the third digit, is the reproduction target).
 """
 
 from __future__ import annotations
 
-from repro.core.traces import Exponential, Weibull
+from repro.experiments import (DistributionSpec, ExperimentSpec, ScenarioSpec,
+                               SweepSpec, register_experiment, run_experiment)
 
-from .common import PREDICTORS, Scenario, gain, run_scenario
+from .common import STANDARD_STRATEGIES, gain, predictor_axis
 
 # Paper values (days): {(dist, n_exp, predictor): {strategy: days}}
 PAPER = {
@@ -33,21 +36,42 @@ PAPER = {
 }
 
 DISTS = {
-    "exp": lambda: Exponential(1.0),
-    "w07": lambda: Weibull(0.7, 1.0),
-    "w05": lambda: Weibull(0.5, 1.0),
+    "exp": DistributionSpec("exponential"),
+    "w07": DistributionSpec("weibull", {"shape": 0.7}),
+    "w05": DistributionSpec("weibull", {"shape": 0.5}),
 }
+N_EXPS = [16, 19]
+
+
+@register_experiment("exec_times", "Tables 3-5: execution times of the five "
+                                   "heuristics over dist x predictor x N")
+def experiment(quick: bool = True) -> ExperimentSpec:
+    preds, pred_names = predictor_axis()
+    return ExperimentSpec(
+        name="exec_times",
+        description="Execution time (days) of the paper's five heuristics",
+        scenario=ScenarioSpec(n_traces=5 if quick else 40),
+        sweep=SweepSpec(
+            axes={"dist": list(DISTS.values()),
+                  "recall,precision": preds,
+                  "n": [2 ** k for k in N_EXPS]},
+            labels={"dist": list(DISTS), "recall,precision": pred_names},
+            names={"recall,precision": "predictor"}),
+        strategies=STANDARD_STRATEGIES,
+        metrics=("makespan_days",),
+    )
 
 
 def run(quick: bool = True) -> list[dict]:
-    n_runs = 5 if quick else 40
-    n_exps = [16, 19]
+    _, pred_names = predictor_axis()
+    table = run_experiment(experiment(quick))
     rows = []
-    for dist_name, dist_fn in DISTS.items():
-        for pred_name, pred in PREDICTORS.items():
-            for n_exp in n_exps:
-                sc = Scenario(n=2 ** n_exp, dist=dist_fn(), predictor=pred)
-                res = run_scenario(sc, n_runs=n_runs)
+    for dist_name in DISTS:
+        for pred_name in pred_names:
+            for n_exp in N_EXPS:
+                res = table.strategy_dict(
+                    "makespan_days", dist=dist_name, predictor=pred_name,
+                    n=2 ** n_exp)
                 row = {
                     "dist": dist_name, "N": f"2^{n_exp}",
                     "predictor": pred_name,
@@ -69,7 +93,7 @@ def run(quick: bool = True) -> list[dict]:
     # and with distance from Exponential.
     by = {(r["dist"], r["N"], r["predictor"]): r for r in rows}
     for d in DISTS:
-        for p in PREDICTORS:
+        for p in pred_names:
             assert by[(d, "2^19", p)]["gain_opt_pct"] > 0
             assert by[(d, "2^19", p)]["gain_opt_pct"] \
                 >= by[(d, "2^16", p)]["gain_opt_pct"] - 3.0

@@ -3,18 +3,20 @@
 The Failure Trace Archive files are offline-unavailable; per DESIGN.md §7 we
 reproduce the *mechanism*: an empirical discrete distribution over
 availability intervals (synthesized once to match the published LANL
-per-processor MTBF and interval counts), resampled per 4-processor node and
+per-processor MTBF and interval counts; the registered ``lanl`` distribution
+is deterministic in its seed), resampled per 4-processor node and
 superposed.  Parameters follow the paper: C = R = 60 s, D = 6 s, false
-predictions uniform, TIME_base = 250 years / N.
+predictions uniform, TIME_base = 250 years / N.  The two logs sweep as one
+compound axis (``dist,mu_ind``): each log pairs its interval set with its
+published per-processor MTBF.
 """
 
 from __future__ import annotations
 
-import numpy as np
+from repro.experiments import (DistributionSpec, ExperimentSpec, ScenarioSpec,
+                               SweepSpec, register_experiment, run_experiment)
 
-from repro.core.traces import UniformDist, lanl_like_log
-
-from .common import PREDICTORS, Scenario, gain, run_scenario
+from .common import STANDARD_STRATEGIES, gain, predictor_axis
 
 LOGS = {
     "LANL18": dict(n_intervals=3010, mu_ind_days=691.0),
@@ -34,22 +36,49 @@ PAPER = {
 }
 
 
-def run(quick: bool = True) -> list[dict]:
-    n_runs = 4 if quick else 20
+def _log_axis() -> list[tuple[DistributionSpec, float]]:
+    """(empirical log distribution, per-processor MTBF in s) per LANL log."""
+    return [(DistributionSpec("lanl", dict(seed=42, **kw)),
+             kw["mu_ind_days"] * 86400.0)
+            for kw in LOGS.values()]
+
+
+@register_experiment("log_traces", "Tables 6-7: LANL-like log-based failure "
+                                   "traces, 4-processor nodes")
+def experiment(quick: bool = True) -> ExperimentSpec:
+    preds, pred_names = predictor_axis()
     n_exps = [14] if quick else [10, 12, 14, 16, 17]
+    return ExperimentSpec(
+        name="log_traces",
+        description="Execution time on empirical (LANL-like) interval logs",
+        scenario=ScenarioSpec(c=60.0, r=60.0, d=6.0,
+                              time_base_years_total=250.0,
+                              false_pred_dist=DistributionSpec("uniform"),
+                              procs_per_stream=4,
+                              n_traces=4 if quick else 20),
+        sweep=SweepSpec(
+            axes={"dist,mu_ind": _log_axis(),
+                  "recall,precision": preds,
+                  "n": [2 ** k for k in n_exps]},
+            labels={"dist,mu_ind": list(LOGS),
+                    "recall,precision": pred_names},
+            names={"dist,mu_ind": "log", "recall,precision": "predictor"}),
+        strategies=STANDARD_STRATEGIES,
+        metrics=("makespan_days",),
+    )
+
+
+def run(quick: bool = True) -> list[dict]:
+    _, pred_names = predictor_axis()
+    exp = experiment(quick)
+    n_exps = [int(n).bit_length() - 1 for n in exp.sweep.axes["n"]]
+    table = run_experiment(exp)
     rows = []
-    for log_name, log_kw in LOGS.items():
-        emp = lanl_like_log(np.random.default_rng(42), **log_kw)
-        for pred_name, pred in PREDICTORS.items():
+    for log_name in LOGS:
+        for pred_name in pred_names:
             for n_exp in n_exps:
-                sc = Scenario(
-                    n=2 ** n_exp, dist=emp, predictor=pred,
-                    c=60.0, r=60.0, d=6.0,
-                    mu_ind=log_kw["mu_ind_days"] * 86400.0,
-                    time_base_years_total=250.0,
-                    false_pred_dist=UniformDist(1.0),
-                    procs_per_stream=4)  # 4-processor nodes (paper §5.1)
-                res = run_scenario(sc, n_runs=n_runs)
+                res = table.strategy_dict("makespan_days", log=log_name,
+                                          predictor=pred_name, n=2 ** n_exp)
                 row = {"log": log_name, "predictor": pred_name,
                        "N": f"2^{n_exp}",
                        **{k: round(v, 2) for k, v in res.items()},

@@ -6,55 +6,75 @@ parameters: level-1 = in-HBM buddy copy (C1 ~ seconds), level-2 = durable
 object-store write (C2 ~ minutes), soft-fault fraction phi = share of
 failures survivable without losing device memory (preemptions, software
 crashes — production incident reports put this at 60-85%).
+
+The grid is declared as an :class:`ExperimentSpec` (``extras.phi`` carries
+the workload-specific knob); the two-level engine is its own simulator, so
+the spec drives scenario construction/sweeping while evaluation stays with
+``simulate_two_level``.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core.multilevel import (TwoLevelPlatform, optimal_two_level,
-                                   simulate_two_level)
-from repro.core.simulator import NeverTrust, simulate
-from repro.core.traces import EventTrace
-from repro.core.waste import Platform, t_rfo, waste
+from repro.core.multilevel import TwoLevelPlatform, optimal_two_level, \
+    simulate_two_level
+from repro.core.waste import t_rfo, waste
+from repro.experiments import (DistributionSpec, ExperimentSpec, ScenarioSpec,
+                               SweepSpec, register_experiment)
 
-MU_IND = 125.0 * 365.0 * 86400.0
+
+@register_experiment("multilevel", "Beyond the paper: two-level checkpointing "
+                                   "(custom engine; run via --only multilevel)")
+def experiment(quick: bool = True) -> ExperimentSpec:
+    return ExperimentSpec(
+        name="multilevel",
+        description="Single-level RFO vs optimal two-level checkpointing",
+        scenario=ScenarioSpec(dist=DistributionSpec("exponential"),
+                              c=600.0, d=60.0, r=600.0,
+                              extras={"phi": 0.6, "c1": 30.0, "r1": 30.0},
+                              n_traces=6 if quick else 30),
+        sweep=SweepSpec(axes={"n": [2 ** 16, 2 ** 18, 2 ** 19],
+                              "extras.phi": [0.6, 0.8]},
+                        names={"extras.phi": "phi"}),
+        strategies=(),  # evaluated by the two-level engine below
+        metrics=(),
+    )
 
 
 def run(quick: bool = True) -> list[dict]:
-    n_runs = 6 if quick else 30
+    exp = experiment(quick)
     rows = []
     print("| N | phi | single waste | two-level waste | k* | T1* | "
           "sim 2-level |")
-    for n_exp in (16, 18, 19):
-        n = 2 ** n_exp
-        mu = MU_IND / n
-        for phi in (0.6, 0.8):
-            p1 = Platform(mu=mu, c=600.0, d=60.0, r=600.0)
-            p2 = TwoLevelPlatform(mu=mu, phi=phi, c1=30.0, c2=600.0,
-                                  r1=30.0, r2=600.0, d=60.0)
-            w1 = waste(t_rfo(p1), p1)
-            t1, k, w2 = optimal_two_level(p2)
-            # Simulation check.
-            sims = []
-            time_base = 10_000 * 365 * 86400 / n
-            for seed in range(n_runs):
-                r = np.random.default_rng(seed)
-                need = int(5 * time_base / mu) + 50
-                faults = np.cumsum(r.exponential(mu, size=need))
-                soft = r.random(len(faults)) < phi
-                sims.append(simulate_two_level(
-                    faults, soft, p2, time_base, t1, k).waste)
-            row = {"N": f"2^{n_exp}", "phi": phi,
-                   "waste_single": round(w1, 4),
-                   "waste_two_level": round(w2, 4),
-                   "k_star": k, "t1_star": round(t1, 0),
-                   "waste_sim": round(float(np.mean(sims)), 4),
-                   "gain_pct": round(100 * (1 - w2 / w1), 1)}
-            rows.append(row)
-            print(f"| 2^{n_exp} | {phi} | {w1:.4f} | {w2:.4f} | {k} | "
-                  f"{t1:.0f} | {np.mean(sims):.4f} |", flush=True)
-            assert w2 < w1  # hierarchy must help with soft faults
+    for cols, cell in exp.cells():
+        phi = cell.extras["phi"]
+        p1 = cell.platform
+        p2 = TwoLevelPlatform(mu=cell.mu, phi=phi,
+                              c1=cell.extras["c1"], c2=cell.c,
+                              r1=cell.extras["r1"], r2=cell.r, d=cell.d)
+        w1 = waste(t_rfo(p1), p1)
+        t1, k, w2 = optimal_two_level(p2)
+        # Simulation check (Exponential faults, soft with probability phi).
+        sims = []
+        for seed in range(cell.n_traces):
+            r = np.random.default_rng(seed)
+            need = int(5 * cell.time_base / cell.mu) + 50
+            faults = np.cumsum(r.exponential(cell.mu, size=need))
+            soft = r.random(len(faults)) < phi
+            sims.append(simulate_two_level(
+                faults, soft, p2, cell.time_base, t1, k).waste)
+        n_exp = cell.n.bit_length() - 1
+        row = {"N": f"2^{n_exp}", "phi": phi,
+               "waste_single": round(w1, 4),
+               "waste_two_level": round(w2, 4),
+               "k_star": k, "t1_star": round(t1, 0),
+               "waste_sim": round(float(np.mean(sims)), 4),
+               "gain_pct": round(100 * (1 - w2 / w1), 1)}
+        rows.append(row)
+        print(f"| 2^{n_exp} | {phi} | {w1:.4f} | {w2:.4f} | {k} | "
+              f"{t1:.0f} | {np.mean(sims):.4f} |", flush=True)
+        assert w2 < w1  # hierarchy must help with soft faults
     print("multilevel: two-level checkpointing verified")
     return rows
 

@@ -1,40 +1,55 @@
 """Paper §5.4 / Figures 6-9: recall matters more than precision.
 
 Weibull k=0.7 faults, N in {2^16, 2^19}, C_p = C.  Sweep precision at fixed
-recall (Figs 6-7) and recall at fixed precision (Figs 8-9); assert the
+recall (Figs 6-7) and recall at fixed precision (Figs 8-9) — each direction
+is one :class:`ExperimentSpec` with a single predictor axis — and assert the
 paper's headline: the waste is far more sensitive to recall than precision.
 """
 
 from __future__ import annotations
 
-import numpy as np
-
-from repro.core.policies import evaluate, optimal_prediction
-from repro.core.prediction import Predictor
-from repro.core.traces import Weibull
-
-from .common import Scenario
+from repro.experiments import (DistributionSpec, ExperimentSpec, ScenarioSpec,
+                               StrategySpec, SweepSpec, register_experiment,
+                               run_experiment)
 
 
-def waste_at(n: int, recall: float, precision: float, n_runs: int) -> float:
-    sc = Scenario(n=n, dist=Weibull(0.7, 1.0),
-                  predictor=Predictor(recall, precision))
-    traces = sc.traces(n_runs)
-    strat = optimal_prediction(sc.pp)
-    m = evaluate(strat, traces, sc.platform, sc.time_base, sc.pp.cp)
-    return 1.0 - sc.time_base / m
+@register_experiment("recall_precision", "Figures 6-9: OptimalPrediction "
+                                         "waste vs predictor recall/precision")
+def experiment(quick: bool = True, n: int = 2 ** 16, fixed: float = 0.8,
+               axis: str = "precision") -> ExperimentSpec:
+    """Sweep one predictor axis (``precision`` or ``recall``) with the other
+    held at ``fixed``."""
+    if axis not in ("precision", "recall"):
+        raise ValueError(f"axis must be 'precision' or 'recall', got {axis!r}")
+    other = "recall" if axis == "precision" else "precision"
+    sweep_vals = [0.3, 0.5, 0.7, 0.9] if quick else \
+        [0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9, 0.99]
+    return ExperimentSpec(
+        name=f"recall_precision[{axis}@{other}={fixed:g}]",
+        description="Waste sensitivity to one predictor axis",
+        scenario=ScenarioSpec(
+            n=n, dist=DistributionSpec("weibull", {"shape": 0.7}),
+            n_traces=4 if quick else 20,
+            **{other: fixed}),
+        sweep=SweepSpec(axes={axis: sweep_vals}),
+        strategies=(StrategySpec("optimal_prediction"),),
+        metrics=("waste",),
+    )
 
 
 def run(quick: bool = True) -> list[dict]:
-    n_runs = 4 if quick else 20
-    sweep = [0.3, 0.5, 0.7, 0.9] if quick else \
-        [0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9, 0.99]
     ns = [2 ** 16] if quick else [2 ** 16, 2 ** 19]
     rows = []
     for n in ns:
         for fixed in (0.4, 0.8):
-            w_p = [waste_at(n, fixed, p, n_runs) for p in sweep]  # r fixed
-            w_r = [waste_at(n, r, fixed, n_runs) for r in sweep]  # p fixed
+            tables = {
+                axis: run_experiment(experiment(quick, n=n, fixed=fixed,
+                                                axis=axis))
+                for axis in ("precision", "recall")
+            }
+            sweep = [r["precision"] for r in tables["precision"]]
+            w_p = tables["precision"].column("waste")   # recall fixed
+            w_r = tables["recall"].column("waste")      # precision fixed
             spread_p = max(w_p) - min(w_p)
             spread_r = max(w_r) - min(w_r)
             rows.append({"N": n, "fixed": fixed,

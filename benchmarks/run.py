@@ -1,9 +1,26 @@
-"""Benchmark entry point: one benchmark per paper table/figure.
+"""Registry-driven benchmark entry point.
 
+    PYTHONPATH=src python -m benchmarks.run --list
+    PYTHONPATH=src python -m benchmarks.run --experiment exec_times \\
+        --set n=[65536] --set "recall,precision=[(0.9,0.8)]" --traces 8
     PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
 
-Default is quick mode (few traces per cell — the paper's qualitative claims
-are still asserted); ``--full`` approaches the paper's 100-run averaging.
+Three modes:
+
+  * ``--list``          enumerate the registered experiments (every
+                        benchmark registers its :class:`ExperimentSpec`
+                        builder on import) and the paper-claim benchmark
+                        suites;
+  * ``--experiment``    build one registered spec, apply ``--set`` overrides
+                        (a sweep-axis name replaces that axis's values, any
+                        other dotted path updates the base scenario), run it
+                        through the batched runner and print/save the tidy
+                        result table;
+  * default             run the paper-claim benchmark suites (each asserts
+                        its table/figure claims).  Quick mode uses few
+                        traces per cell; ``--full`` approaches the paper's
+                        100-run averaging.
+
 The dry-run/roofline benchmarks need 512 placeholder devices and therefore
 run as separate processes (repro.launch.dryrun / benchmarks.roofline); this
 driver reports their saved results if present.
@@ -12,6 +29,8 @@ driver reports their saved results if present.
 from __future__ import annotations
 
 import argparse
+import ast
+import dataclasses
 import json
 import os
 import sys
@@ -45,18 +64,11 @@ def report_roofline(path: str = "roofline_results.json") -> None:
     print(f"[roofline] dominant terms: {by_dom}")
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--full", action="store_true",
-                    help="paper-scale trace counts (slow)")
-    ap.add_argument("--only", default=None,
-                    help="run a single benchmark by name")
-    args = ap.parse_args()
-    quick = not args.full
-
+def _import_benchmarks():
+    """Import every benchmark module so experiments register themselves."""
     from . import (beyond, exec_times, log_traces, multilevel,
                    recall_precision, table2, waste_vs_n)
-    benches = {
+    return {
         "table2": table2.run,
         "exec_times": exec_times.run,
         "waste_vs_n": waste_vs_n.run,
@@ -65,6 +77,124 @@ def main() -> None:
         "beyond": beyond.run,
         "multilevel": multilevel.run,
     }
+
+
+def _parse_set(items: list[str]) -> dict[str, object]:
+    out: dict[str, object] = {}
+    for item in items:
+        key, sep, raw = item.partition("=")
+        if not sep:
+            raise SystemExit(f"--set expects key=value, got {item!r}")
+        try:
+            out[key] = ast.literal_eval(raw)
+        except (ValueError, SyntaxError):
+            out[key] = raw  # bare strings, e.g. --set dist.name=weibull
+    return out
+
+
+def run_one_experiment(name: str, overrides: dict[str, object],
+                       quick: bool, n_traces: int | None, seed: int | None,
+                       workers: int | None, out_path: str | None) -> None:
+    from repro.experiments import build_experiment, run_experiment
+    exp = build_experiment(name, quick=quick)
+    sweep = exp.sweep
+    scenario = exp.scenario
+    def _covering_axis(field: str) -> str | None:
+        # An axis discards a base-scenario override when one of its swept
+        # paths equals the override path or is a prefix of it (the axis
+        # replaces the whole subtree per cell).  An axis on a *deeper* path
+        # (axis "dist.params.shape" vs override "dist.name") merges instead,
+        # so the override survives and is fine.
+        for axis_key in (sweep.axes if sweep else ()):
+            for axis_field in axis_key.split(","):
+                if field == axis_field or field.startswith(axis_field + "."):
+                    return axis_key
+        return None
+
+    for key, value in overrides.items():
+        if sweep is not None and key in sweep.axes:
+            values = list(value) if isinstance(value, (list, tuple)) \
+                else [value]
+            axes = dict(sweep.axes)
+            axes[key] = values
+            labels = {k: v for k, v in sweep.labels.items() if k != key}
+            sweep = dataclasses.replace(sweep, axes=axes, labels=labels)
+        else:
+            covering = next((a for f in key.split(",")
+                             for a in [_covering_axis(f)] if a), None)
+            if covering:
+                raise SystemExit(
+                    f"error: field {key!r} is controlled by sweep axis "
+                    f"{covering!r}; override the axis instead, e.g. "
+                    f"--set '{covering}=[...]'")
+            scenario = scenario.replace(**{key: value})
+    exp = dataclasses.replace(exp, sweep=sweep, scenario=scenario)
+    if not exp.strategies:
+        raise SystemExit(
+            f"experiment {name!r} uses a custom engine; run it with "
+            f"`python -m benchmarks.run --only {name}` instead")
+    print(f"# {exp.name}: {exp.description}", flush=True)
+    table = run_experiment(exp, n_traces=n_traces, seed=seed,
+                           workers=workers, verbose=True)
+    print()
+    print(table.format())
+    if out_path:
+        with open(out_path, "w") as fh:
+            fh.write(table.to_json(indent=1))
+        print(f"\nresults -> {out_path}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale trace counts (slow)")
+    ap.add_argument("--only", default=None,
+                    help="run a single benchmark suite by name")
+    ap.add_argument("--list", action="store_true",
+                    help="list registered experiments and benchmark suites")
+    ap.add_argument("--experiment", default=None, metavar="NAME",
+                    help="run one registered experiment through the runner")
+    ap.add_argument("--set", action="append", default=[], metavar="KEY=VALUE",
+                    help="override a sweep axis or scenario field "
+                         "(dotted paths OK; repeatable)")
+    ap.add_argument("--traces", type=int, default=None,
+                    help="override the number of traces per cell")
+    ap.add_argument("--seed", type=int, default=None,
+                    help="override the evaluation seed")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="process-parallel evaluation workers")
+    ap.add_argument("--out", default=None,
+                    help="write the result table JSON here "
+                         "(default experiment_<name>.json)")
+    args = ap.parse_args()
+    quick = not args.full
+
+    benches = _import_benchmarks()
+
+    if args.list:
+        from repro.experiments import (list_distributions, list_experiments,
+                                       list_strategies)
+        print("registered experiments (run with --experiment NAME):")
+        for name, desc in list_experiments().items():
+            print(f"  {name:20s} {desc}")
+        print("\nbenchmark suites with paper-claim asserts "
+              "(run with --only NAME):")
+        for name in benches:
+            print(f"  {name}")
+        print(f"\nregistered strategies:    {', '.join(list_strategies())}")
+        print(f"registered distributions: {', '.join(list_distributions())}")
+        return
+
+    if args.experiment:
+        out = args.out or f"experiment_{args.experiment}.json"
+        try:
+            run_one_experiment(args.experiment, _parse_set(args.set), quick,
+                               args.traces, args.seed, args.workers, out)
+        except KeyError as e:  # unknown experiment / field: message, not trace
+            raise SystemExit(f"error: {e.args[0]}") from None
+        return
+
     if args.only:
         benches = {args.only: benches[args.only]}
 
@@ -87,5 +217,15 @@ def main() -> None:
     print("\nall benchmarks done -> bench_results.json")
 
 
-if __name__ == "__main__":
+if __name__ == "__main__" and __package__ in (None, ""):
+    # Executed as a script (`python benchmarks/run.py`): put the repo root
+    # and src/ on sys.path, then re-enter through the package so the
+    # benchmark modules' relative imports resolve.
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for _p in (_root, os.path.join(_root, "src")):
+        if _p not in sys.path:
+            sys.path.insert(0, _p)
+    from benchmarks.run import main as _main
+    _main()
+elif __name__ == "__main__":
     main()

@@ -3,13 +3,15 @@
 Pure analysis (no simulation): for N = 2^10..2^19 print Young / Daly / RFO
 periods, their relative deviation from the Lambert-W optimum, and assert the
 paper's qualitative claims (Young/Daly overestimate, RFO underestimates,
-|error| grows with N).
+|error| grows with N).  Declared as an analytic :class:`ExperimentSpec`
+(``n_traces=0``: the runner reports each strategy's period, no simulation).
 """
 
 from __future__ import annotations
 
-from repro.core.waste import (Platform, t_daly, t_exact_exponential, t_rfo,
-                              t_young)
+from repro.experiments import (DistributionSpec, ExperimentSpec, ScenarioSpec,
+                               StrategySpec, SweepSpec, register_experiment,
+                               run_experiment)
 
 from .common import MU_IND_SYNTH
 
@@ -28,7 +30,24 @@ PAPER = {
 }
 
 
+@register_experiment("table2", "Table 2: first-order periods vs the exact "
+                               "Exponential optimum (analytic)")
+def experiment(quick: bool = True) -> ExperimentSpec:
+    return ExperimentSpec(
+        name="table2",
+        description="Young/Daly/RFO periods vs Lambert-W optimum, N=2^10..2^19",
+        scenario=ScenarioSpec(dist=DistributionSpec("exponential"),
+                              mu_ind=MU_IND_SYNTH, c=600.0, d=60.0, r=600.0,
+                              n_traces=0),
+        sweep=SweepSpec(axes={"n": [2 ** k for k in PAPER]}),
+        strategies=(StrategySpec("young"), StrategySpec("daly"),
+                    StrategySpec("rfo"), StrategySpec("exact_exponential")),
+        metrics=(),
+    )
+
+
 def run(quick: bool = False) -> list[dict]:
+    table = run_experiment(experiment(quick))
     rows = []
     print("\n== Table 2: periods (s) and deviation from exact optimum ==")
     print(f"{'N':>6s} {'mu':>9s} | {'Young':>8s} {'Daly':>8s} {'RFO':>8s} "
@@ -36,15 +55,15 @@ def run(quick: bool = False) -> list[dict]:
     prev_err = 0.0
     for k, ref in PAPER.items():
         n = 2 ** k
-        p = Platform(mu=MU_IND_SYNTH / n, c=600.0, d=60.0, r=600.0)
-        ty, td, tr = t_young(p), t_daly(p), t_rfo(p)
-        topt = t_exact_exponential(p)
+        periods = table.strategy_dict("period", n=n)
+        ty, td, tr = periods["Young"], periods["Daly"], periods["RFO"]
+        topt = periods["ExactExponential"]
         ey, ed, er = [100 * (t / topt - 1) for t in (ty, td, tr)]
         rows.append({"N": n, "young": ty, "daly": td, "rfo": tr,
                      "opt": topt, "err_young_pct": ey, "err_daly_pct": ed,
                      "err_rfo_pct": er, "paper": ref})
-        print(f"2^{k:<4d} {p.mu:9.0f} | {ty:8.0f} {td:8.0f} {tr:8.0f} "
-              f"{topt:8.0f} | {ey:6.2f} {ed:6.2f} {er:6.2f} | {ref}")
+        print(f"2^{k:<4d} {MU_IND_SYNTH / n:9.0f} | {ty:8.0f} {td:8.0f} "
+              f"{tr:8.0f} {topt:8.0f} | {ey:6.2f} {ed:6.2f} {er:6.2f} | {ref}")
         # Paper claims: Young/Daly over, RFO under, errors grow with N.
         assert ey > 0 and ed > 0 and er < 0
         assert abs(ey) >= prev_err - 1e-9

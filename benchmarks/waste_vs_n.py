@@ -2,73 +2,108 @@
 
 For N = 2^14..2^19, both predictors, C_p in {C, 0.1C, 2C}, Weibull k=0.7
 faults (the paper's richest setting): measured waste of RFO and
-OptimalPrediction, their BestPeriod counterparts, and the false-prediction
-distribution variant (same-as-faults vs uniform, Appendix B).
+OptimalPrediction, plus their BestPeriod counterparts in full mode, and the
+false-prediction distribution variant (same-as-faults vs uniform,
+Appendix B).  One cartesian :class:`ExperimentSpec`; the BestPeriod search
+runs over the same per-cell trace bank and result cache as the plain
+strategies.
 """
 
 from __future__ import annotations
 
-from repro.core.policies import best_period, optimal_prediction, rfo
-from repro.core.traces import UniformDist, Weibull
-from repro.core.waste import waste as analytic_waste
+from repro.experiments import (DistributionSpec, ExperimentSpec, ScenarioSpec,
+                               StrategySpec, SweepSpec, register_experiment,
+                               run_experiment)
 
-from .common import (PREDICTORS, CP_SCENARIOS, Scenario, evaluate,
-                     run_scenario)
+from .common import CP_SCENARIOS, predictor_axis
 
 
-def measured_waste(sc: Scenario, n_runs: int, with_best: bool) -> dict:
-    traces = sc.traces(n_runs)
-    out = {}
-    for strat in (rfo(sc.platform), optimal_prediction(sc.pp)):
-        m = evaluate(strat, traces, sc.platform, sc.time_base, sc.pp.cp)
-        out[strat.name] = 1.0 - sc.time_base / m
-        if with_best:
-            refined, mb = best_period(strat, traces, sc.platform,
-                                      sc.time_base, sc.pp.cp, n_points=12)
-            out[refined.name] = 1.0 - sc.time_base / mb
-    return out
+def _strategies(with_best: bool) -> tuple[StrategySpec, ...]:
+    strategies = (StrategySpec("rfo"), StrategySpec("optimal_prediction"))
+    if with_best:
+        strategies += (
+            StrategySpec("best_period", {"base": "rfo", "n_points": 12}),
+            StrategySpec("best_period", {"base": "optimal_prediction",
+                                         "n_points": 12}),
+        )
+    return strategies
+
+
+@register_experiment("waste_vs_n", "Figures 3-4/10-11: waste vs platform "
+                                   "size over predictor x C_p x N")
+def experiment(quick: bool = True) -> ExperimentSpec:
+    preds, pred_names = predictor_axis()
+    n_exps = [14, 16, 18] if quick else [14, 15, 16, 17, 18, 19]
+    return ExperimentSpec(
+        name="waste_vs_n",
+        description="Waste of RFO / OptimalPrediction (+ BestPeriod) vs N",
+        scenario=ScenarioSpec(dist=DistributionSpec("weibull", {"shape": 0.7}),
+                              n_traces=4 if quick else 30),
+        sweep=SweepSpec(
+            axes={"recall,precision": preds,
+                  "cp_ratio": list(CP_SCENARIOS.values()),
+                  "n": [2 ** k for k in n_exps]},
+            labels={"recall,precision": pred_names,
+                    "cp_ratio": list(CP_SCENARIOS)},
+            names={"recall,precision": "predictor", "cp_ratio": "cp"}),
+        strategies=_strategies(with_best=not quick),
+        metrics=("waste",),
+    )
+
+
+@register_experiment("false_pred_dist", "Appendix B: false-prediction dates "
+                                        "same-as-faults vs uniform")
+def false_pred_experiment(quick: bool = True) -> ExperimentSpec:
+    return ExperimentSpec(
+        name="false_pred_dist",
+        description="OptimalPrediction waste under two false-prediction laws",
+        scenario=ScenarioSpec(n=2 ** 16,
+                              dist=DistributionSpec("weibull", {"shape": 0.7}),
+                              n_traces=4 if quick else 30),
+        sweep=SweepSpec(
+            axes={"false_pred_dist": [None, DistributionSpec("uniform")]},
+            labels={"false_pred_dist": ["same", "uniform"]},
+            names={"false_pred_dist": "false_pred"}),
+        strategies=(StrategySpec("optimal_prediction"),),
+        metrics=("waste",),
+    )
 
 
 def run(quick: bool = True) -> list[dict]:
-    n_runs = 4 if quick else 30
-    n_exps = [14, 16, 18] if quick else [14, 15, 16, 17, 18, 19]
-    with_best = not quick
+    _, pred_names = predictor_axis()
+    exp = experiment(quick)
+    n_exps = sorted({int(v) for v in exp.sweep.axes["n"]})
+    table = run_experiment(exp)
     rows = []
-    for pred_name, pred in PREDICTORS.items():
-        for cp_name, cp_ratio in CP_SCENARIOS.items():
-            if quick and cp_name == "expensive" and pred_name == "good":
-                pass  # keep: the paper's notable corner case
-            for n_exp in n_exps:
-                sc = Scenario(n=2 ** n_exp, dist=Weibull(0.7, 1.0),
-                              predictor=pred, cp_ratio=cp_ratio)
-                res = measured_waste(sc, n_runs, with_best)
+    for pred_name in pred_names:
+        for cp_name in CP_SCENARIOS:
+            for n in n_exps:
+                res = table.strategy_dict("waste", predictor=pred_name,
+                                          cp=cp_name, n=n)
                 row = {"predictor": pred_name, "cp": cp_name,
-                       "N": f"2^{n_exp}",
+                       "N": f"2^{n.bit_length() - 1}",
                        **{k: round(v, 4) for k, v in res.items()}}
                 rows.append(row)
-                print(f"{pred_name} cp={cp_name} N=2^{n_exp}: "
+                print(f"{pred_name} cp={cp_name} N=2^{n.bit_length() - 1}: "
                       f"RFO={res['RFO']:.3f} "
                       f"Opt={res['OptimalPrediction']:.3f}", flush=True)
     # Figure-level claims: waste grows with N; prediction helps except the
     # bad-predictor + expensive-proactive + largest-platform corner.
     by = {(r["predictor"], r["cp"], r["N"]): r for r in rows}
-    big, small = f"2^{n_exps[-1]}", f"2^{n_exps[0]}"
-    for p in PREDICTORS:
+    big = f"2^{n_exps[-1].bit_length() - 1}"
+    small = f"2^{n_exps[0].bit_length() - 1}"
+    for p in pred_names:
         for cpn in CP_SCENARIOS:
             assert by[(p, cpn, big)]["RFO"] > by[(p, cpn, small)]["RFO"]
-    for p in PREDICTORS:
+    for p in pred_names:
         r = by[(p, "cheap", big)]
         assert r["OptimalPrediction"] < r["RFO"]
     print("waste_vs_n: figure-level claims verified")
 
     # Appendix B: uniform false-prediction dates barely change the picture.
-    sc_same = Scenario(n=2 ** 16, dist=Weibull(0.7, 1.0),
-                       predictor=PREDICTORS["good"])
-    sc_unif = Scenario(n=2 ** 16, dist=Weibull(0.7, 1.0),
-                       predictor=PREDICTORS["good"],
-                       false_pred_dist=UniformDist(1.0))
-    w_same = measured_waste(sc_same, n_runs, False)["OptimalPrediction"]
-    w_unif = measured_waste(sc_unif, n_runs, False)["OptimalPrediction"]
+    fp_table = run_experiment(false_pred_experiment(quick))
+    w_same = fp_table.value("waste", false_pred="same")
+    w_unif = fp_table.value("waste", false_pred="uniform")
     print(f"false-pred dist: same={w_same:.4f} uniform={w_unif:.4f} "
           f"(Appendix B: similar)")
     assert abs(w_same - w_unif) < 0.05

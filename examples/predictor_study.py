@@ -5,34 +5,37 @@ beats precision) and extends it with the analytic model: iso-waste curves
 over the (recall, precision) plane for a 2^16-processor platform, plus the
 break-even precision below which predictions should be ignored entirely.
 
+The (recall, precision) plane is generated with the experiment API's
+SweepSpec — the same declarative axes the simulation benchmarks use — and
+each cell's predicted platform comes from its ScenarioSpec.
+
 Run:  PYTHONPATH=src python examples/predictor_study.py
 """
 
 import numpy as np
 
-from repro.core.prediction import (PredictedPlatform, Predictor,
-                                   optimal_period_with_prediction)
-from repro.core.waste import Platform, t_rfo, waste
-
-MU_IND = 125.0 * 365.0 * 86400.0
+from repro.core.prediction import optimal_period_with_prediction
+from repro.core.waste import t_rfo, waste
+from repro.experiments import ScenarioSpec, SweepSpec
 
 
 def main() -> None:
-    n = 2 ** 16
-    plat = Platform(mu=MU_IND / n, c=600.0, d=60.0, r=600.0)
+    base = ScenarioSpec(n=2 ** 16, c=600.0, d=60.0, r=600.0)
+    plat = base.platform
     w_nopred = waste(t_rfo(plat), plat)
     print(f"platform: N=2^16, mu={plat.mu:.0f}s; "
           f"RFO waste without predictor = {w_nopred:.4f}\n")
 
     grid = [0.1, 0.3, 0.5, 0.7, 0.9, 0.99]
+    sweep = SweepSpec(axes={"recall": grid, "precision": grid})
+    cells = {(c["recall"], c["precision"]): sc for c, sc in sweep.cells(base)}
     print("analytic waste of OptimalPrediction (rows: recall; "
           "cols: precision)")
     print("        " + "".join(f"p={p:<7.2f}" for p in grid))
     for r in grid:
         row = []
         for p in grid:
-            pp = PredictedPlatform(plat, Predictor(r, p), cp=600.0)
-            _, w, used = optimal_period_with_prediction(pp)
+            _, w, used = optimal_period_with_prediction(cells[(r, p)].pp)
             row.append(f"{w:.4f}{'*' if not used else ' '}  ")
         print(f"r={r:<5.2f} " + "".join(row))
     print("(* = predictor analytically not worth using)\n")
@@ -42,8 +45,8 @@ def main() -> None:
     r0, p0, eps = 0.7, 0.7, 0.05
 
     def w_at(r, p):
-        pp = PredictedPlatform(plat, Predictor(r, p), cp=600.0)
-        return optimal_period_with_prediction(pp)[1]
+        sc = base.replace(recall=r, precision=p)
+        return optimal_period_with_prediction(sc.pp)[1]
 
     dr = (w_at(r0 + eps, p0) - w_at(r0 - eps, p0)) / (2 * eps)
     dp = (w_at(r0, p0 + eps) - w_at(r0, p0 - eps)) / (2 * eps)
@@ -59,9 +62,9 @@ def main() -> None:
     for cp_ratio in (0.1, 0.5, 1.0, 2.0):
         lo = None
         for p in np.linspace(0.01, 0.99, 99):
-            pp = PredictedPlatform(plat, Predictor(0.85, float(p)),
-                                   cp=600.0 * cp_ratio)
-            if optimal_period_with_prediction(pp)[2]:
+            sc = base.replace(recall=0.85, precision=float(p),
+                              cp_ratio=cp_ratio)
+            if optimal_period_with_prediction(sc.pp)[2]:
                 lo = p
                 break
         print(f"  C_p = {cp_ratio:>4.1f} C : p_breakeven ~ "

@@ -1,25 +1,28 @@
 """Quickstart: the paper's planner in five minutes.
 
 1. Plan the optimal checkpoint period for a 512-chip pod, with and without
-   a fault predictor (the paper's core contribution, §3-§4).
-2. Train a reduced llama3.2-1b for 60 steps with that schedule, injecting
+   a fault predictor (the paper's core contribution, §3-§4), by declaring
+   the deployment as a serializable ScenarioSpec and looking the strategies
+   up in the registry.
+2. Measure the plan: one small ExperimentSpec through the batched runner.
+3. Train a reduced llama3.2-1b for 60 steps with that schedule, injecting
    faults from a synthetic Weibull trace, and compare the measured waste
    against the analytic prediction.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
-import dataclasses
 import tempfile
 
 import numpy as np
 
 from repro.configs import get
 from repro.configs.base import InputShape, PlatformConfig
-from repro.core.prediction import (PredictedPlatform, Predictor, beta_lim,
-                                   optimal_period_with_prediction)
+from repro.core.prediction import beta_lim, optimal_period_with_prediction
 from repro.core.traces import Weibull, make_event_trace
-from repro.core.waste import Platform, t_daly, t_rfo, t_young, waste
+from repro.core.waste import t_rfo, waste
+from repro.experiments import (DistributionSpec, ExperimentSpec, ScenarioSpec,
+                               StrategySpec, build_strategy, run_experiment)
 from repro.train import FaultTolerantTrainer
 
 
@@ -28,27 +31,46 @@ def main() -> None:
     print("=" * 64)
     print("1. Checkpoint planning for a 512-chip v5e deployment")
     print("=" * 64)
-    mu_ind = 125.0 * 365.0 * 86400.0      # per-chip MTBF (125 years)
-    n = 512
-    plat = Platform(mu=mu_ind / n, c=600.0, d=60.0, r=600.0)
-    print(f"platform MTBF mu = {plat.mu / 3600:.1f} h  (mu_ind / {n})")
-    print(f"Young period : {t_young(plat):8.0f} s")
-    print(f"Daly period  : {t_daly(plat):8.0f} s")
-    print(f"RFO period   : {t_rfo(plat):8.0f} s  "
-          f"(waste {waste(t_rfo(plat), plat):.4f})")
+    # The whole deployment is one declarative, JSON-serializable spec.
+    sc = ScenarioSpec(n=512, dist=DistributionSpec("weibull", {"shape": 0.7}),
+                      recall=0.85, precision=0.82,   # Yu et al. predictor
+                      c=600.0, d=60.0, r=600.0, n_traces=5)
+    plat = sc.platform
+    print(f"platform MTBF mu = {plat.mu / 3600:.1f} h  (mu_ind / {sc.n})")
+    for name in ("young", "daly", "rfo"):
+        strat = build_strategy(name, sc)
+        print(f"{strat.name:5s} period : {strat.period:8.0f} s")
+    print(f"RFO waste     : {waste(t_rfo(plat), plat):.4f}")
 
-    pred = Predictor(recall=0.85, precision=0.82)  # Yu et al. predictor
-    pp = PredictedPlatform(plat, pred, cp=600.0)
+    pp = sc.pp
     t_star, w_star, use = optimal_period_with_prediction(pp)
     print(f"With the predictor: T* = {t_star:8.0f} s, waste {w_star:.4f}, "
           f"trust predictions past beta_lim = {beta_lim(pp):.0f} s")
     print(f"-> predicted waste reduction: "
           f"{100 * (1 - w_star / waste(t_rfo(plat), plat)):.1f}%")
 
-    # ---- 2. End-to-end fault-tolerant training ------------------------------
+    # ---- 2. Measure the plan with the batched runner ----------------------
     print()
     print("=" * 64)
-    print("2. Fault-tolerant training (reduced llama3.2-1b, virtual clock)")
+    print("2. Simulated check (ExperimentSpec -> batched runner)")
+    print("=" * 64)
+    exp = ExperimentSpec(
+        name="quickstart",
+        scenario=sc,
+        strategies=(StrategySpec("rfo"), StrategySpec("optimal_prediction"),
+                    StrategySpec("best_period", {"base": "rfo",
+                                                 "n_points": 8})),
+        metrics=("makespan_days", "waste"),
+    )
+    print(f"spec round-trips through JSON: "
+          f"{ExperimentSpec.from_json(exp.to_json()) == exp}")
+    table = run_experiment(exp)
+    print(table.format(["strategy", "period", "makespan_days", "waste"]))
+
+    # ---- 3. End-to-end fault-tolerant training ------------------------------
+    print()
+    print("=" * 64)
+    print("3. Fault-tolerant training (reduced llama3.2-1b, virtual clock)")
     print("=" * 64)
     cfg = get("llama3.2-1b").reduced()
     shape = InputShape("quickstart", 64, 4, "train")

@@ -18,8 +18,7 @@ The module also exposes :func:`best_period`, the paper's BestPeriod search
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Callable, Sequence
+from typing import Sequence
 
 import numpy as np
 
@@ -27,7 +26,7 @@ from .prediction import (PredictedPlatform, beta_lim,
                          optimal_period_with_prediction, t_pred,
                          waste_simple_policy)
 from .simulator import (AlwaysTrust, FixedProbabilityTrust, NeverTrust,
-                        ThresholdTrust, TrustPolicy, simulate)
+                        ThresholdTrust, TrustPolicy)
 from .traces import EventTrace
 from .waste import Platform, t_daly, t_rfo, t_young
 
@@ -110,7 +109,12 @@ def simple_policy(pp: PredictedPlatform, q: float | None = None) -> Strategy:
 
 
 # ---------------------------------------------------------------------------
-# BestPeriod brute-force search (paper §5.1)
+# Evaluation + BestPeriod search: thin compatibility wrappers over the
+# batched runner (repro.experiments.runner).  Results are bit-for-bit
+# identical to the historical serial loops — the runner keeps the
+# per-(strategy, trace) seeding ``default_rng(seed + 7919 * i)`` and the
+# trace-order accumulation — but duplicated candidates are simulated once
+# and the period grid is deduplicated.
 # ---------------------------------------------------------------------------
 
 def evaluate(
@@ -123,14 +127,8 @@ def evaluate(
     seed: int = 0,
 ) -> float:
     """Average makespan of a strategy over a fixed set of traces."""
-    total = 0.0
-    for i, trace in enumerate(traces):
-        rng = np.random.default_rng(seed + 7919 * i)
-        res = simulate(trace, platform, time_base, strategy.period,
-                       cp=cp, trust=strategy.trust,
-                       inexact_window=strategy.inexact_window, rng=rng)
-        total += res.makespan
-    return total / max(1, len(traces))
+    from repro.experiments.runner import evaluate_mean
+    return evaluate_mean(strategy, traces, platform, time_base, cp, seed=seed)
 
 
 def best_period(
@@ -147,20 +145,10 @@ def best_period(
     """Brute-force the best period for a strategy (paper's BestPeriod).
 
     Sweeps ``n_points`` periods log-spaced in [T0/span, T0*span] around the
-    strategy's analytic period T0, evaluates each on the given traces, and
-    returns (best strategy, its average makespan).
+    strategy's analytic period T0 (T0 itself included: BestPeriod must never
+    lose to it), evaluates each on the given traces, and returns
+    (best strategy, its average makespan).
     """
-    t0 = strategy.period
-    lo = max(platform.c * 1.001, t0 / span)
-    hi = max(lo * 1.01, t0 * span)
-    # Include the analytic period itself: BestPeriod must never lose to it.
-    grid = np.append(np.geomspace(lo, hi, n_points), t0)
-    best_t, best_m = t0, math.inf
-    for t in grid:
-        m = evaluate(strategy.with_period(float(t)), traces, platform,
-                     time_base, cp, seed=seed)
-        if m < best_m:
-            best_t, best_m = float(t), m
-    refined = dataclasses.replace(strategy, name=f"BestPeriod({strategy.name})",
-                                  period=best_t)
-    return refined, best_m
+    from repro.experiments.runner import best_period_search
+    return best_period_search(strategy, traces, platform, time_base, cp,
+                              n_points=n_points, span=span, seed=seed)

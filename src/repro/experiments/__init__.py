@@ -1,0 +1,66 @@
+"""Unified experiment API: declarative scenarios, strategy registry, and a
+batched trace-evaluation runner.
+
+Define an experiment as data, run it, read the results table::
+
+    from repro.experiments import (DistributionSpec, ExperimentSpec,
+                                   ScenarioSpec, StrategySpec, SweepSpec,
+                                   run_experiment)
+
+    exp = ExperimentSpec(
+        name="demo",
+        scenario=ScenarioSpec(n=2 ** 16,
+                              dist=DistributionSpec("weibull", {"shape": 0.7}),
+                              n_traces=5),
+        sweep=SweepSpec(axes={"n": [2 ** 16, 2 ** 19]}),
+        strategies=[StrategySpec("rfo"), StrategySpec("optimal_prediction"),
+                    StrategySpec("best_period", {"base": "rfo"})],
+    )
+    table = run_experiment(exp)
+    print(table.format(["n", "strategy", "period", "makespan_days", "waste"]))
+
+Every spec round-trips through ``to_dict``/``from_dict`` (JSON), strategies
+and trace distributions are looked up by registered name, and the runner
+shares one trace bank + result cache per scenario across all strategies and
+period searches.
+"""
+
+from .registry import (PREDICTORS, build_distribution, build_experiment,
+                       build_strategy, list_distributions, list_experiments,
+                       list_strategies, register_distribution,
+                       register_experiment, register_strategy)
+from .runner import (BestPeriodSearch, EvalCache, ResultTable,
+                     best_period_search, clear_trace_bank,
+                     evaluate_strategies, evaluate_mean, run_experiment,
+                     trace_bank)
+from .spec import (MU_IND_SYNTH, SECONDS_PER_DAY, DistributionSpec,
+                   ExperimentSpec, ScenarioSpec, StrategySpec, SweepSpec)
+
+__all__ = [
+    "MU_IND_SYNTH",
+    "SECONDS_PER_DAY",
+    "PREDICTORS",
+    "DistributionSpec",
+    "ScenarioSpec",
+    "StrategySpec",
+    "SweepSpec",
+    "ExperimentSpec",
+    "BestPeriodSearch",
+    "EvalCache",
+    "ResultTable",
+    "register_strategy",
+    "register_distribution",
+    "register_experiment",
+    "build_strategy",
+    "build_distribution",
+    "build_experiment",
+    "list_strategies",
+    "list_distributions",
+    "list_experiments",
+    "trace_bank",
+    "clear_trace_bank",
+    "evaluate_strategies",
+    "evaluate_mean",
+    "best_period_search",
+    "run_experiment",
+]

@@ -1,0 +1,524 @@
+"""Batched trace-evaluation runner.
+
+Replaces the O(strategies x periods x traces) serial ``simulate()`` loops
+that used to live in ``policies.evaluate`` / ``policies.best_period`` and in
+every benchmark script:
+
+  * one shared **trace bank** per scenario (content-addressed by the
+    scenario spec, memoized across strategies, sweeps and BestPeriod
+    searches);
+  * all (strategy x period x trace) candidates evaluated against the bank
+    with **result caching** — identical (period, trust, window) candidates
+    are simulated once no matter how many strategies or search grids ask —
+    and optional chunked process-parallel execution;
+  * a tidy :class:`ResultTable` (one row per sweep-cell x strategy) with
+    derived metric columns.
+
+Determinism contract: each (strategy, trace ``i``) pair is simulated with
+``np.random.default_rng(seed + 7919 * i)`` and makespans are averaged in
+trace order — **bit-for-bit** identical to the legacy
+``policies.evaluate`` loop, regardless of caching, batching or worker count.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import json
+import math
+import os
+from concurrent.futures import ProcessPoolExecutor
+from typing import Any, Iterable, Iterator, Mapping, Sequence
+
+import numpy as np
+
+from repro.core.policies import Strategy
+from repro.core.simulator import (AlwaysTrust, FixedProbabilityTrust,
+                                  NeverTrust, ThresholdTrust, TrustPolicy,
+                                  simulate)
+from repro.core.traces import EventTrace
+from repro.core.waste import Platform
+
+from .spec import SECONDS_PER_DAY, ExperimentSpec, ScenarioSpec
+
+__all__ = [
+    "BestPeriodSearch",
+    "EvalCache",
+    "ResultTable",
+    "trace_bank",
+    "clear_trace_bank",
+    "evaluate_strategies",
+    "evaluate_mean",
+    "best_period_search",
+    "run_experiment",
+]
+
+# Environment override for process-parallel evaluation (0/1 = serial).
+_WORKERS_ENV = "REPRO_EXPERIMENT_WORKERS"
+
+
+@dataclasses.dataclass(frozen=True)
+class BestPeriodSearch:
+    """A strategy whose period is brute-forced over the runner's trace bank.
+
+    Produced by the registered ``best_period`` strategy factory; the runner
+    resolves it into a concrete :class:`Strategy` via
+    :func:`best_period_search`.
+    """
+
+    base: Strategy
+    n_points: int = 24
+    span: float = 8.0
+
+    @property
+    def name(self) -> str:
+        return f"BestPeriod({self.base.name})"
+
+
+# ---------------------------------------------------------------------------
+# Result cache (per evaluation context: bank x platform x time_base x cp x seed)
+# ---------------------------------------------------------------------------
+
+class _IdKey:
+    """Hashable identity wrapper for cache keys built from objects without
+    value semantics.  Holding the object itself (not its ``id()``) keeps it
+    alive for the cache's lifetime, so the key can never alias a freed
+    object's recycled id."""
+
+    __slots__ = ("obj",)
+
+    def __init__(self, obj: Any) -> None:
+        self.obj = obj
+
+    def __hash__(self) -> int:
+        return object.__hash__(self.obj) if isinstance(
+            self.obj, collections.abc.Hashable) else id(self.obj)
+
+    def __eq__(self, other: Any) -> bool:
+        return isinstance(other, _IdKey) and self.obj is other.obj
+
+
+def _trust_key(trust: TrustPolicy) -> tuple:
+    if isinstance(trust, NeverTrust):
+        return ("never",)
+    if isinstance(trust, AlwaysTrust):
+        return ("always",)
+    if isinstance(trust, FixedProbabilityTrust):
+        return ("fixed_q", trust.q)
+    if isinstance(trust, ThresholdTrust):
+        return ("threshold", trust.threshold)
+    return ("opaque", _IdKey(trust))
+
+
+def _candidate_key(strategy: Strategy) -> tuple:
+    period = strategy.period
+    if callable(period) and not isinstance(period, collections.abc.Hashable):
+        period = _IdKey(period)
+    return (period, _trust_key(strategy.trust), strategy.inexact_window)
+
+
+class EvalCache:
+    """Maps (candidate key, trace index) -> makespan.
+
+    Shared across the strategies / period grids of one evaluation context so
+    duplicated candidates (e.g. the analytic period appearing both in a
+    BestPeriod grid and as a plain strategy) are simulated exactly once.
+    """
+
+    def __init__(self) -> None:
+        self._makespans: dict[tuple, float] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, strategy: Strategy, trace_idx: int) -> float | None:
+        got = self._makespans.get((_candidate_key(strategy), trace_idx))
+        if got is not None:
+            self.hits += 1
+        return got
+
+    def put(self, strategy: Strategy, trace_idx: int, makespan: float) -> None:
+        self.misses += 1
+        self._makespans[(_candidate_key(strategy), trace_idx)] = makespan
+
+    def __len__(self) -> int:
+        return len(self._makespans)
+
+
+# ---------------------------------------------------------------------------
+# Shared trace bank
+# ---------------------------------------------------------------------------
+
+_BANK_CACHE: "collections.OrderedDict[str, list[EventTrace]]" = \
+    collections.OrderedDict()
+_BANK_CACHE_MAX = 8
+
+
+def trace_bank(scenario: ScenarioSpec) -> list[EventTrace]:
+    """The scenario's shared trace bank (content-addressed, memoized).
+
+    Two scenario specs with equal fields share one generated bank; the sizes
+    and seeds are part of the spec, so overriding either yields a new bank.
+    """
+    key = scenario.key()
+    if key in _BANK_CACHE:
+        _BANK_CACHE.move_to_end(key)
+        return _BANK_CACHE[key]
+    bank = scenario.make_traces()
+    _BANK_CACHE[key] = bank
+    while len(_BANK_CACHE) > _BANK_CACHE_MAX:
+        _BANK_CACHE.popitem(last=False)
+    return bank
+
+
+def clear_trace_bank() -> None:
+    _BANK_CACHE.clear()
+
+
+# ---------------------------------------------------------------------------
+# Batched evaluation
+# ---------------------------------------------------------------------------
+
+def _simulate_pair(trace: EventTrace, platform: Platform, time_base: float,
+                   cp: float, strategy: Strategy, seed: int,
+                   trace_idx: int) -> float:
+    rng = np.random.default_rng(seed + 7919 * trace_idx)
+    res = simulate(trace, platform, time_base, strategy.period, cp=cp,
+                   trust=strategy.trust,
+                   inexact_window=strategy.inexact_window, rng=rng)
+    return res.makespan
+
+
+def _eval_chunk(trace: EventTrace, platform: Platform, time_base: float,
+                cp: float, seed: int, trace_idx: int,
+                items: list[tuple[int, Strategy]]) -> list[tuple[int, float]]:
+    """Worker task: one trace x several candidate strategies."""
+    return [(slot, _simulate_pair(trace, platform, time_base, cp, strat,
+                                  seed, trace_idx))
+            for slot, strat in items]
+
+
+def _resolve_workers(workers: int | None) -> int:
+    if workers is None:
+        workers = int(os.environ.get(_WORKERS_ENV, "0") or "0")
+    return max(0, workers)
+
+
+def evaluate_strategies(
+    traces: Sequence[EventTrace],
+    platform: Platform,
+    time_base: float,
+    cp: float,
+    strategies: Sequence[Strategy],
+    *,
+    seed: int = 0,
+    cache: EvalCache | None = None,
+    workers: int | None = None,
+) -> list[float]:
+    """Average makespan of each strategy over the shared trace set.
+
+    The batched replacement for per-strategy ``policies.evaluate`` loops:
+    all (strategy x trace) candidates are gathered, deduplicated through
+    ``cache``, executed (chunked per trace; process-parallel when
+    ``workers`` > 1 or ``$REPRO_EXPERIMENT_WORKERS`` is set), and averaged
+    in trace order — results are bit-for-bit independent of the execution
+    plan.
+    """
+    cache = cache if cache is not None else EvalCache()
+    n = len(traces)
+    makespans = np.empty((len(strategies), max(1, n)), dtype=np.float64)
+
+    # Gather the missing (strategy, trace) pairs, dedup via the cache key.
+    pending: dict[tuple, list[int]] = {}          # (si, ti) slots per key
+    by_trace: dict[int, list[tuple[int, Strategy]]] = {}
+    seen_keys: dict[tuple, tuple[int, int]] = {}  # key -> first slot
+    for si, strat in enumerate(strategies):
+        for ti in range(n):
+            got = cache.get(strat, ti)
+            if got is not None:
+                makespans[si, ti] = got
+                continue
+            key = (_candidate_key(strat), ti)
+            if key in seen_keys:
+                pending.setdefault(key, []).append(si)
+                continue
+            seen_keys[key] = (si, ti)
+            by_trace.setdefault(ti, []).append((si, strat))
+
+    workers = _resolve_workers(workers)
+    if workers > 1 and by_trace:
+        with ProcessPoolExecutor(max_workers=workers) as pool:
+            futures = {
+                ti: pool.submit(_eval_chunk, traces[ti], platform, time_base,
+                                cp, seed, ti, items)
+                for ti, items in by_trace.items()
+            }
+            for ti, fut in futures.items():
+                for slot, m in fut.result():
+                    makespans[slot, ti] = m
+                    cache.put(strategies[slot], ti, m)
+    else:
+        for ti, items in by_trace.items():
+            for slot, m in _eval_chunk(traces[ti], platform, time_base, cp,
+                                       seed, ti, items):
+                makespans[slot, ti] = m
+                cache.put(strategies[slot], ti, m)
+
+    # Fill the duplicated candidates from the now-populated cache.
+    for (ckey, ti), slots in pending.items():
+        first_si, _ = seen_keys[(ckey, ti)]
+        for si in slots:
+            makespans[si, ti] = makespans[first_si, ti]
+
+    # Average in trace order with sequential accumulation: bit-for-bit the
+    # legacy ``total += makespan; total / max(1, n)`` reduction.
+    out = []
+    for si in range(len(strategies)):
+        total = 0.0
+        for ti in range(n):
+            total += makespans[si, ti]
+        out.append(float(total / max(1, n)))
+    return out
+
+
+def evaluate_mean(
+    strategy: Strategy,
+    traces: Sequence[EventTrace],
+    platform: Platform,
+    time_base: float,
+    cp: float,
+    *,
+    seed: int = 0,
+    cache: EvalCache | None = None,
+    workers: int | None = None,
+) -> float:
+    """Single-strategy convenience wrapper over :func:`evaluate_strategies`."""
+    return evaluate_strategies(traces, platform, time_base, cp, [strategy],
+                               seed=seed, cache=cache, workers=workers)[0]
+
+
+# ---------------------------------------------------------------------------
+# BestPeriod as a thin search over the runner
+# ---------------------------------------------------------------------------
+
+def best_period_grid(t0: float, platform: Platform, n_points: int,
+                     span: float) -> np.ndarray:
+    """Deduplicated candidate grid around the analytic period ``t0``.
+
+    Log-spaced in [t0/span, t0*span] (clamped above C) with ``t0`` included
+    — BestPeriod must never lose to the analytic period — and made unique so
+    no candidate is ever evaluated twice.
+    """
+    lo = max(platform.c * 1.001, t0 / span)
+    hi = max(lo * 1.01, t0 * span)
+    return np.unique(np.append(np.geomspace(lo, hi, n_points), t0))
+
+
+def best_period_search(
+    search: BestPeriodSearch | Strategy,
+    traces: Sequence[EventTrace],
+    platform: Platform,
+    time_base: float,
+    cp: float,
+    *,
+    n_points: int = 24,
+    span: float = 8.0,
+    seed: int = 0,
+    cache: EvalCache | None = None,
+    workers: int | None = None,
+) -> tuple[Strategy, float]:
+    """Brute-force the best period for a strategy (paper's BestPeriod).
+
+    A thin argmin over :func:`evaluate_strategies`: the whole candidate grid
+    is evaluated as one batch against the shared traces, with the cache
+    deduplicating any candidate already simulated (e.g. the base strategy's
+    own period, or overlapping grids of other searches).
+    """
+    if isinstance(search, BestPeriodSearch):
+        base, n_points, span = search.base, search.n_points, search.span
+    else:
+        base = search
+    cache = cache if cache is not None else EvalCache()
+    grid = best_period_grid(base.period, platform, n_points, span)
+    candidates = [base.with_period(float(t)) for t in grid]
+    means = evaluate_strategies(traces, platform, time_base, cp, candidates,
+                                seed=seed, cache=cache, workers=workers)
+    best_i = int(np.argmin(means))
+    best_t, best_m = float(grid[best_i]), float(means[best_i])
+    refined = dataclasses.replace(base, name=f"BestPeriod({base.name})",
+                                  period=best_t)
+    return refined, best_m
+
+
+# ---------------------------------------------------------------------------
+# Tidy result table
+# ---------------------------------------------------------------------------
+
+class ResultTable:
+    """A tidy list of result rows (one per sweep-cell x strategy)."""
+
+    def __init__(self, rows: Iterable[Mapping[str, Any]] = ()) -> None:
+        self.rows: list[dict[str, Any]] = [dict(r) for r in rows]
+
+    # -- container protocol --------------------------------------------------
+
+    def __len__(self) -> int:
+        return len(self.rows)
+
+    def __iter__(self) -> Iterator[dict[str, Any]]:
+        return iter(self.rows)
+
+    def __repr__(self) -> str:
+        return f"ResultTable({len(self.rows)} rows x {len(self.columns)} cols)"
+
+    @property
+    def columns(self) -> list[str]:
+        cols: dict[str, None] = {}
+        for row in self.rows:
+            for c in row:
+                cols.setdefault(c)
+        return list(cols)
+
+    # -- relational helpers --------------------------------------------------
+
+    def where(self, **eq: Any) -> "ResultTable":
+        return ResultTable(r for r in self.rows
+                           if all(r.get(k) == v for k, v in eq.items()))
+
+    def column(self, name: str) -> list[Any]:
+        return [r.get(name) for r in self.rows]
+
+    def value(self, name: str, **eq: Any) -> Any:
+        hits = self.where(**eq).rows
+        if len(hits) != 1:
+            raise KeyError(f"expected exactly one row for {eq}, "
+                           f"got {len(hits)}")
+        return hits[0][name]
+
+    def strategy_dict(self, metric: str = "makespan_days",
+                      **eq: Any) -> dict[str, float]:
+        """{strategy name: metric} for the rows matching ``eq``."""
+        return {r["strategy"]: r[metric] for r in self.where(**eq).rows}
+
+    def mean(self, name: str, **eq: Any) -> float:
+        vals = [v for v in self.where(**eq).column(name) if v is not None]
+        return float(np.mean(vals)) if vals else math.nan
+
+    # -- output --------------------------------------------------------------
+
+    def to_json(self, **kw: Any) -> str:
+        return json.dumps(self.rows, default=str, **kw)
+
+    def format(self, columns: Sequence[str] | None = None,
+               float_fmt: str = "{:.2f}") -> str:
+        cols = list(columns) if columns else self.columns
+        widths = {c: max(len(str(c)), 8) for c in cols}
+        def fmt(v: Any) -> str:
+            if isinstance(v, float):
+                return float_fmt.format(v)
+            return "" if v is None else str(v)
+        for row in self.rows:
+            for c in cols:
+                widths[c] = max(widths[c], len(fmt(row.get(c))))
+        head = " | ".join(f"{c:>{widths[c]}s}" for c in cols)
+        lines = [head, "-" * len(head)]
+        for row in self.rows:
+            lines.append(" | ".join(f"{fmt(row.get(c)):>{widths[c]}s}"
+                                    for c in cols))
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Experiment execution
+# ---------------------------------------------------------------------------
+
+def _metric_value(metric: str, makespan: float | None,
+                  scenario: ScenarioSpec) -> Any:
+    if makespan is None:
+        return None
+    if metric == "makespan":
+        return makespan
+    if metric == "makespan_days":
+        return makespan / SECONDS_PER_DAY
+    if metric == "waste":
+        return 1.0 - scenario.time_base / makespan if makespan > 0 else 0.0
+    raise KeyError(f"unknown metric {metric!r}")
+
+
+def run_experiment(
+    exp: ExperimentSpec,
+    *,
+    n_traces: int | None = None,
+    seed: int | None = None,
+    workers: int | None = None,
+    verbose: bool = False,
+) -> ResultTable:
+    """Run an :class:`ExperimentSpec`; returns the tidy result table.
+
+    Per sweep cell: one shared trace bank, one :class:`EvalCache`; all plain
+    strategies are evaluated as a single batch, then BestPeriod searches run
+    against the same bank and cache (so grids share every previously
+    simulated candidate).  ``n_traces`` / ``seed`` override the scenario
+    spec; ``n_traces=0`` skips simulation entirely (analytic experiments
+    still report each strategy's period).
+    """
+    rows: list[dict[str, Any]] = []
+    for axis_cols, cell in exp.cells():
+        overrides: dict[str, Any] = {}
+        if n_traces is not None:
+            overrides["n_traces"] = n_traces
+        if seed is not None:
+            overrides["seed"] = seed
+        if overrides:
+            cell = cell.replace(**overrides)
+        built = [(sspec, sspec.build(cell)) for sspec in exp.strategies]
+        platform, time_base, cp = cell.platform, cell.time_base, cell.cp
+
+        traces: list[EventTrace] = []
+        if cell.n_traces > 0 and built:
+            traces = trace_bank(cell)
+        cache = EvalCache()
+
+        # Batch all plain strategies first, then resolve the searches
+        # against the warm cache.
+        plain = [(i, s) for i, (_, s) in enumerate(built)
+                 if isinstance(s, Strategy)]
+        means: dict[int, float | None] = {i: None for i in range(len(built))}
+        resolved: dict[int, Strategy | BestPeriodSearch] = {
+            i: s for i, (_, s) in enumerate(built)}
+        if traces and plain:
+            batched = evaluate_strategies(
+                traces, platform, time_base, cp, [s for _, s in plain],
+                seed=cell.seed, cache=cache, workers=workers)
+            for (i, _), m in zip(plain, batched):
+                means[i] = m
+        for i, (_, s) in enumerate(built):
+            if isinstance(s, BestPeriodSearch):
+                if not traces:
+                    # Nothing to search against: report the base strategy's
+                    # analytic period under the search's own name so the row
+                    # stays distinct from the plain base strategy.
+                    resolved[i] = dataclasses.replace(s.base, name=s.name)
+                    continue
+                refined, m = best_period_search(
+                    s, traces, platform, time_base, cp, seed=cell.seed,
+                    cache=cache, workers=workers)
+                resolved[i], means[i] = refined, m
+
+        for i, (sspec, _) in enumerate(built):
+            strat = resolved[i]
+            name = sspec.label if sspec.label is not None else (
+                strat.name if isinstance(strat, Strategy) else sspec.name)
+            period = strat.period if isinstance(strat, Strategy) else None
+            row: dict[str, Any] = dict(axis_cols)
+            row["strategy"] = name
+            row["period"] = (float(period) if isinstance(period, (int, float))
+                             else "dynamic")
+            for metric in exp.metrics:
+                row[metric] = _metric_value(metric, means[i], cell)
+            rows.append(row)
+        if verbose:
+            cellname = ", ".join(f"{k}={v}" for k, v in axis_cols.items())
+            print(f"[{exp.name}] {cellname or 'base'}: "
+                  f"{len(traces)} traces, cache {cache.misses} sims "
+                  f"/ {cache.hits} hits", flush=True)
+    return ResultTable(rows)

@@ -1,0 +1,463 @@
+"""Declarative experiment specifications (serializable, registry-backed).
+
+The paper's results are all *sweeps* — over platform size, recall/precision,
+proactive-checkpoint cost, candidate periods.  This module turns one sweep
+cell and one sweep into data:
+
+  * :class:`DistributionSpec` — a trace distribution by registry name + params;
+  * :class:`ScenarioSpec`     — platform + predictor + trace distribution +
+                                time_base + seed (one simulation cell);
+  * :class:`StrategySpec`     — a strategy by registry name + params;
+  * :class:`SweepSpec`        — named axes over any scenario field, cartesian
+                                or zipped;
+  * :class:`ExperimentSpec`   — scenario x strategies x metrics.
+
+Every spec round-trips through ``to_dict`` / ``from_dict`` (plain JSON types
+only), so experiments can be defined in JSON or on the CLI as well as in
+code.  Building runtime objects (``Distribution``, ``Strategy``, traces)
+goes through :mod:`repro.experiments.registry`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import json
+from typing import Any, Iterator, Mapping
+
+import numpy as np
+
+from repro.core.prediction import PredictedPlatform, Predictor
+from repro.core.traces import Distribution, EventTrace, make_event_trace
+from repro.core.waste import Platform
+
+__all__ = [
+    "SECONDS_PER_DAY",
+    "MU_IND_SYNTH",
+    "DistributionSpec",
+    "ScenarioSpec",
+    "StrategySpec",
+    "SweepSpec",
+    "ExperimentSpec",
+]
+
+SECONDS_PER_DAY = 86400.0
+MU_IND_SYNTH = 125.0 * 365.0 * 86400.0  # paper §5.1: 125-year individual MTBF
+
+
+def _normalize(value: Any) -> Any:
+    """Canonicalize lists to tuples (deep) so specs compare equal across a
+    JSON round-trip (lists) and literal construction (tuples)."""
+    if isinstance(value, (list, tuple)):
+        return tuple(_normalize(v) for v in value)
+    if isinstance(value, Mapping):
+        return {str(k): _normalize(v) for k, v in value.items()}
+    return value
+
+
+def _jsonable(value: Any) -> Any:
+    """Convert a spec field value to plain JSON types."""
+    if dataclasses.is_dataclass(value) and hasattr(value, "to_dict"):
+        return value.to_dict()
+    if isinstance(value, (np.floating, np.integer)):
+        return value.item()
+    if isinstance(value, (list, tuple)):
+        return [_jsonable(v) for v in value]
+    if isinstance(value, Mapping):
+        return {str(k): _jsonable(v) for k, v in value.items()}
+    return value
+
+
+@dataclasses.dataclass(frozen=True)
+class DistributionSpec:
+    """A trace distribution referenced by registry name, e.g.
+    ``DistributionSpec("weibull", {"shape": 0.7})``."""
+
+    name: str
+    params: dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "params", _normalize(self.params))
+
+    def build(self) -> Distribution:
+        from .registry import build_distribution
+        return build_distribution(self.name, **self.params)
+
+    def to_dict(self) -> dict:
+        return {"name": self.name, "params": _jsonable(self.params)}
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "DistributionSpec":
+        return cls(name=d["name"], params=dict(d.get("params", {})))
+
+
+def _coerce_dist(value: Any) -> DistributionSpec | None:
+    if value is None or isinstance(value, DistributionSpec):
+        return value
+    if isinstance(value, Mapping):
+        return DistributionSpec.from_dict(value)
+    raise TypeError(f"cannot coerce {value!r} into a DistributionSpec")
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioSpec:
+    """One simulation cell (paper §5.1 defaults).
+
+    Mirrors the paper's synthetic setting: N processors of individual MTBF
+    ``mu_ind`` (platform MTBF mu = mu_ind / N), checkpoints C/R/D, a fault
+    predictor (recall, precision) with proactive cost C_p = cp_ratio * C,
+    faults drawn from ``dist`` (superposed per-processor streams when
+    ``per_processor``), and a job of ``time_base_years_total / N`` years
+    starting ``start`` seconds into the trace.
+    """
+
+    n: int = 2 ** 16
+    dist: DistributionSpec = dataclasses.field(
+        default_factory=lambda: DistributionSpec("exponential"))
+    recall: float = 0.85
+    precision: float = 0.82
+    cp_ratio: float = 1.0
+    c: float = 600.0
+    r: float = 600.0
+    d: float = 60.0
+    mu_ind: float = MU_IND_SYNTH
+    time_base_years_total: float = 10_000.0
+    false_pred_dist: DistributionSpec | None = None
+    per_processor: bool = True
+    procs_per_stream: int = 1
+    start: float = 365.0 * SECONDS_PER_DAY
+    n_traces: int = 10
+    seed: int = 0
+    extras: dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "dist", _coerce_dist(self.dist))
+        object.__setattr__(self, "false_pred_dist",
+                           _coerce_dist(self.false_pred_dist))
+        object.__setattr__(self, "extras", _normalize(self.extras))
+
+    # -- derived quantities --------------------------------------------------
+
+    @property
+    def mu(self) -> float:
+        return self.mu_ind / self.n
+
+    @property
+    def platform(self) -> Platform:
+        return Platform(mu=self.mu, c=self.c, d=self.d, r=self.r)
+
+    @property
+    def predictor(self) -> Predictor:
+        return Predictor(recall=self.recall, precision=self.precision)
+
+    @property
+    def pp(self) -> PredictedPlatform:
+        return PredictedPlatform(self.platform, self.predictor,
+                                 cp=self.cp_ratio * self.c)
+
+    @property
+    def cp(self) -> float:
+        return self.cp_ratio * self.c
+
+    @property
+    def time_base(self) -> float:
+        return self.time_base_years_total * 365.0 * SECONDS_PER_DAY / self.n
+
+    @property
+    def horizon(self) -> float:
+        return self.start + max(60.0 * self.time_base, 50.0 * self.mu)
+
+    # -- trace generation ----------------------------------------------------
+
+    def make_trace(self, index: int, seed: int | None = None) -> EventTrace:
+        """Trace ``index`` of this scenario's bank (seeded, reproducible)."""
+        seed = self.seed if seed is None else seed
+        rng = np.random.default_rng(seed + 1009 * index)
+        n_streams = (max(1, self.n // self.procs_per_stream)
+                     if self.per_processor else None)
+        fdist = (self.false_pred_dist.build()
+                 if self.false_pred_dist is not None else None)
+        tr = make_event_trace(
+            self.dist.build(), self.mu, self.recall, self.precision,
+            self.horizon, rng, false_pred_dist=fdist, n_processors=n_streams)
+        # Shift so the job starts ``start`` seconds into the trace (avoids
+        # the synchronized-processor-start artifact, paper §5.1).
+        sel = tr.times >= self.start
+        return EventTrace(tr.times[sel] - self.start, tr.kinds[sel],
+                          self.horizon - self.start)
+
+    def make_traces(self, n_traces: int | None = None,
+                    seed: int | None = None) -> list[EventTrace]:
+        n = self.n_traces if n_traces is None else n_traces
+        return [self.make_trace(i, seed=seed) for i in range(n)]
+
+    # -- field update (dotted paths; how sweeps and the CLI set fields) ------
+
+    def replace(self, **updates: Any) -> "ScenarioSpec":
+        """``dataclasses.replace`` accepting dotted paths as keys.
+
+        ``spec.replace(**{"n": 512, "dist.params.shape": 0.5})`` returns a
+        new spec with the nested distribution parameter updated.
+        """
+        spec = self
+        for path, value in updates.items():
+            spec = spec._replace_path(path, value)
+        return spec
+
+    def _replace_path(self, path: str, value: Any) -> "ScenarioSpec":
+        head, _, rest = path.partition(".")
+        if not hasattr(self, head):
+            raise KeyError(f"ScenarioSpec has no field {head!r}")
+        if not rest:
+            return dataclasses.replace(self, **{head: value})
+        current = getattr(self, head)
+        if isinstance(current, DistributionSpec):
+            sub_head, _, sub_rest = rest.partition(".")
+            if sub_head == "name" and not sub_rest:
+                new = dataclasses.replace(current, name=value)
+            elif sub_head == "params":
+                params = dict(current.params)
+                if sub_rest:
+                    params[sub_rest] = value
+                else:
+                    params = dict(value)
+                new = dataclasses.replace(current, params=params)
+            else:
+                raise KeyError(f"unknown distribution field {rest!r}")
+            return dataclasses.replace(self, **{head: new})
+        if isinstance(current, Mapping):
+            sub = dict(current)
+            sub[rest] = value
+            return dataclasses.replace(self, **{head: sub})
+        raise KeyError(f"cannot descend into scalar field {head!r}")
+
+    # -- serialization -------------------------------------------------------
+
+    def to_dict(self) -> dict:
+        out = {}
+        for f in dataclasses.fields(self):
+            out[f.name] = _jsonable(getattr(self, f.name))
+        return out
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "ScenarioSpec":
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise KeyError(f"unknown ScenarioSpec fields: {sorted(unknown)}")
+        kw = dict(d)
+        if "dist" in kw:
+            kw["dist"] = _coerce_dist(kw["dist"])
+        if kw.get("false_pred_dist") is not None:
+            kw["false_pred_dist"] = _coerce_dist(kw["false_pred_dist"])
+        return cls(**kw)
+
+    def key(self) -> str:
+        """Canonical JSON string (cache key for the runner's trace bank)."""
+        return json.dumps(self.to_dict(), sort_keys=True)
+
+
+@dataclasses.dataclass(frozen=True)
+class StrategySpec:
+    """A checkpointing strategy by registry name + params.
+
+    ``label`` overrides the display name in result tables.  Examples::
+
+        StrategySpec("rfo")
+        StrategySpec("inexact_prediction", {"window": 1200.0})
+        StrategySpec("best_period", {"base": "rfo", "n_points": 12})
+    """
+
+    name: str
+    params: dict = dataclasses.field(default_factory=dict)
+    label: str | None = None
+
+    def build(self, scenario: ScenarioSpec):
+        from .registry import build_strategy
+        return build_strategy(self.name, scenario, **self.params)
+
+    @property
+    def display(self) -> str:
+        return self.label if self.label is not None else self.name
+
+    def to_dict(self) -> dict:
+        out: dict[str, Any] = {"name": self.name,
+                               "params": _jsonable(self.params)}
+        if self.label is not None:
+            out["label"] = self.label
+        return out
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any] | str) -> "StrategySpec":
+        if isinstance(d, str):
+            return cls(name=d)
+        return cls(name=d["name"], params=dict(d.get("params", {})),
+                   label=d.get("label"))
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    """Named axes over scenario fields, cartesian (default) or zipped.
+
+    Axis keys are dotted field paths into :class:`ScenarioSpec`
+    (``"n"``, ``"dist.params.shape"``, ``"extras.phi"``); a comma-separated
+    key sweeps several fields together (``"recall,precision"`` with value
+    pairs).  ``labels`` optionally maps an axis key to display values used
+    in result-table columns (e.g. predictor names instead of number pairs);
+    ``names`` renames an axis's result-table column (e.g.
+    ``{"recall,precision": "predictor"}``).
+    """
+
+    axes: dict = dataclasses.field(default_factory=dict)
+    mode: str = "cartesian"
+    labels: dict = dataclasses.field(default_factory=dict)
+    names: dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "axes",
+                           {k: _normalize(v) for k, v in self.axes.items()})
+        object.__setattr__(self, "labels",
+                           {k: _normalize(v) for k, v in self.labels.items()})
+        if self.mode not in ("cartesian", "zip"):
+            raise ValueError(f"unknown sweep mode {self.mode!r}")
+        if self.mode == "zip" and self.axes:
+            lengths = {len(v) for v in self.axes.values()}
+            if len(lengths) > 1:
+                raise ValueError(f"zip sweep axes differ in length: {lengths}")
+        for key, names in self.labels.items():
+            if key not in self.axes:
+                raise ValueError(f"labels for unknown axis {key!r}")
+            if len(names) != len(self.axes[key]):
+                raise ValueError(f"labels/values length mismatch on {key!r}")
+        for key in self.names:
+            if key not in self.axes:
+                raise ValueError(f"column name for unknown axis {key!r}")
+
+    def _axis_column(self, key: str, idx: int, value: Any) -> Any:
+        if key in self.labels:
+            return self.labels[key][idx]
+        if isinstance(value, DistributionSpec):
+            return value.name
+        if isinstance(value, Mapping):
+            return json.dumps(_jsonable(value), sort_keys=True)
+        if isinstance(value, (list, tuple)):
+            return "/".join(str(v) for v in value)
+        return value
+
+    def _apply(self, spec: ScenarioSpec, key: str, value: Any) -> ScenarioSpec:
+        fields = key.split(",")
+        if len(fields) == 1:
+            return spec.replace(**{key: value})
+        if len(value) != len(fields):
+            raise ValueError(f"axis {key!r} expects {len(fields)}-tuples, "
+                             f"got {value!r}")
+        return spec.replace(**dict(zip(fields, value)))
+
+    def cells(self, base: ScenarioSpec) -> Iterator[tuple[dict, ScenarioSpec]]:
+        """Yield ``(axis_columns, scenario)`` per sweep cell."""
+        if not self.axes:
+            yield {}, base
+            return
+        keys = list(self.axes)
+        if self.mode == "zip":
+            n = len(self.axes[keys[0]])
+            index_sets: Iterator[tuple[int, ...]] = (
+                (i,) * len(keys) for i in range(n))
+        else:
+            # First axis is major, last axis fastest (matches nested loops).
+            index_sets = itertools.product(
+                *(range(len(self.axes[k])) for k in keys))
+        for indices in index_sets:
+            cols: dict[str, Any] = {}
+            spec = base
+            for key, i in zip(keys, indices):
+                value = self.axes[key][i]
+                cols[self.names.get(key, key)] = \
+                    self._axis_column(key, i, value)
+                spec = self._apply(spec, key, value)
+            yield cols, spec
+
+    def to_dict(self) -> dict:
+        return {"axes": {k: _jsonable(v) for k, v in self.axes.items()},
+                "mode": self.mode,
+                "labels": _jsonable(self.labels),
+                "names": dict(self.names)}
+
+    @staticmethod
+    def _coerce_axis_value(field: str, value: Any) -> Any:
+        if field in ("dist", "false_pred_dist") and value is not None:
+            return _coerce_dist(value)
+        return value
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "SweepSpec":
+        axes: dict[str, list] = {}
+        for key, values in d.get("axes", {}).items():
+            fields = key.split(",")
+            if len(fields) == 1:
+                values = [cls._coerce_axis_value(key, v) for v in values]
+            else:
+                values = [tuple(cls._coerce_axis_value(f, comp)
+                                for f, comp in zip(fields, v))
+                          for v in values]
+            axes[key] = list(values)
+        return cls(axes=axes, mode=d.get("mode", "cartesian"),
+                   labels={k: list(v)
+                           for k, v in d.get("labels", {}).items()},
+                   names=dict(d.get("names", {})))
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentSpec:
+    """Scenario x strategies x metrics (optionally swept over axes)."""
+
+    name: str
+    scenario: ScenarioSpec = dataclasses.field(default_factory=ScenarioSpec)
+    strategies: tuple = ()
+    sweep: SweepSpec | None = None
+    metrics: tuple = ("makespan", "makespan_days", "waste")
+    description: str = ""
+
+    def __post_init__(self) -> None:
+        object.__setattr__(
+            self, "strategies",
+            tuple(StrategySpec.from_dict(s) if not isinstance(s, StrategySpec)
+                  else s for s in self.strategies))
+        object.__setattr__(self, "metrics", tuple(self.metrics))
+        if self.sweep is not None and not isinstance(self.sweep, SweepSpec):
+            object.__setattr__(self, "sweep", SweepSpec.from_dict(self.sweep))
+
+    def cells(self) -> Iterator[tuple[dict, ScenarioSpec]]:
+        sweep = self.sweep or SweepSpec()
+        yield from sweep.cells(self.scenario)
+
+    def to_dict(self) -> dict:
+        return {
+            "name": self.name,
+            "scenario": self.scenario.to_dict(),
+            "strategies": [s.to_dict() for s in self.strategies],
+            "sweep": self.sweep.to_dict() if self.sweep else None,
+            "metrics": list(self.metrics),
+            "description": self.description,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "ExperimentSpec":
+        return cls(
+            name=d["name"],
+            scenario=ScenarioSpec.from_dict(d.get("scenario", {})),
+            strategies=tuple(StrategySpec.from_dict(s)
+                             for s in d.get("strategies", ())),
+            sweep=(SweepSpec.from_dict(d["sweep"])
+                   if d.get("sweep") else None),
+            metrics=tuple(d.get("metrics",
+                                ("makespan", "makespan_days", "waste"))),
+            description=d.get("description", ""),
+        )
+
+    def to_json(self, **kw: Any) -> str:
+        return json.dumps(self.to_dict(), **kw)
+
+    @classmethod
+    def from_json(cls, s: str) -> "ExperimentSpec":
+        return cls.from_dict(json.loads(s))

@@ -1,0 +1,305 @@
+"""Experiment API: spec round-trips, registry coverage, batched-runner
+equivalence with the legacy serial evaluation loops."""
+
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.policies import Strategy, best_period, evaluate
+from repro.core.simulator import simulate
+from repro.experiments import (DistributionSpec, EvalCache, ExperimentSpec,
+                               ResultTable, ScenarioSpec, StrategySpec,
+                               SweepSpec, BestPeriodSearch, build_distribution,
+                               build_strategy, evaluate_strategies,
+                               list_distributions, list_strategies,
+                               run_experiment)
+from repro.experiments.runner import best_period_search
+
+# A deliberately small cell: mu = 1e5 s, short job, no start offset, so each
+# trace holds a handful of events and the whole module runs in seconds.
+SMALL = ScenarioSpec(n=32, dist=DistributionSpec("weibull", {"shape": 0.7}),
+                     mu_ind=32 * 1e5, c=600.0, d=60.0, r=600.0,
+                     time_base_years_total=0.1, start=0.0, n_traces=4,
+                     seed=3)
+
+
+# ---------------------------------------------------------------------------
+# Spec serialization
+# ---------------------------------------------------------------------------
+
+def test_scenario_spec_round_trip():
+    spec = SMALL.replace(**{"false_pred_dist": DistributionSpec("uniform"),
+                            "extras.phi": 0.7})
+    again = ScenarioSpec.from_dict(json.loads(json.dumps(spec.to_dict())))
+    assert again == spec
+    assert again.key() == spec.key()
+
+
+def test_experiment_spec_round_trip():
+    exp = ExperimentSpec(
+        name="rt",
+        scenario=SMALL,
+        sweep=SweepSpec(
+            axes={"recall,precision": [(0.85, 0.82), (0.7, 0.4)],
+                  "dist.params.shape": [0.5, 0.7]},
+            labels={"recall,precision": ["good", "fair"]},
+            names={"recall,precision": "predictor"}),
+        strategies=(StrategySpec("rfo"),
+                    StrategySpec("best_period", {"base": "rfo",
+                                                 "n_points": 6})),
+        metrics=("makespan", "waste"),
+    )
+    assert ExperimentSpec.from_json(exp.to_json()) == exp
+
+
+def test_scenario_replace_dotted_paths():
+    spec = SMALL.replace(**{"n": 64, "dist.params.shape": 0.5,
+                            "extras.k": 2})
+    assert spec.n == 64
+    assert spec.dist.params["shape"] == 0.5
+    assert spec.extras["k"] == 2
+    assert SMALL.dist.params["shape"] == 0.7  # original untouched
+    with pytest.raises(KeyError):
+        SMALL.replace(no_such_field=1)
+
+
+def test_scenario_derived_quantities():
+    assert SMALL.mu == pytest.approx(1e5)
+    assert SMALL.platform.c == 600.0
+    assert SMALL.pp.cp == SMALL.cp_ratio * SMALL.c
+    assert SMALL.time_base == pytest.approx(0.1 * 365 * 86400 / 32)
+
+
+# ---------------------------------------------------------------------------
+# Sweeps
+# ---------------------------------------------------------------------------
+
+def test_sweep_cartesian_order_and_columns():
+    sweep = SweepSpec(axes={"n": [16, 32], "cp_ratio": [1.0, 0.1, 2.0]},
+                      labels={"cp_ratio": ["equal", "cheap", "expensive"]})
+    cells = list(sweep.cells(SMALL))
+    assert len(cells) == 6
+    # First axis is major; labels replace raw values in columns.
+    assert [c["n"] for c, _ in cells] == [16, 16, 16, 32, 32, 32]
+    assert [c["cp_ratio"] for c, _ in cells][:3] == \
+        ["equal", "cheap", "expensive"]
+    assert cells[1][1].cp_ratio == 0.1 and cells[1][1].n == 16
+
+
+def test_sweep_zip_and_compound_axis():
+    sweep = SweepSpec(axes={"recall,precision": [(0.9, 0.9), (0.5, 0.3)],
+                            "n": [16, 32]},
+                      mode="zip",
+                      names={"recall,precision": "predictor"})
+    cells = list(sweep.cells(SMALL))
+    assert len(cells) == 2
+    cols, spec = cells[1]
+    assert spec.recall == 0.5 and spec.precision == 0.3 and spec.n == 32
+    assert cols["predictor"] == "0.5/0.3"
+    with pytest.raises(ValueError):
+        SweepSpec(axes={"n": [1, 2], "recall": [0.1]}, mode="zip")
+
+
+# ---------------------------------------------------------------------------
+# Registry coverage
+# ---------------------------------------------------------------------------
+
+# Params needed to build each strategy on the SMALL scenario.
+_STRATEGY_PARAMS = {
+    "fixed_period": {"period": 5000.0},
+    "best_period": {"base": "rfo", "n_points": 4},
+}
+
+_DISTRIBUTION_PARAMS = {
+    "empirical": {"samples": (10.0, 20.0, 30.0)},
+    "lanl": {"n_intervals": 50},
+}
+
+
+def test_every_registered_strategy_builds():
+    names = list_strategies()
+    assert {"young", "daly", "rfo", "optimal_prediction",
+            "inexact_prediction", "simple_policy", "best_period",
+            "dynamic_rfo", "dynamic_prediction"} <= set(names)
+    for name in names:
+        built = build_strategy(name, SMALL, **_STRATEGY_PARAMS.get(name, {}))
+        assert isinstance(built, (Strategy, BestPeriodSearch)), name
+        if isinstance(built, Strategy) and not callable(built.period):
+            assert built.period >= SMALL.c
+
+
+def test_every_registered_distribution_builds_and_samples():
+    rng = np.random.default_rng(0)
+    for name in list_distributions():
+        dist = build_distribution(name, **_DISTRIBUTION_PARAMS.get(name, {}))
+        draws = dist.sample(rng, 8)
+        assert draws.shape == (8,)
+        assert np.all(draws >= 0)
+        assert dist.mean > 0
+
+
+def test_strategy_spec_build_and_display():
+    sspec = StrategySpec("inexact_prediction", {"window": 900.0},
+                         label="Inexact(900)")
+    strat = sspec.build(SMALL)
+    assert strat.inexact_window == 900.0
+    assert sspec.display == "Inexact(900)"
+
+
+def test_dynamic_strategy_requires_shape():
+    sc = SMALL.replace(dist=DistributionSpec("exponential"))
+    with pytest.raises(ValueError):
+        build_strategy("dynamic_rfo", sc)
+    strat = build_strategy("dynamic_rfo", sc, shape=0.7)
+    assert callable(strat.period)
+    assert strat.period(0.0) >= sc.c
+
+
+# ---------------------------------------------------------------------------
+# Batched runner == legacy serial loops, bit for bit
+# ---------------------------------------------------------------------------
+
+def _legacy_evaluate(strategy, traces, platform, time_base, cp, seed=0):
+    """The historical policies.evaluate loop, verbatim."""
+    total = 0.0
+    for i, trace in enumerate(traces):
+        rng = np.random.default_rng(seed + 7919 * i)
+        res = simulate(trace, platform, time_base, strategy.period,
+                       cp=cp, trust=strategy.trust,
+                       inexact_window=strategy.inexact_window, rng=rng)
+        total += res.makespan
+    return total / max(1, len(traces))
+
+
+def _strategies_under_test():
+    return [build_strategy("rfo", SMALL),
+            build_strategy("optimal_prediction", SMALL),
+            build_strategy("inexact_prediction", SMALL),
+            build_strategy("young", SMALL)]
+
+
+def test_runner_matches_legacy_evaluate_bit_for_bit():
+    traces = SMALL.make_traces()
+    plat, tb, cp = SMALL.platform, SMALL.time_base, SMALL.cp
+    strategies = _strategies_under_test()
+    batched = evaluate_strategies(traces, plat, tb, cp, strategies, seed=7)
+    for strat, got in zip(strategies, batched):
+        want = _legacy_evaluate(strat, traces, plat, tb, cp, seed=7)
+        assert got == want  # exact float equality, not approx
+
+
+def test_policies_evaluate_wrapper_matches_legacy():
+    traces = SMALL.make_traces()
+    plat, tb, cp = SMALL.platform, SMALL.time_base, SMALL.cp
+    strat = build_strategy("optimal_prediction", SMALL)
+    assert evaluate(strat, traces, plat, tb, cp, seed=5) == \
+        _legacy_evaluate(strat, traces, plat, tb, cp, seed=5)
+
+
+def test_cache_dedupes_identical_candidates():
+    traces = SMALL.make_traces()
+    plat, tb, cp = SMALL.platform, SMALL.time_base, SMALL.cp
+    rfo = build_strategy("rfo", SMALL)
+    cache = EvalCache()
+    m1 = evaluate_strategies(traces, plat, tb, cp, [rfo, rfo], cache=cache)
+    assert m1[0] == m1[1]
+    assert cache.misses == len(traces)  # the duplicate cost nothing
+    # A second call against the warm cache simulates nothing new.
+    evaluate_strategies(traces, plat, tb, cp, [rfo], cache=cache)
+    assert cache.misses == len(traces)
+
+
+def test_best_period_matches_legacy_search():
+    """The deduped grid search must find the legacy optimum (same period,
+    same mean makespan)."""
+    traces = SMALL.make_traces()
+    plat, tb, cp = SMALL.platform, SMALL.time_base, SMALL.cp
+    base = build_strategy("rfo", SMALL)
+
+    # Legacy algorithm, verbatim (pre-dedupe).
+    t0 = base.period
+    lo = max(plat.c * 1.001, t0 / 8.0)
+    hi = max(lo * 1.01, t0 * 8.0)
+    grid = np.append(np.geomspace(lo, hi, 12), t0)
+    best_t, best_m = t0, math.inf
+    for t in grid:
+        m = _legacy_evaluate(base.with_period(float(t)), traces, plat, tb, cp)
+        if m < best_m:
+            best_t, best_m = float(t), m
+
+    refined, got_m = best_period(base, traces, plat, tb, cp, n_points=12)
+    assert refined.period == best_t
+    assert got_m == best_m
+    assert refined.name == "BestPeriod(RFO)"
+
+
+def test_best_period_search_reuses_cache():
+    traces = SMALL.make_traces()
+    plat, tb, cp = SMALL.platform, SMALL.time_base, SMALL.cp
+    base = build_strategy("rfo", SMALL)
+    cache = EvalCache()
+    evaluate_strategies(traces, plat, tb, cp, [base], cache=cache)
+    sims_before = cache.misses
+    best_period_search(base, traces, plat, tb, cp, n_points=6, cache=cache)
+    # The grid is the 6 log-spaced points plus the analytic period t0; t0
+    # was already simulated, so only the 6 new points cost anything.
+    assert cache.misses == sims_before + 6 * len(traces)
+    assert cache.hits >= len(traces)
+
+
+# ---------------------------------------------------------------------------
+# run_experiment + ResultTable
+# ---------------------------------------------------------------------------
+
+def test_run_experiment_sweep_and_metrics():
+    exp = ExperimentSpec(
+        name="t",
+        scenario=SMALL,
+        sweep=SweepSpec(axes={"n": [32, 64]}),
+        strategies=(StrategySpec("rfo"), StrategySpec("optimal_prediction")),
+        metrics=("makespan", "makespan_days", "waste"),
+    )
+    table = run_experiment(exp)
+    assert len(table) == 4
+    assert set(table.columns) >= {"n", "strategy", "period", "makespan",
+                                  "makespan_days", "waste"}
+    m = table.value("makespan", n=32, strategy="RFO")
+    assert table.value("makespan_days", n=32, strategy="RFO") == \
+        pytest.approx(m / 86400.0)
+    want = _legacy_evaluate(build_strategy("rfo", SMALL),
+                            SMALL.make_traces(), SMALL.platform,
+                            SMALL.time_base, SMALL.cp, seed=SMALL.seed)
+    assert m == want
+    # waste = 1 - time_base / makespan
+    assert table.value("waste", n=32, strategy="RFO") == \
+        pytest.approx(1.0 - SMALL.time_base / m)
+
+
+def test_run_experiment_analytic_mode():
+    exp = ExperimentSpec(
+        name="analytic",
+        scenario=SMALL.replace(n_traces=0),
+        strategies=(StrategySpec("young"), StrategySpec("daly")),
+        metrics=(),
+    )
+    table = run_experiment(exp)
+    periods = table.strategy_dict("period")
+    assert periods["Young"] > periods["Daly"] * 0  # both present, positive
+    assert set(periods) == {"Young", "Daly"}
+
+
+def test_result_table_helpers():
+    table = ResultTable([{"a": 1, "s": "x", "v": 2.0},
+                         {"a": 1, "s": "y", "v": 4.0},
+                         {"a": 2, "s": "x", "v": 6.0}])
+    assert len(table.where(a=1)) == 2
+    assert table.value("v", a=2, s="x") == 6.0
+    assert table.mean("v", a=1) == 3.0
+    with pytest.raises(KeyError):
+        table.value("v", a=1)  # ambiguous
+    assert json.loads(table.to_json()) == table.rows
+    assert "strategy" not in table.columns
+    formatted = table.format(["a", "v"])
+    assert "6.00" in formatted

@@ -5,6 +5,8 @@ import math
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # optional test dep: degrade to skip
 from hypothesis import given, settings, strategies as st
 
 from repro.configs.base import PlatformConfig

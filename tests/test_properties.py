@@ -4,6 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # optional test dep: degrade to skip
 from hypothesis import given, settings, strategies as st
 
 from repro.core.prediction import (PredictedPlatform, Predictor,

@@ -4,6 +4,8 @@ import math
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # optional test dep: degrade to skip
 from hypothesis import given, settings, strategies as st
 
 from repro.core.traces import (FALSE_PRED, FAULT_PRED, FAULT_UNPRED,

@@ -3,6 +3,8 @@
 import math
 
 import pytest
+
+pytest.importorskip("hypothesis")  # optional test dep: degrade to skip
 from hypothesis import given, settings, strategies as st
 
 from repro.core.waste import (ALPHA_CAP, Platform, clamp_period,
