@@ -1,0 +1,160 @@
+"""Engine benchmark: scalar event loop vs the lane-parallel batched engine.
+
+Times the two simulation engines on the standard bank sizes (the paper's
+synthetic scenario, 200 traces x 24 candidate periods by default) plus the
+per-trace vs bank-level trace generation paths, verifies the engines agree
+bit-for-bit on the measured subset, and writes ``BENCH_simulator.json`` —
+the perf trajectory of the repo's hottest path.
+
+    PYTHONPATH=src python benchmarks/engine_perf.py            # full grid
+    PYTHONPATH=src python benchmarks/engine_perf.py --quick    # CI smoke
+
+The scalar loop is timed on ``--scalar-periods`` period columns of the grid
+and extrapolated linearly to the full grid (each column costs the same: one
+``simulate()`` call per trace); the batched engine runs the whole grid for
+real.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+
+def run(n_traces: int, n_periods: int, scalar_periods: int,
+        batched_traces: bool) -> dict:
+    from repro.core.batch import simulate_batch
+    from repro.core.prediction import beta_lim
+    from repro.core.simulator import ThresholdTrust, simulate
+    from repro.experiments.spec import ScenarioSpec
+
+    spec = ScenarioSpec(n_traces=n_traces)
+    out: dict = {"config": {"scenario": spec.to_dict(),
+                            "n_traces": n_traces, "n_periods": n_periods,
+                            "scalar_periods_measured": scalar_periods}}
+
+    # -- trace-bank generation: per-trace streams vs shared waves ----------
+    t0 = time.perf_counter()
+    traces = spec.make_traces()
+    t_gen = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    spec.make_traces(batched=True)
+    t_gen_batched = time.perf_counter() - t0
+    out["bank_gen"] = {
+        "n_traces": n_traces,
+        "per_trace_s": round(t_gen, 4),
+        "batched_s": round(t_gen_batched, 4),
+        "speedup": round(t_gen / max(t_gen_batched, 1e-9), 2),
+        "events_per_trace": float(np.mean([t.times.size for t in traces])),
+    }
+    if batched_traces:
+        traces = spec.make_traces(batched=True)
+
+    # Bank-level sampling shines when per-trace Python overhead dominates
+    # (many small traces); at paper-scale superposition each trace already
+    # saturates the vectorized wave path.  Record the small-bank regime too.
+    from repro.experiments.spec import DistributionSpec
+    small = ScenarioSpec(n=32, dist=DistributionSpec("weibull",
+                                                     {"shape": 0.7}),
+                         mu_ind=32 * 1e5, time_base_years_total=0.1,
+                         start=0.0, n_traces=8 * n_traces, seed=3)
+    t0 = time.perf_counter()
+    small.make_traces()
+    t_small = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    small.make_traces(batched=True)
+    t_small_b = time.perf_counter() - t0
+    out["bank_gen_small_traces"] = {
+        "n_traces": small.n_traces,
+        "per_trace_s": round(t_small, 4),
+        "batched_s": round(t_small_b, 4),
+        "speedup": round(t_small / max(t_small_b, 1e-9), 2),
+    }
+
+    # -- the engines over the (period x trace) candidate grid --------------
+    platform, time_base, cp = spec.platform, spec.time_base, spec.cp
+    trust = ThresholdTrust(beta_lim(spec.pp))
+    periods = np.geomspace(platform.c * 2.0, platform.mu * 0.5, n_periods)
+    seeds = 7919 * np.arange(n_traces)
+
+    t0 = time.perf_counter()
+    batch = simulate_batch(traces, platform, time_base, periods, cp=cp,
+                           trust=trust, trace_seeds=seeds)
+    t_batch = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    max_diff = 0.0
+    for ci in range(scalar_periods):
+        for ti, tr in enumerate(traces):
+            res = simulate(tr, platform, time_base, float(periods[ci]),
+                           cp=cp, trust=trust,
+                           rng=np.random.default_rng(int(seeds[ti])))
+            max_diff = max(max_diff,
+                           abs(res.makespan - batch.makespan[ci, ti]))
+    t_scalar = time.perf_counter() - t0
+    t_scalar_full = t_scalar * n_periods / scalar_periods
+
+    out["engine"] = {
+        "grid": f"{n_periods} periods x {n_traces} traces",
+        "lanes": n_periods * n_traces,
+        "batch_s": round(t_batch, 3),
+        "scalar_s_measured": round(t_scalar, 3),
+        "scalar_s_est_full_grid": round(t_scalar_full, 3),
+        "speedup": round(t_scalar_full / max(t_batch, 1e-9), 1),
+        "max_abs_makespan_diff": max_diff,
+    }
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--traces", type=int, default=None,
+                    help="bank size (default 200; 24 with --quick)")
+    ap.add_argument("--periods", type=int, default=None,
+                    help="candidate periods (default 24; 6 with --quick)")
+    ap.add_argument("--scalar-periods", type=int, default=None,
+                    help="period columns to time the scalar loop on "
+                         "(default 3; 1 with --quick)")
+    ap.add_argument("--quick", action="store_true",
+                    help="small sizes for CI smoke runs")
+    ap.add_argument("--batched-traces", action="store_true",
+                    help="benchmark the engines on a bank sampled in "
+                         "shared RNG waves")
+    ap.add_argument("--out", default="BENCH_simulator.json")
+    args = ap.parse_args()
+
+    n_traces = args.traces or (24 if args.quick else 200)
+    n_periods = args.periods or (6 if args.quick else 24)
+    scalar_periods = args.scalar_periods or (1 if args.quick else 3)
+    scalar_periods = min(scalar_periods, n_periods)
+
+    result = run(n_traces, n_periods, scalar_periods, args.batched_traces)
+    gen, eng = result["bank_gen"], result["engine"]
+    small = result["bank_gen_small_traces"]
+    print(f"bank gen ({n_traces} traces): per-trace {gen['per_trace_s']}s, "
+          f"batched {gen['batched_s']}s ({gen['speedup']}x)")
+    print(f"bank gen ({small['n_traces']} small traces): per-trace "
+          f"{small['per_trace_s']}s, batched {small['batched_s']}s "
+          f"({small['speedup']}x)")
+    print(f"engine ({eng['grid']}): batch {eng['batch_s']}s, scalar "
+          f"~{eng['scalar_s_est_full_grid']}s -> {eng['speedup']}x "
+          f"(max |diff| = {eng['max_abs_makespan_diff']})")
+    if eng["max_abs_makespan_diff"] > 1e-9:
+        raise AssertionError("engines disagree beyond the 1e-9 contract")
+
+    with open(args.out, "w") as fh:
+        json.dump(result, fh, indent=1)
+    print(f"results -> {args.out}")
+
+
+if __name__ == "__main__":
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for _p in (_root, os.path.join(_root, "src")):
+        if _p not in sys.path:
+            sys.path.insert(0, _p)
+    main()

@@ -94,7 +94,9 @@ def _parse_set(items: list[str]) -> dict[str, object]:
 
 def run_one_experiment(name: str, overrides: dict[str, object],
                        quick: bool, n_traces: int | None, seed: int | None,
-                       workers: int | None, out_path: str | None) -> None:
+                       workers: int | None, out_path: str | None,
+                       persist: bool = True, engine: str | None = None,
+                       batched_traces: bool | None = None) -> None:
     from repro.experiments import build_experiment, run_experiment
     exp = build_experiment(name, quick=quick)
     sweep = exp.sweep
@@ -135,7 +137,8 @@ def run_one_experiment(name: str, overrides: dict[str, object],
             f"`python -m benchmarks.run --only {name}` instead")
     print(f"# {exp.name}: {exp.description}", flush=True)
     table = run_experiment(exp, n_traces=n_traces, seed=seed,
-                           workers=workers, verbose=True)
+                           workers=workers, verbose=True, persist=persist,
+                           engine=engine, batched_traces=batched_traces)
     print()
     print(table.format())
     if out_path:
@@ -163,7 +166,21 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=None,
                     help="override the evaluation seed")
     ap.add_argument("--workers", type=int, default=None,
-                    help="process-parallel evaluation workers")
+                    help="process-parallel workers for scalar-fallback "
+                         "candidates (default: $REPRO_EXPERIMENT_WORKERS "
+                         "or the CPU count)")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="bypass the persistent on-disk result cache "
+                         "(~/.cache/repro or $REPRO_CACHE_DIR)")
+    ap.add_argument("--engine", default=None,
+                    choices=("auto", "batch", "scalar"),
+                    help="simulation engine for --experiment runs "
+                         "(default auto: lane-parallel batched where "
+                         "possible, scalar fallback otherwise)")
+    ap.add_argument("--batched-traces", action="store_true",
+                    help="sample each cell's trace bank in shared RNG "
+                         "waves (a different but statistically identical "
+                         "bank; separate trace/result caches)")
     ap.add_argument("--out", default=None,
                     help="write the result table JSON here "
                          "(default experiment_<name>.json)")
@@ -190,7 +207,9 @@ def main() -> None:
         out = args.out or f"experiment_{args.experiment}.json"
         try:
             run_one_experiment(args.experiment, _parse_set(args.set), quick,
-                               args.traces, args.seed, args.workers, out)
+                               args.traces, args.seed, args.workers, out,
+                               persist=not args.no_cache, engine=args.engine,
+                               batched_traces=args.batched_traces or None)
         except KeyError as e:  # unknown experiment / field: message, not trace
             raise SystemExit(f"error: {e.args[0]}") from None
         return

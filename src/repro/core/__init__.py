@@ -9,10 +9,14 @@ Layers:
   traces.py      fault / false-prediction trace generation (Exponential,
                  Weibull, Uniform, Empirical/log-based).
   simulator.py   discrete-event execution engine (paper §5 mechanics).
+  batch.py       lane-parallel batched engine: all (candidate x trace)
+                 lanes advanced together as SoA NumPy state, bit-for-bit
+                 vs simulator.py (optional jax backend in batch_jax.py).
   policies.py    the compared strategies incl. BestPeriod search.
 """
 
-from . import policies, prediction, simulator, traces, waste
+from . import batch, policies, prediction, simulator, traces, waste
+from .batch import BatchResult, simulate_batch
 from .prediction import (PredictedPlatform, Predictor, beta_lim,
                          optimal_period_with_prediction, t_pred,
                          t_pred_asymptotic, waste1, waste2,
@@ -22,7 +26,8 @@ from .traces import EventTrace, Exponential, UniformDist, Weibull, make_event_tr
 from .waste import Platform, platform_mtbf, t_daly, t_rfo, t_young, waste
 
 __all__ = [
-    "policies", "prediction", "simulator", "traces", "waste",
+    "batch", "policies", "prediction", "simulator", "traces", "waste",
+    "BatchResult", "simulate_batch",
     "Platform", "Predictor", "PredictedPlatform", "EventTrace", "SimResult",
     "Exponential", "Weibull", "UniformDist",
     "platform_mtbf", "t_young", "t_daly", "t_rfo", "beta_lim",

@@ -1,0 +1,667 @@
+"""Lane-parallel batched simulation engine.
+
+:func:`simulate_batch` executes *all traces of a bank x all candidate
+periods* simultaneously: one lane per (candidate, trace) pair, the whole
+fleet of phase machines advanced together as structure-of-arrays NumPy
+state (``now`` / ``done`` / ``saved`` / ``w_rem`` vectors, per-lane event
+cursors into a padded 2-D event tensor, a small deferred-fault slot matrix
+for true predictions).  Each step of the lockstep loop moves every active
+lane either one event pop, one event arrival, or one schedule phase closer
+to its next event, so the per-lane Python interpreter cost of the scalar
+engine (:func:`repro.core.simulator.simulate`) is replaced by a handful of
+vectorized array ops per step.
+
+Equivalence contract: the lane engine replays the *exact floating-point
+operation sequence* of the scalar phase machine (same sub-expressions, same
+order) and draws lane randomness from ``default_rng(trace_seed)`` at the
+same decision points, so per-lane makespans and counters are **bit-for-bit
+equal** to ``simulate(trace, ..., rng=np.random.default_rng(trace_seed))``
+for every supported candidate:
+
+  * any constant (float) period — dynamic/callable periods need the scalar
+    engine;
+  * trust policies Never / Always / Threshold / FixedProbability (the
+    stochastic one draws per-lane, preserving the scalar draw order);
+  * exact and inexact prediction windows (uncertainty offsets are drawn
+    from the lane generator at prediction-announcement time, exactly where
+    the scalar engine draws them).
+
+An optional JAX backend (``backend="jax"``) runs the same lockstep loop as
+a single ``lax.while_loop`` over the lane arrays so banks can be dispatched
+to accelerators; it supports the deterministic trust policies with exact
+predictions (no draw sites), and requires x64 mode for the equivalence
+contract to hold.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from .simulator import (_CKPT, _DOWN, _PROCKPT, _RECOVER, _WORK, AlwaysTrust,
+                        FixedProbabilityTrust, NeverTrust, SimResult,
+                        ThresholdTrust, TrustPolicy)
+from .traces import FAULT_PRED, FAULT_UNPRED, EventTrace
+from .waste import Platform
+
+__all__ = [
+    "BatchResult",
+    "simulate_batch",
+    "simulate_lanes",
+    "supported_trust",
+    "trust_code",
+]
+
+# Trust-policy codes for the vectorized decision step.
+_TRUST_NEVER, _TRUST_ALWAYS, _TRUST_THRESHOLD, _TRUST_FIXED_Q = range(4)
+
+# Lane program counter: what happens when ``now`` reaches ``target``.
+_PC_POP = 0      # needs its next event popped (target is meaningless)
+_PC_FAULT = 1    # arrival applies a fault at ``target``
+_PC_PRED = 2     # arrival decides a proactive checkpoint at ``target``
+_PC_FINAL = 3    # events exhausted: run fault-free to completion
+
+_BIG_SEQ = np.iinfo(np.int64).max
+
+
+def supported_trust(trust: TrustPolicy) -> bool:
+    """True if the lane engine can evaluate this policy vectorized."""
+    return isinstance(trust, (NeverTrust, AlwaysTrust, ThresholdTrust,
+                              FixedProbabilityTrust))
+
+
+def trust_code(trust: TrustPolicy) -> tuple[int, float]:
+    """(code, parameter) encoding of a supported trust policy."""
+    if isinstance(trust, NeverTrust):
+        return _TRUST_NEVER, 0.0
+    if isinstance(trust, AlwaysTrust):
+        return _TRUST_ALWAYS, 0.0
+    if isinstance(trust, ThresholdTrust):
+        return _TRUST_THRESHOLD, float(trust.threshold)
+    if isinstance(trust, FixedProbabilityTrust):
+        return _TRUST_FIXED_Q, float(trust.q)
+    raise TypeError(f"unsupported trust policy for the lane engine: {trust!r}")
+
+
+# ---------------------------------------------------------------------------
+# Padded event bank
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class _EventBank:
+    """Traces packed as a padded 2-D event tensor (one row per trace)."""
+
+    times: np.ndarray   # (n_traces, max_events) float64, +inf padded
+    kinds: np.ndarray   # (n_traces, max_events) int8, -1 padded
+    n_events: np.ndarray  # (n_traces,) int64
+
+
+def _pack_bank(traces: Sequence[EventTrace], start: float) -> _EventBank:
+    shifted: list[tuple[np.ndarray, np.ndarray]] = []
+    for tr in traces:
+        sel = tr.times >= start
+        shifted.append((np.asarray(tr.times[sel] - start, dtype=np.float64),
+                        np.asarray(tr.kinds[sel], dtype=np.int8)))
+    n = len(shifted)
+    width = max([t.size for t, _ in shifted], default=0)
+    times = np.full((n, max(1, width)), np.inf, dtype=np.float64)
+    kinds = np.full((n, max(1, width)), -1, dtype=np.int8)
+    n_events = np.zeros(n, dtype=np.int64)
+    for i, (t, k) in enumerate(shifted):
+        times[i, :t.size] = t
+        kinds[i, :k.size] = k
+        n_events[i] = t.size
+    return _EventBank(times, kinds, n_events)
+
+
+# ---------------------------------------------------------------------------
+# Batch result
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class BatchResult:
+    """Structure-of-arrays :class:`SimResult` for a (candidate, trace) grid.
+
+    Every field is shaped ``(n_candidates, n_traces)``; ``result(ci, ti)``
+    rebuilds the scalar :class:`SimResult` of one lane.
+    """
+
+    makespan: np.ndarray
+    time_base: float
+    n_faults: np.ndarray
+    n_faults_hit: np.ndarray
+    n_predictions: np.ndarray
+    n_trusted: np.ndarray
+    n_trusted_true: np.ndarray
+    n_ignored_by_necessity: np.ndarray
+    n_periodic_ckpts: np.ndarray
+    time_ckpt: np.ndarray
+    time_prockpt: np.ndarray
+    time_down: np.ndarray
+    time_lost: np.ndarray
+
+    @property
+    def waste(self) -> np.ndarray:
+        out = np.zeros_like(self.makespan)
+        np.divide(self.time_base, self.makespan, out=out,
+                  where=self.makespan > 0)
+        return np.where(self.makespan > 0, 1.0 - out, 0.0)
+
+    def result(self, ci: int, ti: int) -> SimResult:
+        return SimResult(
+            makespan=float(self.makespan[ci, ti]),
+            time_base=self.time_base,
+            n_faults=int(self.n_faults[ci, ti]),
+            n_faults_hit=int(self.n_faults_hit[ci, ti]),
+            n_predictions=int(self.n_predictions[ci, ti]),
+            n_trusted=int(self.n_trusted[ci, ti]),
+            n_trusted_true=int(self.n_trusted_true[ci, ti]),
+            n_ignored_by_necessity=int(self.n_ignored_by_necessity[ci, ti]),
+            n_periodic_ckpts=int(self.n_periodic_ckpts[ci, ti]),
+            time_ckpt=float(self.time_ckpt[ci, ti]),
+            time_prockpt=float(self.time_prockpt[ci, ti]),
+            time_down=float(self.time_down[ci, ti]),
+            time_lost=float(self.time_lost[ci, ti]),
+        )
+
+
+# ---------------------------------------------------------------------------
+# The lane engine (NumPy backend)
+# ---------------------------------------------------------------------------
+
+class _LaneState:
+    """All per-lane state as structure-of-arrays."""
+
+    def __init__(self, n_lanes: int, periods: np.ndarray, c: float,
+                 time_base: float) -> None:
+        L = n_lanes
+        f8 = np.float64
+        self.now = np.zeros(L, f8)
+        self.done = np.zeros(L, f8)
+        self.saved = np.zeros(L, f8)
+        self.period_start = np.zeros(L, f8)
+        self.phase = np.full(L, _WORK, np.int8)
+        self.phase_end = np.full(L, np.inf, f8)
+        # Init mirrors _Machine.__init__: W = T - C (unclamped), then
+        # w_rem = min(W, time_base - saved); _new_period later re-clamps.
+        self.wpp = periods - c
+        self.w_rem = np.minimum(self.wpp, time_base - self.saved)
+        self.finished = np.zeros(L, bool)
+        # Engine bookkeeping.
+        self.pc = np.full(L, _PC_POP, np.int8)
+        self.target = np.full(L, -np.inf, f8)
+        # Pending-prediction payload for lanes in _PC_PRED.
+        self.pred_t = np.zeros(L, f8)
+        self.pred_true = np.zeros(L, bool)
+        self.pred_fault_date = np.zeros(L, f8)
+        # Deferred actual faults (true predictions): (time, seq) slots.
+        self.def_time = np.full((L, 4), np.inf, f8)
+        self.def_seq = np.full((L, 4), _BIG_SEQ, np.int64)
+        self.next_seq = np.zeros(L, np.int64)
+        # Counters.
+        i8 = np.int64
+        self.n_faults = np.zeros(L, i8)
+        self.n_faults_hit = np.zeros(L, i8)
+        self.n_predictions = np.zeros(L, i8)
+        self.n_trusted = np.zeros(L, i8)
+        self.n_trusted_true = np.zeros(L, i8)
+        self.n_ignored = np.zeros(L, i8)
+        self.n_periodic_ckpts = np.zeros(L, i8)
+        self.time_ckpt = np.zeros(L, f8)
+        self.time_prockpt = np.zeros(L, f8)
+        self.time_down = np.zeros(L, f8)
+        self.time_lost = np.zeros(L, f8)
+
+    def push_deferred(self, lanes: np.ndarray, dates: np.ndarray) -> None:
+        """Insert a deferred fault (date, next seq) for each lane in ``lanes``."""
+        if lanes.size == 0:
+            return
+        empty = np.isinf(self.def_time[lanes])            # (m, K)
+        if not np.all(empty.any(axis=1)):
+            k = self.def_time.shape[1]
+            grow_t = np.full((self.def_time.shape[0], k), np.inf, np.float64)
+            grow_s = np.full((self.def_seq.shape[0], k), _BIG_SEQ, np.int64)
+            self.def_time = np.concatenate([self.def_time, grow_t], axis=1)
+            self.def_seq = np.concatenate([self.def_seq, grow_s], axis=1)
+            empty = np.isinf(self.def_time[lanes])
+        slot = empty.argmax(axis=1)
+        self.def_time[lanes, slot] = dates
+        self.def_seq[lanes, slot] = self.next_seq[lanes]
+        self.next_seq[lanes] += 1
+
+    def pop_deferred_min(self, lanes: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """(time, slot) of the earliest deferred fault per lane (FIFO ties)."""
+        d_t = self.def_time[lanes]                         # (m, K)
+        min_t = d_t.min(axis=1)
+        tie = d_t == min_t[:, None]
+        seqs = np.where(tie, self.def_seq[lanes], _BIG_SEQ)
+        slot = seqs.argmin(axis=1)
+        return min_t, slot
+
+
+def _complete_phases(st: _LaneState, lanes: np.ndarray, periods: np.ndarray,
+                     p: Platform, cp: float, time_base: float) -> None:
+    """Vectorized `_Machine._complete_phase` for the given lane indices
+    (called with ``now`` already moved to ``phase_end``)."""
+    ph = st.phase[lanes]
+
+    ck = lanes[ph == _CKPT]
+    if ck.size:
+        st.n_periodic_ckpts[ck] += 1
+        st.time_ckpt[ck] += p.c
+        st.saved[ck] = st.done[ck]
+        fin = ck[st.saved[ck] >= time_base - 1e-9]
+        st.finished[fin] = True
+        _new_period(st, ck[st.saved[ck] < time_base - 1e-9], periods, p,
+                    time_base)
+
+    pk = lanes[ph == _PROCKPT]
+    if pk.size:
+        st.time_prockpt[pk] += cp
+        st.saved[pk] = st.done[pk]
+        # Period continues (paper §4.1): offsets measured from this save.
+        st.period_start[pk] = st.now[pk]
+        st.phase[pk] = _WORK
+        st.phase_end[pk] = np.inf
+
+    dn = lanes[ph == _DOWN]
+    if dn.size:
+        st.time_down[dn] += p.d
+        st.phase[dn] = _RECOVER
+        st.phase_end[dn] = st.now[dn] + p.r
+
+    rc = lanes[ph == _RECOVER]
+    if rc.size:
+        st.time_down[rc] += p.r
+        _new_period(st, rc, periods, p, time_base)
+
+
+def _new_period(st: _LaneState, lanes: np.ndarray, periods: np.ndarray,
+                p: Platform, time_base: float) -> None:
+    if lanes.size == 0:
+        return
+    st.phase[lanes] = _WORK
+    st.phase_end[lanes] = np.inf
+    st.period_start[lanes] = st.now[lanes]
+    st.wpp[lanes] = np.maximum(1e-9, periods[lanes] - p.c)
+    st.w_rem[lanes] = np.minimum(st.wpp[lanes],
+                                 time_base - st.saved[lanes])
+
+
+def _apply_faults(st: _LaneState, lanes: np.ndarray, p: Platform,
+                  cp: float, dur_table: np.ndarray) -> None:
+    """Vectorized `_Machine.fault` at ``t == target`` for the lane indices."""
+    t = st.target[lanes]
+    st.n_faults_hit[lanes] += 1
+    lost = st.done[lanes] - st.saved[lanes]
+    ph = st.phase[lanes]
+    in_phase = (ph != _WORK) & ~np.isinf(st.phase_end[lanes])
+    dur = dur_table[ph]
+    elapsed = dur - (st.phase_end[lanes] - st.now[lanes])
+    ckpt_like = in_phase & ((ph == _CKPT) | (ph == _PROCKPT))
+    lost = lost + np.where(ckpt_like, np.maximum(0.0, elapsed), 0.0)
+    st.time_down[lanes] += np.where(in_phase & ~ckpt_like,
+                                    np.maximum(0.0, elapsed), 0.0)
+    st.time_lost[lanes] += lost
+    st.done[lanes] = st.saved[lanes]
+    st.phase[lanes] = _DOWN
+    st.phase_end[lanes] = t + p.d
+
+
+def _run_lanes(
+    bank: _EventBank,
+    platform: Platform,
+    time_base: float,
+    lane_trace: np.ndarray,
+    lane_period: np.ndarray,
+    lane_trust_kind: np.ndarray,
+    lane_trust_param: np.ndarray,
+    lane_window: np.ndarray,
+    lane_seed: np.ndarray,
+    cp: float,
+) -> _LaneState:
+    """Run all lanes to completion; returns the final lane state."""
+    L = lane_trace.size
+    if np.any(lane_period < platform.c):
+        bad = float(lane_period[lane_period < platform.c][0])
+        raise ValueError(f"period {bad} < checkpoint {platform.c}")
+
+    st = _LaneState(L, lane_period, platform.c, time_base)
+    cursor = np.zeros(L, dtype=np.int64)
+    # Phase durations indexed by phase code (`_Machine._phase_duration`).
+    dur_table = np.array([0.0, platform.c, cp, platform.d, platform.r])
+    # Per-lane seq counters start after the trace events so deferred faults
+    # always lose time ties to trace events (the scalar heap's seq order).
+    st.next_seq[:] = bank.n_events[lane_trace]
+
+    # Lane generators, created lazily: only inexact-window and
+    # FixedProbability lanes ever draw.
+    needs_rng = (lane_window > 0.0) | (lane_trust_kind == _TRUST_FIXED_Q)
+    rngs = [np.random.default_rng(int(lane_seed[i])) if needs_rng[i] else None
+            for i in range(L)]
+
+    # The lockstep loop operates on the compacted set of live lane indices:
+    # lanes retire as they finish, so late iterations (the long tail of the
+    # smallest-period candidates) touch only the few lanes still running.
+    work = np.arange(L, dtype=np.int64)
+    while work.size:
+        fin_sub = st.finished[work]
+        if fin_sub.any():
+            work = work[~fin_sub]
+            if work.size == 0:
+                break
+
+        # -- 1. pop the next event for lanes that need one ------------------
+        pop_sub = st.pc[work] == _PC_POP
+        if pop_sub.any():
+            idx = work[pop_sub]
+            rows = lane_trace[idx]
+            col = np.minimum(cursor[idx], bank.times.shape[1] - 1)
+            have = cursor[idx] < bank.n_events[rows]
+            t_tr = np.where(have, bank.times[rows, col], np.inf)
+            k_tr = np.where(have, bank.kinds[rows, col], -1)
+            df_t, df_slot = st.pop_deferred_min(idx)
+
+            none_left = np.isinf(t_tr) & np.isinf(df_t)
+            fin_idx = idx[none_left]
+            st.pc[fin_idx] = _PC_FINAL
+            st.target[fin_idx] = np.inf
+
+            take_trace = ~none_left & (t_tr <= df_t)
+            cursor[idx[take_trace]] += 1
+            take_def = ~none_left & ~take_trace
+            d_idx = idx[take_def]
+            st.def_time[d_idx, df_slot[take_def]] = np.inf
+            st.def_seq[d_idx, df_slot[take_def]] = _BIG_SEQ
+
+            # Fault events: deferred pops and unpredicted trace faults.
+            is_fault = take_def | (take_trace & (k_tr == FAULT_UNPRED))
+            f_idx = idx[is_fault]
+            if f_idx.size:
+                st.n_faults[f_idx] += 1
+                st.target[f_idx] = np.where(take_def[is_fault],
+                                            df_t[is_fault], t_tr[is_fault])
+                st.pc[f_idx] = _PC_FAULT
+
+            # Prediction events (true or false) announced for date t.
+            is_pred = take_trace & (k_tr != FAULT_UNPRED)
+            p_idx = idx[is_pred]
+            if p_idx.size:
+                st.n_predictions[p_idx] += 1
+                t = t_tr[is_pred]
+                is_true = k_tr[is_pred] == FAULT_PRED
+                fault_date = t.copy()
+                draw = is_true & (lane_window[p_idx] > 0.0)
+                for j in np.nonzero(draw)[0]:
+                    lane = p_idx[j]
+                    fault_date[j] = t[j] + float(
+                        rngs[lane].uniform(0.0, lane_window[lane]))
+                ckpt_start = t - cp
+                honour = ckpt_start >= st.now[p_idx]
+
+                h_idx = p_idx[honour]
+                st.pc[h_idx] = _PC_PRED
+                st.target[h_idx] = ckpt_start[honour]
+                st.pred_t[h_idx] = t[honour]
+                st.pred_true[h_idx] = is_true[honour]
+                st.pred_fault_date[h_idx] = fault_date[honour]
+
+                # Not enough room for C_p: ignored by necessity; a true
+                # prediction's fault still strikes.
+                n_idx = p_idx[~honour]
+                st.n_ignored[n_idx] += 1
+                late_true = ~honour & is_true
+                st.n_faults[p_idx[late_true]] += 1
+                st.push_deferred(p_idx[late_true], fault_date[late_true])
+
+        # -- 2. arrivals: lanes whose schedule reached the event date -------
+        pc_w = st.pc[work]
+        at_target = st.now[work] >= st.target[work]
+        arr_f = (pc_w == _PC_FAULT) & at_target
+        if arr_f.any():
+            lanes = work[arr_f]
+            _apply_faults(st, lanes, platform, cp, dur_table)
+            st.pc[lanes] = _PC_POP
+            st.target[lanes] = -np.inf
+
+        arr_p = (pc_w == _PC_PRED) & at_target
+        if arr_p.any():
+            lanes = work[arr_p]
+            working = st.phase[lanes] == _WORK
+            w_idx = lanes[working]
+            offset = st.pred_t[w_idx] - st.period_start[w_idx]
+            kind = lane_trust_kind[w_idx]
+            trusted = np.zeros(w_idx.size, bool)
+            trusted |= kind == _TRUST_ALWAYS
+            trusted |= (kind == _TRUST_THRESHOLD) \
+                & (offset >= lane_trust_param[w_idx])
+            for j in np.nonzero(kind == _TRUST_FIXED_Q)[0]:
+                lane = w_idx[j]
+                trusted[j] = rngs[lane].random() < lane_trust_param[lane]
+
+            a_idx = w_idx[trusted]           # proactive ckpt ends at pred_t
+            st.phase[a_idx] = _PROCKPT
+            st.phase_end[a_idx] = st.pred_t[a_idx]
+            st.n_trusted[a_idx] += 1
+            st.n_trusted_true[a_idx[st.pred_true[a_idx]]] += 1
+
+            st.n_ignored[lanes[~working]] += 1
+
+            push = lanes[st.pred_true[lanes]]
+            st.n_faults[push] += 1
+            st.push_deferred(push, st.pred_fault_date[push])
+            st.pc[lanes] = _PC_POP
+            st.target[lanes] = -np.inf
+
+        # -- 3. advance lanes toward their targets (inner lockstep loop) ----
+        # One pass per schedule phase (work chunk / checkpoint / downtime /
+        # recovery), on the shrinking set of lanes still short of target —
+        # the vectorized `_Machine.advance_to`.  The pass count per round is
+        # capped: unbounded draining would make each round as long as its
+        # slowest lane (the sum of per-round maxima far exceeds the max of
+        # per-lane sums), while a small cap keeps the costlier pop/arrival
+        # sections amortized over ~3 periods without stalling fast lanes.
+        adv = work[st.now[work] < st.target[work]]
+        passes = 0
+        while adv.size and passes < 6:
+            passes += 1
+            ph = st.phase[adv]
+            is_work = ph == _WORK
+            wrem0 = st.w_rem[adv] <= 0.0
+            wz = adv[is_work & wrem0]             # degenerate: straight to ckpt
+            st.phase[wz] = _CKPT
+            st.phase_end[wz] = st.now[wz] + platform.c
+
+            ww = adv[is_work & ~wrem0]
+            if ww.size:
+                dt = np.minimum(st.w_rem[ww], st.target[ww] - st.now[ww])
+                st.now[ww] += dt
+                st.done[ww] += dt
+                st.w_rem[ww] -= dt
+                fin_work = ww[st.w_rem[ww] <= 0.0]
+                st.phase[fin_work] = _CKPT
+                st.phase_end[fin_work] = st.now[fin_work] + platform.c
+
+            in_phase = adv[~is_work]              # just-started ckpts wait
+            if in_phase.size:
+                complete = st.phase_end[in_phase] <= st.target[in_phase]
+                lanes = in_phase[complete]
+                st.now[lanes] = st.phase_end[lanes]
+                _complete_phases(st, lanes, lane_period, platform, cp,
+                                 time_base)
+                stall = in_phase[~complete]
+                st.now[stall] = st.target[stall]
+
+            adv = adv[(st.now[adv] < st.target[adv]) & ~st.finished[adv]]
+
+    return st
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+
+def _as_candidate_arrays(
+    periods, trust, inexact_window, n_cand: int,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    period_arr = np.asarray(periods, dtype=np.float64).reshape(n_cand)
+    if trust is None or isinstance(trust, TrustPolicy):
+        trust_seq = [trust or NeverTrust()] * n_cand
+    else:
+        trust_seq = list(trust)
+        if len(trust_seq) != n_cand:
+            raise ValueError(f"{len(trust_seq)} trust policies for "
+                             f"{n_cand} periods")
+    codes = [trust_code(t) for t in trust_seq]
+    kind_arr = np.array([k for k, _ in codes], dtype=np.int8)
+    param_arr = np.array([q for _, q in codes], dtype=np.float64)
+    window_arr = np.broadcast_to(
+        np.asarray(inexact_window, dtype=np.float64), (n_cand,)).copy()
+    return period_arr, kind_arr, param_arr, window_arr
+
+
+def simulate_lanes(
+    traces: Sequence[EventTrace],
+    platform: Platform,
+    time_base: float,
+    *,
+    cp: float,
+    trace_indices: Sequence[int],
+    periods: Sequence[float],
+    trusts: Sequence[TrustPolicy],
+    windows: Sequence[float],
+    seeds: Sequence[int],
+    start: float = 0.0,
+) -> np.ndarray:
+    """Simulate an explicit list of (trace, candidate) lanes; returns the
+    per-lane makespans.
+
+    The flat sibling of :func:`simulate_batch` for callers (the experiment
+    runner) whose pending work is a sparse subset of the candidate x trace
+    grid — e.g. when a result cache already holds some pairs.  Lane ``j``
+    is bit-for-bit ``simulate(traces[trace_indices[j]], ..., periods[j],
+    trust=trusts[j], inexact_window=windows[j],
+    rng=np.random.default_rng(seeds[j]))``.
+    """
+    lane_trace = np.asarray(trace_indices, dtype=np.int64)
+    lane_period = np.asarray(periods, dtype=np.float64)
+    codes = [trust_code(t) for t in trusts]
+    lane_kind = np.array([k for k, _ in codes], dtype=np.int8)
+    lane_param = np.array([q for _, q in codes], dtype=np.float64)
+    lane_window = np.asarray(windows, dtype=np.float64)
+    lane_seed = np.asarray(seeds, dtype=np.int64)
+    if not (lane_trace.size == lane_period.size == lane_kind.size
+            == lane_window.size == lane_seed.size):
+        raise ValueError("lane array lengths differ")
+    if lane_trace.size == 0:
+        return np.empty(0, dtype=np.float64)
+    bank = _pack_bank(traces, start)
+    st = _run_lanes(bank, platform, time_base, lane_trace, lane_period,
+                    lane_kind, lane_param, lane_window, lane_seed, cp)
+    return st.now
+
+
+def simulate_batch(
+    traces: Sequence[EventTrace],
+    platform: Platform,
+    time_base: float,
+    periods,
+    *,
+    cp: float | None = None,
+    trust: TrustPolicy | Sequence[TrustPolicy] | None = None,
+    inexact_window: float | Sequence[float] = 0.0,
+    start: float = 0.0,
+    trace_seeds: Sequence[int] | int | None = None,
+    backend: str = "numpy",
+) -> BatchResult:
+    """Simulate every (candidate, trace) pair of a grid in lockstep.
+
+    Args:
+      traces: the trace bank (lanes share the packed event tensor).
+      platform: (mu, C, D, R) parameters.
+      time_base: useful work to complete (seconds).
+      periods: one period or a sequence of candidate periods (all >= C).
+      cp: proactive checkpoint duration C_p (defaults to C).
+      trust: one policy for all candidates, or one per candidate.  Must be
+        Never/Always/Threshold/FixedProbability — callable periods or other
+        policies need the scalar engine.
+      inexact_window: scalar or per-candidate uncertainty window.
+      start: job start offset into the traces (paper: one year).
+      trace_seeds: per-trace RNG seeds; lane (c, t) draws from a fresh
+        ``default_rng(trace_seeds[t])`` exactly like the scalar engine does
+        per (strategy, trace) pair.  A scalar seeds every trace alike;
+        ``None`` means seed 0 (the scalar engine's default rng).
+      backend: ``"numpy"`` (default) or ``"jax"`` (experimental; exact
+        predictions + deterministic trust only, requires x64).
+
+    Returns:
+      :class:`BatchResult` with ``(n_candidates, n_traces)`` arrays.  Each
+      lane is bit-for-bit the scalar ``simulate`` result for that
+      (period, trust, window, trace, seed) combination.
+    """
+    cp = platform.c if cp is None else cp
+    scalar_period = np.isscalar(periods) or (
+        isinstance(periods, np.ndarray) and periods.ndim == 0)
+    n_cand = 1 if scalar_period else len(periods)
+    period_arr, kind_arr, param_arr, window_arr = _as_candidate_arrays(
+        periods, trust, inexact_window, n_cand)
+
+    n_traces = len(traces)
+    if trace_seeds is None:
+        seeds = np.zeros(n_traces, dtype=np.int64)
+    elif np.isscalar(trace_seeds):
+        seeds = np.full(n_traces, int(trace_seeds), dtype=np.int64)
+    else:
+        seeds = np.asarray(trace_seeds, dtype=np.int64).reshape(n_traces)
+
+    bank = _pack_bank(traces, start)
+    # Lane layout: candidate-major, trace-minor -> reshape to the grid.
+    lane_trace = np.tile(np.arange(n_traces, dtype=np.int64), n_cand)
+    lane_period = np.repeat(period_arr, n_traces)
+    lane_kind = np.repeat(kind_arr, n_traces)
+    lane_param = np.repeat(param_arr, n_traces)
+    lane_window = np.repeat(window_arr, n_traces)
+    lane_seed = np.tile(seeds, n_cand)
+
+    if backend == "jax":
+        from .batch_jax import run_lanes_jax
+        out = run_lanes_jax(bank, platform, time_base, lane_trace,
+                            lane_period, lane_kind, lane_param, lane_window,
+                            cp)
+        shape = (n_cand, n_traces)
+        return BatchResult(
+            makespan=out["makespan"].reshape(shape), time_base=time_base,
+            n_faults=out["n_faults"].reshape(shape),
+            n_faults_hit=out["n_faults_hit"].reshape(shape),
+            n_predictions=out["n_predictions"].reshape(shape),
+            n_trusted=out["n_trusted"].reshape(shape),
+            n_trusted_true=out["n_trusted_true"].reshape(shape),
+            n_ignored_by_necessity=out["n_ignored"].reshape(shape),
+            n_periodic_ckpts=out["n_periodic_ckpts"].reshape(shape),
+            time_ckpt=out["time_ckpt"].reshape(shape),
+            time_prockpt=out["time_prockpt"].reshape(shape),
+            time_down=out["time_down"].reshape(shape),
+            time_lost=out["time_lost"].reshape(shape),
+        )
+    if backend != "numpy":
+        raise ValueError(f"unknown backend {backend!r}")
+
+    st = _run_lanes(bank, platform, time_base, lane_trace, lane_period,
+                    lane_kind, lane_param, lane_window, lane_seed, cp)
+    shape = (n_cand, n_traces)
+    return BatchResult(
+        makespan=st.now.reshape(shape), time_base=time_base,
+        n_faults=st.n_faults.reshape(shape),
+        n_faults_hit=st.n_faults_hit.reshape(shape),
+        n_predictions=st.n_predictions.reshape(shape),
+        n_trusted=st.n_trusted.reshape(shape),
+        n_trusted_true=st.n_trusted_true.reshape(shape),
+        n_ignored_by_necessity=st.n_ignored.reshape(shape),
+        n_periodic_ckpts=st.n_periodic_ckpts.reshape(shape),
+        time_ckpt=st.time_ckpt.reshape(shape),
+        time_prockpt=st.time_prockpt.reshape(shape),
+        time_down=st.time_down.reshape(shape),
+        time_lost=st.time_lost.reshape(shape),
+    )

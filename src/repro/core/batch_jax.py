@@ -1,0 +1,284 @@
+"""JAX backend for the lane-parallel batched simulator.
+
+The whole lane fleet advances inside a single ``lax.while_loop`` whose body
+is the same pop / arrival / lockstep-schedule step as the NumPy engine in
+:mod:`repro.core.batch`, expressed as masked full-array updates — so banks
+can be jitted and dispatched to an accelerator.  The carried state is pure
+structure-of-arrays, which is exactly the layout an XLA backend wants; no
+Pallas kernel is needed because every step is elementwise over lanes.
+
+Scope (checked, raises otherwise):
+
+  * deterministic trust policies only (Never / Always / Threshold) — the
+    FixedProbability policy draws per-lane randomness at state-dependent
+    decision points, which has no race-free vectorized equivalent;
+  * exact predictions only (``inexact_window == 0``) — uncertainty offsets
+    are also per-lane draw sites;
+  * requires ``jax_enable_x64`` so the float64 op sequence matches the
+    scalar engine bit-for-bit (float32 drifts far beyond the 1e-9
+    equivalence contract).
+
+Each (lane-count, event-width) shape triggers one XLA compilation; reuse
+bank sizes across calls to amortize it.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import numpy as np
+
+from .simulator import _CKPT, _DOWN, _PROCKPT, _RECOVER, _WORK
+from .traces import FAULT_PRED, FAULT_UNPRED
+from .waste import Platform
+
+__all__ = ["run_lanes_jax"]
+
+_TRUST_NEVER, _TRUST_ALWAYS, _TRUST_THRESHOLD, _TRUST_FIXED_Q = range(4)
+_PC_POP, _PC_FAULT, _PC_PRED, _PC_FINAL = range(4)
+_DEF_SLOTS = 8          # deferred-fault capacity; overflow is detected
+_BIG_SEQ = np.iinfo(np.int64).max
+
+
+def run_lanes_jax(bank, platform: Platform, time_base: float,
+                  lane_trace: np.ndarray, lane_period: np.ndarray,
+                  lane_kind: np.ndarray, lane_param: np.ndarray,
+                  lane_window: np.ndarray, cp: float) -> dict[str, Any]:
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    if not jax.config.jax_enable_x64:
+        raise RuntimeError(
+            "the jax backend needs float64 state for the scalar-equivalence "
+            "contract; enable it (jax.config.update('jax_enable_x64', True) "
+            "or JAX_ENABLE_X64=1) or use backend='numpy'")
+    if np.any(lane_window > 0.0):
+        raise ValueError("backend='jax' supports exact predictions only "
+                         "(inexact_window == 0); use backend='numpy'")
+    if np.any(lane_kind == _TRUST_FIXED_Q):
+        raise ValueError("backend='jax' supports deterministic trust "
+                         "policies only; use backend='numpy'")
+    if np.any(lane_period < platform.c):
+        raise ValueError(f"period below checkpoint {platform.c}")
+
+    L = int(lane_trace.size)
+    K = _DEF_SLOTS
+    width = bank.times.shape[1]
+    c, d, r = platform.c, platform.d, platform.r
+    fin_thresh = time_base - 1e-9
+
+    times2d = jnp.asarray(bank.times)
+    kinds2d = jnp.asarray(bank.kinds.astype(np.int32))
+    n_ev_lane = jnp.asarray(bank.n_events[lane_trace])
+    tr = jnp.asarray(lane_trace)
+    period = jnp.asarray(lane_period)
+    kind = jnp.asarray(lane_kind.astype(np.int32))
+    param = jnp.asarray(lane_param)
+
+    def push_deferred(def_time, def_seq, next_seq, overflow, push, dates):
+        empty = jnp.isinf(def_time)
+        has_room = empty.any(axis=1)
+        overflow = overflow | (push & ~has_room)
+        slot = empty.argmax(axis=1)
+        onehot = (jnp.arange(K)[None, :] == slot[:, None]) & push[:, None]
+        def_time = jnp.where(onehot, dates[:, None], def_time)
+        def_seq = jnp.where(onehot, next_seq[:, None], def_seq)
+        next_seq = jnp.where(push, next_seq + 1, next_seq)
+        return def_time, def_seq, next_seq, overflow
+
+    def body(s):
+        active = ~s["finished"]
+
+        # -- 1. pop next events ---------------------------------------------
+        pop = active & (s["pc"] == _PC_POP)
+        col = jnp.minimum(s["cursor"], width - 1)
+        have = s["cursor"] < n_ev_lane
+        t_tr = jnp.where(have, times2d[tr, col], jnp.inf)
+        k_tr = jnp.where(have, kinds2d[tr, col], -1)
+        min_t = s["def_time"].min(axis=1)
+        tie = s["def_time"] == min_t[:, None]
+        seqm = jnp.where(tie, s["def_seq"], _BIG_SEQ)
+        slot = seqm.argmin(axis=1)
+
+        none_left = pop & jnp.isinf(t_tr) & jnp.isinf(min_t)
+        pc = jnp.where(none_left, _PC_FINAL, s["pc"])
+        target = jnp.where(none_left, jnp.inf, s["target"])
+
+        take_trace = pop & ~none_left & (t_tr <= min_t)
+        cursor = jnp.where(take_trace, s["cursor"] + 1, s["cursor"])
+        take_def = pop & ~none_left & ~take_trace
+        clear = (jnp.arange(K)[None, :] == slot[:, None]) & take_def[:, None]
+        def_time = jnp.where(clear, jnp.inf, s["def_time"])
+        def_seq = jnp.where(clear, _BIG_SEQ, s["def_seq"])
+
+        is_fault = take_def | (take_trace & (k_tr == FAULT_UNPRED))
+        n_faults = s["n_faults"] + is_fault
+        target = jnp.where(is_fault, jnp.where(take_def, min_t, t_tr), target)
+        pc = jnp.where(is_fault, _PC_FAULT, pc)
+
+        is_pred = take_trace & (k_tr != FAULT_UNPRED)
+        n_predictions = s["n_predictions"] + is_pred
+        is_true = is_pred & (k_tr == FAULT_PRED)
+        ckpt_start = t_tr - cp
+        honour = is_pred & (ckpt_start >= s["now"])
+        pc = jnp.where(honour, _PC_PRED, pc)
+        target = jnp.where(honour, ckpt_start, target)
+        pred_t = jnp.where(honour, t_tr, s["pred_t"])
+        pred_true = jnp.where(honour, is_true, s["pred_true"])
+        ignored = is_pred & ~honour
+        n_ignored = s["n_ignored"] + ignored
+        push = ignored & is_true
+        n_faults = n_faults + push
+        def_time, def_seq, next_seq, overflow = push_deferred(
+            def_time, def_seq, s["next_seq"], s["overflow"], push, t_tr)
+
+        # -- 2a. fault arrivals ---------------------------------------------
+        now, done, saved = s["now"], s["done"], s["saved"]
+        phase, phase_end = s["phase"], s["phase_end"]
+        arr_f = active & (pc == _PC_FAULT) & (now >= target)
+        lost = done - saved
+        in_phase = (phase != _WORK) & ~jnp.isinf(phase_end)
+        dur = jnp.select([phase == _CKPT, phase == _PROCKPT,
+                          phase == _DOWN, phase == _RECOVER],
+                         [c, cp, d, r], 0.0)
+        elapsed = dur - (phase_end - now)
+        ckpt_like = in_phase & ((phase == _CKPT) | (phase == _PROCKPT))
+        lost = lost + jnp.where(ckpt_like, jnp.maximum(0.0, elapsed), 0.0)
+        time_down = s["time_down"] + jnp.where(
+            arr_f & in_phase & ~ckpt_like, jnp.maximum(0.0, elapsed), 0.0)
+        time_lost = s["time_lost"] + jnp.where(arr_f, lost, 0.0)
+        n_faults_hit = s["n_faults_hit"] + arr_f
+        done = jnp.where(arr_f, saved, done)
+        phase = jnp.where(arr_f, _DOWN, phase)
+        phase_end = jnp.where(arr_f, target + d, phase_end)
+        pc = jnp.where(arr_f, _PC_POP, pc)
+        target = jnp.where(arr_f, -jnp.inf, target)
+
+        # -- 2b. prediction arrivals ----------------------------------------
+        arr_p = active & (pc == _PC_PRED) & (now >= target)
+        working = arr_p & (phase == _WORK)
+        offset = pred_t - s["period_start"]
+        trusted = working & ((kind == _TRUST_ALWAYS)
+                             | ((kind == _TRUST_THRESHOLD)
+                                & (offset >= param)))
+        phase = jnp.where(trusted, _PROCKPT, phase)
+        phase_end = jnp.where(trusted, pred_t, phase_end)
+        n_trusted = s["n_trusted"] + trusted
+        n_trusted_true = s["n_trusted_true"] + (trusted & pred_true)
+        n_ignored = n_ignored + (arr_p & ~working)
+        push2 = arr_p & pred_true
+        n_faults = n_faults + push2
+        def_time, def_seq, next_seq, overflow = push_deferred(
+            def_time, def_seq, next_seq, overflow, push2, pred_t)
+        pc = jnp.where(arr_p, _PC_POP, pc)
+        target = jnp.where(arr_p, -jnp.inf, target)
+
+        # -- 3. one lockstep schedule step ----------------------------------
+        adv = active & (now < target)
+        in_work = adv & (phase == _WORK)
+        wz = in_work & (s["w_rem"] <= 0.0)
+        phase = jnp.where(wz, _CKPT, phase)
+        phase_end = jnp.where(wz, now + c, phase_end)
+        ww = in_work & ~wz
+        dt = jnp.minimum(s["w_rem"], target - now)
+        now = jnp.where(ww, now + dt, now)
+        done = jnp.where(ww, done + dt, done)
+        w_rem = jnp.where(ww, s["w_rem"] - dt, s["w_rem"])
+        fin_work = ww & (w_rem <= 0.0)
+        phase = jnp.where(fin_work, _CKPT, phase)
+        phase_end = jnp.where(fin_work, now + c, phase_end)
+
+        in_ph = adv & (phase != _WORK) & ~wz & ~ww
+        complete = in_ph & (phase_end <= target)
+        now = jnp.where(complete, phase_end, now)
+        ph0 = phase
+        ck = complete & (ph0 == _CKPT)
+        n_periodic_ckpts = s["n_periodic_ckpts"] + ck
+        time_ckpt = s["time_ckpt"] + jnp.where(ck, c, 0.0)
+        saved = jnp.where(ck, done, saved)
+        fin = ck & (saved >= fin_thresh)
+        finished = s["finished"] | fin
+        pk = complete & (ph0 == _PROCKPT)
+        time_prockpt = s["time_prockpt"] + jnp.where(pk, cp, 0.0)
+        saved = jnp.where(pk, done, saved)
+        period_start = jnp.where(pk, now, s["period_start"])
+        phase = jnp.where(pk, _WORK, phase)
+        phase_end = jnp.where(pk, jnp.inf, phase_end)
+        dn = complete & (ph0 == _DOWN)
+        time_down = time_down + jnp.where(dn, d, 0.0)
+        phase = jnp.where(dn, _RECOVER, phase)
+        phase_end = jnp.where(dn, now + r, phase_end)
+        rc = complete & (ph0 == _RECOVER)
+        time_down = time_down + jnp.where(rc, r, 0.0)
+        renew = (ck & ~fin) | rc
+        phase = jnp.where(renew, _WORK, phase)
+        phase_end = jnp.where(renew, jnp.inf, phase_end)
+        period_start = jnp.where(renew, now, period_start)
+        wpp = jnp.where(renew, jnp.maximum(1e-9, period - c), s["wpp"])
+        w_rem = jnp.where(renew,
+                          jnp.minimum(wpp, time_base - saved), w_rem)
+        stall = in_ph & ~complete
+        now = jnp.where(stall, target, now)
+
+        return {
+            "now": now, "done": done, "saved": saved,
+            "period_start": period_start, "phase": phase,
+            "phase_end": phase_end, "wpp": wpp, "w_rem": w_rem,
+            "finished": finished, "pc": pc, "target": target,
+            "cursor": cursor, "pred_t": pred_t, "pred_true": pred_true,
+            "def_time": def_time, "def_seq": def_seq, "next_seq": next_seq,
+            "overflow": overflow,
+            "n_faults": n_faults, "n_faults_hit": n_faults_hit,
+            "n_predictions": n_predictions, "n_trusted": n_trusted,
+            "n_trusted_true": n_trusted_true, "n_ignored": n_ignored,
+            "n_periodic_ckpts": n_periodic_ckpts, "time_ckpt": time_ckpt,
+            "time_prockpt": time_prockpt, "time_down": time_down,
+            "time_lost": time_lost,
+        }
+
+    f8 = jnp.float64
+    i8 = jnp.int64
+    zf = jnp.zeros(L, f8)
+    zi = jnp.zeros(L, i8)
+    wpp0 = period - c
+    state = {
+        "now": zf, "done": zf, "saved": zf, "period_start": zf,
+        "phase": jnp.full(L, _WORK, jnp.int32),
+        "phase_end": jnp.full(L, jnp.inf, f8),
+        "wpp": wpp0, "w_rem": jnp.minimum(wpp0, time_base - zf),
+        "finished": jnp.zeros(L, bool),
+        "pc": jnp.full(L, _PC_POP, jnp.int32),
+        "target": jnp.full(L, -jnp.inf, f8),
+        "cursor": zi, "pred_t": zf, "pred_true": jnp.zeros(L, bool),
+        "def_time": jnp.full((L, K), jnp.inf, f8),
+        "def_seq": jnp.full((L, K), _BIG_SEQ, i8),
+        "next_seq": n_ev_lane.astype(i8),
+        "overflow": jnp.zeros(L, bool),
+        "n_faults": zi, "n_faults_hit": zi, "n_predictions": zi,
+        "n_trusted": zi, "n_trusted_true": zi, "n_ignored": zi,
+        "n_periodic_ckpts": zi, "time_ckpt": zf, "time_prockpt": zf,
+        "time_down": zf, "time_lost": zf,
+    }
+
+    run = jax.jit(lambda s0: lax.while_loop(
+        lambda s: ~jnp.all(s["finished"]), body, s0))
+    final = jax.device_get(run(state))
+    if final["overflow"].any():
+        raise RuntimeError(
+            f"deferred-fault capacity ({K} slots) exceeded in the jax "
+            f"backend; rerun with backend='numpy'")
+    return {
+        "makespan": final["now"],
+        "n_faults": final["n_faults"],
+        "n_faults_hit": final["n_faults_hit"],
+        "n_predictions": final["n_predictions"],
+        "n_trusted": final["n_trusted"],
+        "n_trusted_true": final["n_trusted_true"],
+        "n_ignored": final["n_ignored"],
+        "n_periodic_ckpts": final["n_periodic_ckpts"],
+        "time_ckpt": final["time_ckpt"],
+        "time_prockpt": final["time_prockpt"],
+        "time_down": final["time_down"],
+        "time_lost": final["time_lost"],
+    }

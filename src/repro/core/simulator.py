@@ -223,8 +223,6 @@ class _Machine:
 
     # -- event reactions ------------------------------------------------------
 
-    _DURATIONS = {}
-
     def _phase_duration(self, phase: int) -> float:
         return {_CKPT: self.p.c, _PROCKPT: self.cp, _DOWN: self.p.d,
                 _RECOVER: self.p.r}.get(phase, 0.0)
@@ -365,10 +363,6 @@ def simulate(
             seq += 1
 
     m.run_to_completion()
-    if not m.finished:
-        # Trace horizon exceeded: continue fault-free (callers should size the
-        # horizon generously; this keeps the simulator total).
-        m.run_to_completion()
     res.makespan = m.now
     return res
 

@@ -35,8 +35,11 @@ __all__ = [
     "LogNormalDist",
     "Empirical",
     "renewal_trace",
+    "renewal_trace_bank",
     "superposed_trace",
+    "superposed_trace_bank",
     "make_event_trace",
+    "make_event_trace_bank",
     "lanl_like_log",
 ]
 
@@ -164,6 +167,39 @@ def renewal_trace(dist: Distribution, horizon: float,
     return times[times < horizon]
 
 
+def renewal_trace_bank(dist: Distribution, horizon: float,
+                       rng: np.random.Generator,
+                       n_traces: int) -> list[np.ndarray]:
+    """A whole bank of independent renewal traces from one generator.
+
+    Each sampling wave draws a ``(still-running traces, est)`` matrix in a
+    single RNG call instead of one batch per trace, so generating a
+    200-trace bank costs a handful of vectorized draws.  The bank is
+    statistically identical to ``[renewal_trace(dist, horizon, rng_i)]``
+    but draws from one shared stream, so it is *not* sample-for-sample
+    reproducible against per-trace seeded generation.
+    """
+    if horizon <= 0 or n_traces <= 0:
+        return [np.empty(0, dtype=np.float64) for _ in range(n_traces)]
+    est = max(16, int(horizon / max(dist.mean, 1e-12) * 1.5) + 8)
+    chunks: list[list[np.ndarray]] = [[] for _ in range(n_traces)]
+    totals = np.zeros(n_traces, dtype=np.float64)
+    live = np.arange(n_traces)
+    while live.size:
+        draws = dist.sample(rng, live.size * est).reshape(live.size, est)
+        draws = np.maximum(draws, 1e-9)
+        for row, tr in enumerate(live):
+            chunks[tr].append(draws[row])
+        totals[live] += draws.sum(axis=1)
+        live = live[totals[live] < horizon]
+        est = max(16, est // 2)
+    out = []
+    for tr in range(n_traces):
+        times = np.cumsum(np.concatenate(chunks[tr]))
+        out.append(times[times < horizon])
+    return out
+
+
 def superposed_trace(dist_ind: Distribution, n: int, horizon: float,
                      rng: np.random.Generator) -> np.ndarray:
     """Superposition of n i.i.d. per-processor renewal processes (paper §5.1).
@@ -183,6 +219,41 @@ def superposed_trace(dist_ind: Distribution, n: int, horizon: float,
     if not out:
         return np.empty(0, dtype=np.float64)
     return np.sort(np.concatenate(out))
+
+
+def superposed_trace_bank(dist_ind: Distribution, n: int, horizon: float,
+                          rng: np.random.Generator,
+                          n_traces: int) -> list[np.ndarray]:
+    """A bank of superposed traces: all ``n_traces * n`` processor streams
+    advance in shared sampling waves (one RNG call per wave for the whole
+    bank), then events are split back per trace and sorted."""
+    if n_traces <= 0:
+        return []
+    # The surviving streams are carried as compacted (index, clock) pairs —
+    # no scatter back into the full n_traces*n array, whose first wave would
+    # dominate the cost for paper-sized platforms (2^16 procs per trace).
+    t = np.maximum(dist_ind.sample(rng, n_traces * n), 1e-9)
+    hit = t < horizon
+    active = np.flatnonzero(hit)
+    t = t[active]
+    times_out: list[np.ndarray] = [t]
+    owner_out: list[np.ndarray] = [active // n]
+    while active.size:
+        draws = np.maximum(dist_ind.sample(rng, active.size), 1e-9)
+        t = t + draws
+        hit = t < horizon
+        t = t[hit]
+        active = active[hit]
+        times_out.append(t)
+        owner_out.append(active // n)
+    if not any(part.size for part in times_out):
+        return [np.empty(0, dtype=np.float64) for _ in range(n_traces)]
+    times = np.concatenate(times_out)
+    owner = np.concatenate(owner_out)
+    order = np.lexsort((times, owner))
+    times, owner = times[order], owner[order]
+    counts = np.bincount(owner, minlength=n_traces)
+    return np.split(times, np.cumsum(counts)[:-1])
 
 
 # ---------------------------------------------------------------------------
@@ -251,11 +322,61 @@ def make_event_trace(
     else:
         false_preds = np.empty(0, dtype=np.float64)
 
+    return _merge_events(faults, kinds, false_preds, horizon)
+
+
+def _merge_events(faults: np.ndarray, kinds: np.ndarray,
+                  false_preds: np.ndarray, horizon: float) -> EventTrace:
     times = np.concatenate([faults, false_preds])
     all_kinds = np.concatenate(
         [kinds, np.full(false_preds.size, FALSE_PRED, dtype=np.int8)])
     order = np.argsort(times, kind="stable")
     return EventTrace(times[order], all_kinds[order], horizon)
+
+
+def make_event_trace_bank(
+    fault_dist: Distribution,
+    mu: float,
+    recall: float,
+    precision: float,
+    horizon: float,
+    rng: np.random.Generator,
+    *,
+    false_pred_dist: Distribution | None = None,
+    n_processors: int | None = None,
+    n_traces: int = 1,
+) -> list[EventTrace]:
+    """A whole bank of merged event traces sampled from one generator.
+
+    The vectorized counterpart of calling :func:`make_event_trace` once per
+    trace: fault streams (including the N-processor superposition path),
+    prediction flags and false-prediction streams for the entire bank are
+    each drawn in shared RNG waves.  Statistically identical to per-trace
+    generation, but the draw order differs, so banks are reproducible per
+    ``(rng seed, n_traces)`` — not per trace index.
+    """
+    if n_processors:
+        fault_bank = superposed_trace_bank(
+            fault_dist.rescaled(mu * n_processors), n_processors, horizon,
+            rng, n_traces)
+    else:
+        fault_bank = renewal_trace_bank(fault_dist.rescaled(mu), horizon,
+                                        rng, n_traces)
+
+    sizes = np.array([f.size for f in fault_bank])
+    flags = rng.random(int(sizes.sum())) < recall
+    kind_bank = [np.where(part, FAULT_PRED, FAULT_UNPRED).astype(np.int8)
+                 for part in np.split(flags, np.cumsum(sizes)[:-1])]
+
+    if recall > 0.0 and precision < 1.0:
+        mean_false = precision * mu / (recall * (1.0 - precision))
+        fdist = (false_pred_dist or fault_dist).rescaled(mean_false)
+        false_bank = renewal_trace_bank(fdist, horizon, rng, n_traces)
+    else:
+        false_bank = [np.empty(0, dtype=np.float64)] * n_traces
+
+    return [_merge_events(f, k, fp, horizon)
+            for f, k, fp in zip(fault_bank, kind_bank, false_bank)]
 
 
 def lanl_like_log(rng: np.random.Generator, n_intervals: int = 3010,

@@ -30,7 +30,7 @@ from .registry import (PREDICTORS, build_distribution, build_experiment,
                        list_strategies, register_distribution,
                        register_experiment, register_strategy)
 from .runner import (BestPeriodSearch, EvalCache, ResultTable,
-                     best_period_search, clear_trace_bank,
+                     best_period_search, clear_trace_bank, default_cache_dir,
                      evaluate_strategies, evaluate_mean, run_experiment,
                      trace_bank)
 from .spec import (MU_IND_SYNTH, SECONDS_PER_DAY, DistributionSpec,
@@ -57,6 +57,7 @@ __all__ = [
     "list_strategies",
     "list_distributions",
     "list_experiments",
+    "default_cache_dir",
     "trace_bank",
     "clear_trace_bank",
     "evaluate_strategies",

@@ -9,29 +9,46 @@ every benchmark script:
     searches);
   * all (strategy x period x trace) candidates evaluated against the bank
     with **result caching** — identical (period, trust, window) candidates
-    are simulated once no matter how many strategies or search grids ask —
-    and optional chunked process-parallel execution;
+    are simulated once no matter how many strategies or search grids ask;
+  * every candidate with a constant period and a standard trust policy is
+    flattened into the **lane-parallel batched engine**
+    (:func:`repro.core.batch.simulate_lanes`) and simulated in one
+    vectorized lockstep pass; the scalar engine survives as the reference
+    oracle and as the fallback for dynamic (callable-period) or custom
+    trust candidates, optionally chunked process-parallel;
   * a tidy :class:`ResultTable` (one row per sweep-cell x strategy) with
     derived metric columns.
 
 Determinism contract: each (strategy, trace ``i``) pair is simulated with
 ``np.random.default_rng(seed + 7919 * i)`` and makespans are averaged in
 trace order — **bit-for-bit** identical to the legacy
-``policies.evaluate`` loop, regardless of caching, batching or worker count.
+``policies.evaluate`` loop, regardless of engine choice, caching, batching
+or worker count.
+
+:class:`EvalCache` can additionally spill to a persistent on-disk store
+(``~/.cache/repro/`` or ``$REPRO_CACHE_DIR``) keyed by a content hash of
+the evaluation context, so interrupted ``--full`` sweeps resume instead of
+recomputing; see :func:`run_experiment` (``persist=``) and the benchmark
+CLI's ``--no-cache`` flag.
 """
 
 from __future__ import annotations
 
 import collections
 import dataclasses
+import hashlib
 import json
 import math
 import os
+import pickle
+import tempfile
 from concurrent.futures import ProcessPoolExecutor
+from pathlib import Path
 from typing import Any, Iterable, Iterator, Mapping, Sequence
 
 import numpy as np
 
+from repro.core.batch import simulate_lanes, supported_trust
 from repro.core.policies import Strategy
 from repro.core.simulator import (AlwaysTrust, FixedProbabilityTrust,
                                   NeverTrust, ThresholdTrust, TrustPolicy,
@@ -45,6 +62,7 @@ __all__ = [
     "BestPeriodSearch",
     "EvalCache",
     "ResultTable",
+    "default_cache_dir",
     "trace_bank",
     "clear_trace_bank",
     "evaluate_strategies",
@@ -53,8 +71,27 @@ __all__ = [
     "run_experiment",
 ]
 
-# Environment override for process-parallel evaluation (0/1 = serial).
-_WORKERS_ENV = "REPRO_EXPERIMENT_WORKERS"
+# Environment knobs.
+_WORKERS_ENV = "REPRO_EXPERIMENT_WORKERS"   # scalar-fallback process pool
+_ENGINE_ENV = "REPRO_ENGINE"                # auto (default) | batch | scalar
+_PERSIST_ENV = "REPRO_PERSIST_CACHE"        # 1 = spill EvalCache to disk
+_CACHE_DIR_ENV = "REPRO_CACHE_DIR"          # default ~/.cache/repro
+_BATCHED_TRACES_ENV = "REPRO_BATCHED_TRACES"  # 1 = bank-level trace sampling
+
+# Below this many pending scalar simulations a process pool is not worth
+# its startup cost; the fallback runs serial regardless of worker count.
+_MIN_PARALLEL_SIMS = 16
+
+# Persistent-cache schema/semantics version.  The on-disk store is keyed by
+# the *spec* content hash only — it cannot see code changes.  Bump this
+# whenever simulator mechanics, trace generation or runner seeding change
+# the makespans a spec produces, or stale pre-change results will be served.
+_EVAL_CACHE_VERSION = 1
+
+
+def _env_flag(name: str) -> bool:
+    return os.environ.get(name, "").strip().lower() in ("1", "true", "yes",
+                                                        "on")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -117,18 +154,78 @@ def _candidate_key(strategy: Strategy) -> tuple:
     return (period, _trust_key(strategy.trust), strategy.inexact_window)
 
 
+def _persistable_key(key: tuple) -> str | None:
+    """Canonical JSON form of a candidate key, or None if the candidate has
+    no value semantics (callable period, opaque trust policy)."""
+    period, trust, window = key
+    if not isinstance(period, (int, float)):
+        return None
+    if any(isinstance(part, _IdKey) for part in trust):
+        return None
+    return json.dumps([period, list(trust), window])
+
+
+def default_cache_dir() -> Path:
+    """On-disk result cache root: ``$REPRO_CACHE_DIR`` or ``~/.cache/repro``."""
+    env = os.environ.get(_CACHE_DIR_ENV, "").strip()
+    if env:
+        return Path(env)
+    return Path.home() / ".cache" / "repro"
+
+
 class EvalCache:
     """Maps (candidate key, trace index) -> makespan.
 
     Shared across the strategies / period grids of one evaluation context so
     duplicated candidates (e.g. the analytic period appearing both in a
     BestPeriod grid and as a plain strategy) are simulated exactly once.
+
+    With ``persist_key`` the cache is additionally backed by a JSON file
+    ``<cache_dir>/<persist_key>.json``: prior results load on construction
+    (so an interrupted sweep resumes where it stopped) and new results of
+    serializable candidates are written back by :meth:`flush`.  The caller
+    owns the key — it must content-hash everything the makespans depend on
+    (scenario spec incl. the trace bank seeds, cp, evaluation seed).  The
+    key cannot capture *code*: after changing simulator/trace semantics,
+    bump ``_EVAL_CACHE_VERSION`` (or clear the cache dir / pass
+    ``--no-cache``) or stale results will be served.
     """
 
-    def __init__(self) -> None:
+    def __init__(self, persist_key: str | None = None,
+                 cache_dir: str | Path | None = None) -> None:
         self._makespans: dict[tuple, float] = {}
         self.hits = 0
         self.misses = 0
+        self._path: Path | None = None
+        self._new: dict[str, dict[int, float]] = {}
+        if persist_key is not None:
+            self._path = Path(cache_dir or default_cache_dir()) \
+                / f"{persist_key}.json"
+            for ckey_str, per_trace in self._read_store().items():
+                key = self._decode_key(ckey_str)
+                for ti, m in per_trace.items():
+                    self._makespans[(key, int(ti))] = float(m)
+
+    @staticmethod
+    def _decode_key(ckey_str: str) -> tuple:
+        period, trust, window = json.loads(ckey_str)
+        return (period, tuple(trust), window)
+
+    def _read_store(self) -> dict:
+        """The on-disk makespan map; any unreadable or wrong-shape file
+        (older tool versions, manual edits) degrades to an empty store."""
+        try:
+            with open(self._path) as fh:
+                store = json.load(fh).get("makespans", {})
+            if not isinstance(store, dict):
+                return {}
+            for ckey_str, per_trace in store.items():
+                self._decode_key(ckey_str)
+                dict(per_trace).items()
+            return store
+        except (FileNotFoundError, OSError, ValueError, TypeError,
+                AttributeError, KeyError):
+            return {}
 
     def get(self, strategy: Strategy, trace_idx: int) -> float | None:
         got = self._makespans.get((_candidate_key(strategy), trace_idx))
@@ -138,7 +235,42 @@ class EvalCache:
 
     def put(self, strategy: Strategy, trace_idx: int, makespan: float) -> None:
         self.misses += 1
-        self._makespans[(_candidate_key(strategy), trace_idx)] = makespan
+        key = _candidate_key(strategy)
+        self._makespans[(key, trace_idx)] = makespan
+        if self._path is not None:
+            ckey_str = _persistable_key(key)
+            if ckey_str is not None:
+                self._new.setdefault(ckey_str, {})[trace_idx] = makespan
+
+    def flush(self) -> None:
+        """Merge new results into the on-disk store (atomic rename).
+
+        Concurrent flushes of the same cell from separate processes are a
+        read-merge-replace race: the last writer may drop the other's new
+        entries.  Values are deterministic per key, so this only costs
+        recomputation, never wrong results.
+        """
+        if self._path is None or not self._new:
+            return
+        store = self._read_store()
+        for ckey_str, per_trace in self._new.items():
+            dst = store.setdefault(ckey_str, {})
+            for ti, m in per_trace.items():
+                dst[str(ti)] = m
+        self._path.parent.mkdir(parents=True, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=self._path.parent,
+                                   prefix=self._path.name, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as fh:
+                json.dump({"makespans": store}, fh)
+            os.replace(tmp, self._path)
+        except OSError:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+        self._new.clear()
 
     def __len__(self) -> int:
         return len(self._makespans)
@@ -153,17 +285,27 @@ _BANK_CACHE: "collections.OrderedDict[str, list[EventTrace]]" = \
 _BANK_CACHE_MAX = 8
 
 
-def trace_bank(scenario: ScenarioSpec) -> list[EventTrace]:
+def trace_bank(scenario: ScenarioSpec,
+               batched: bool | None = None) -> list[EventTrace]:
     """The scenario's shared trace bank (content-addressed, memoized).
 
     Two scenario specs with equal fields share one generated bank; the sizes
     and seeds are part of the spec, so overriding either yields a new bank.
+
+    ``batched=True`` (or ``REPRO_BATCHED_TRACES=1``) samples the bank in
+    shared RNG waves (:meth:`ScenarioSpec.make_traces` with
+    ``batched=True``) — statistically identical; fastest for banks of many
+    small traces (see ``BENCH_simulator.json``).  A different stream than
+    per-trace seeding, hence a separate cache entry (and separate
+    persistent-cache results).
     """
-    key = scenario.key()
+    if batched is None:
+        batched = _env_flag(_BATCHED_TRACES_ENV)
+    key = ("batched|" if batched else "") + scenario.key()
     if key in _BANK_CACHE:
         _BANK_CACHE.move_to_end(key)
         return _BANK_CACHE[key]
-    bank = scenario.make_traces()
+    bank = scenario.make_traces(batched=batched)
     _BANK_CACHE[key] = bank
     while len(_BANK_CACHE) > _BANK_CACHE_MAX:
         _BANK_CACHE.popitem(last=False)
@@ -198,9 +340,35 @@ def _eval_chunk(trace: EventTrace, platform: Platform, time_base: float,
 
 
 def _resolve_workers(workers: int | None) -> int:
+    """Worker count for the scalar-fallback pool: explicit argument, then
+    ``$REPRO_EXPERIMENT_WORKERS``, then the machine's CPU count."""
     if workers is None:
-        workers = int(os.environ.get(_WORKERS_ENV, "0") or "0")
+        env = os.environ.get(_WORKERS_ENV, "").strip()
+        workers = int(env) if env else (os.cpu_count() or 1)
     return max(0, workers)
+
+
+def _resolve_engine(engine: str | None) -> str:
+    engine = engine or os.environ.get(_ENGINE_ENV, "").strip() or "auto"
+    if engine not in ("auto", "batch", "scalar"):
+        raise ValueError(f"unknown engine {engine!r} "
+                         f"(expected auto, batch or scalar)")
+    return engine
+
+
+def _batchable(strategy: Strategy) -> bool:
+    """True if the lane engine can run this candidate (constant period and
+    a standard trust policy)."""
+    return isinstance(strategy.period, (int, float, np.integer)) \
+        and supported_trust(strategy.trust)
+
+
+def _picklable(strategy: Strategy) -> bool:
+    try:
+        pickle.dumps(strategy)
+        return True
+    except Exception:
+        return False
 
 
 def evaluate_strategies(
@@ -213,25 +381,40 @@ def evaluate_strategies(
     seed: int = 0,
     cache: EvalCache | None = None,
     workers: int | None = None,
+    engine: str | None = None,
 ) -> list[float]:
     """Average makespan of each strategy over the shared trace set.
 
     The batched replacement for per-strategy ``policies.evaluate`` loops:
     all (strategy x trace) candidates are gathered, deduplicated through
-    ``cache``, executed (chunked per trace; process-parallel when
-    ``workers`` > 1 or ``$REPRO_EXPERIMENT_WORKERS`` is set), and averaged
-    in trace order — results are bit-for-bit independent of the execution
-    plan.
+    ``cache``, executed, and averaged in trace order.  Candidates with
+    constant periods and standard trust policies run as one lane-parallel
+    pass of the vectorized engine (:func:`repro.core.batch.simulate_lanes`);
+    the rest (dynamic periods, custom trust policies) fall back to
+    per-trace scalar simulation, process-parallel when ``workers`` > 1
+    (default ``$REPRO_EXPERIMENT_WORKERS``, else the CPU count) and the
+    pending work is large enough.  ``engine="scalar"`` (or
+    ``REPRO_ENGINE=scalar``) forces the scalar path everywhere;
+    ``engine="batch"`` is strict — it raises if any candidate needs the
+    fallback.  Results are bit-for-bit independent of the execution plan.
     """
     cache = cache if cache is not None else EvalCache()
+    engine = _resolve_engine(engine)
     n = len(traces)
     makespans = np.empty((len(strategies), max(1, n)), dtype=np.float64)
 
     # Gather the missing (strategy, trace) pairs, dedup via the cache key.
     pending: dict[tuple, list[int]] = {}          # (si, ti) slots per key
+    lane_items: list[tuple[int, int]] = []        # (si, ti) for the lane engine
     by_trace: dict[int, list[tuple[int, Strategy]]] = {}
     seen_keys: dict[tuple, tuple[int, int]] = {}  # key -> first slot
     for si, strat in enumerate(strategies):
+        lanes_ok = engine != "scalar" and _batchable(strat)
+        if engine == "batch" and not lanes_ok:
+            raise ValueError(
+                f"engine='batch' cannot run strategy {strat.name!r} "
+                f"(dynamic period or unsupported trust policy); use "
+                f"engine='auto' to allow the scalar fallback")
         for ti in range(n):
             got = cache.get(strat, ti)
             if got is not None:
@@ -242,10 +425,48 @@ def evaluate_strategies(
                 pending.setdefault(key, []).append(si)
                 continue
             seen_keys[key] = (si, ti)
-            by_trace.setdefault(ti, []).append((si, strat))
+            if lanes_ok:
+                lane_items.append((si, ti))
+            else:
+                by_trace.setdefault(ti, []).append((si, strat))
 
+    # One lockstep pass over every batchable (candidate, trace) lane.
+    if lane_items:
+        tr_idx = np.fromiter((ti for _, ti in lane_items), np.int64,
+                             len(lane_items))
+        lane_ms = simulate_lanes(
+            traces, platform, time_base, cp=cp,
+            trace_indices=tr_idx,
+            periods=[float(strategies[si].period) for si, _ in lane_items],
+            trusts=[strategies[si].trust for si, _ in lane_items],
+            windows=[strategies[si].inexact_window for si, _ in lane_items],
+            seeds=seed + 7919 * tr_idx)
+        for (si, ti), m in zip(lane_items, lane_ms):
+            makespans[si, ti] = m
+            cache.put(strategies[si], ti, float(m))
+
+    # Scalar fallback for dynamic-period / custom-trust candidates.  The
+    # process pool needs picklable strategies; ad-hoc closures (lambda
+    # periods, local trust classes) are legal inputs, so unpicklable
+    # candidates peel off into a serial-only pass instead of crashing.
     workers = _resolve_workers(workers)
-    if workers > 1 and by_trace:
+    serial_only: dict[int, list[tuple[int, Strategy]]] = {}
+    if workers > 1:
+        picklable: dict[int, bool] = {}
+        for ti, items in list(by_trace.items()):
+            for slot, strat in items:
+                if slot not in picklable:
+                    picklable[slot] = _picklable(strat)
+            stuck = [it for it in items if not picklable[it[0]]]
+            if stuck:
+                serial_only[ti] = stuck
+                kept = [it for it in items if picklable[it[0]]]
+                if kept:
+                    by_trace[ti] = kept
+                else:
+                    del by_trace[ti]
+    n_scalar = sum(len(items) for items in by_trace.values())
+    if workers > 1 and n_scalar >= _MIN_PARALLEL_SIMS:
         with ProcessPoolExecutor(max_workers=workers) as pool:
             futures = {
                 ti: pool.submit(_eval_chunk, traces[ti], platform, time_base,
@@ -258,10 +479,12 @@ def evaluate_strategies(
                     cache.put(strategies[slot], ti, m)
     else:
         for ti, items in by_trace.items():
-            for slot, m in _eval_chunk(traces[ti], platform, time_base, cp,
-                                       seed, ti, items):
-                makespans[slot, ti] = m
-                cache.put(strategies[slot], ti, m)
+            serial_only.setdefault(ti, []).extend(items)
+    for ti, items in serial_only.items():
+        for slot, m in _eval_chunk(traces[ti], platform, time_base, cp,
+                                   seed, ti, items):
+            makespans[slot, ti] = m
+            cache.put(strategies[slot], ti, m)
 
     # Fill the duplicated candidates from the now-populated cache.
     for (ckey, ti), slots in pending.items():
@@ -290,10 +513,12 @@ def evaluate_mean(
     seed: int = 0,
     cache: EvalCache | None = None,
     workers: int | None = None,
+    engine: str | None = None,
 ) -> float:
     """Single-strategy convenience wrapper over :func:`evaluate_strategies`."""
     return evaluate_strategies(traces, platform, time_base, cp, [strategy],
-                               seed=seed, cache=cache, workers=workers)[0]
+                               seed=seed, cache=cache, workers=workers,
+                               engine=engine)[0]
 
 
 # ---------------------------------------------------------------------------
@@ -325,13 +550,14 @@ def best_period_search(
     seed: int = 0,
     cache: EvalCache | None = None,
     workers: int | None = None,
+    engine: str | None = None,
 ) -> tuple[Strategy, float]:
     """Brute-force the best period for a strategy (paper's BestPeriod).
 
     A thin argmin over :func:`evaluate_strategies`: the whole candidate grid
-    is evaluated as one batch against the shared traces, with the cache
-    deduplicating any candidate already simulated (e.g. the base strategy's
-    own period, or overlapping grids of other searches).
+    is flattened into lanes of the batched engine in one call, with the
+    cache deduplicating any candidate already simulated (e.g. the base
+    strategy's own period, or overlapping grids of other searches).
     """
     if isinstance(search, BestPeriodSearch):
         base, n_points, span = search.base, search.n_points, search.span
@@ -341,7 +567,8 @@ def best_period_search(
     grid = best_period_grid(base.period, platform, n_points, span)
     candidates = [base.with_period(float(t)) for t in grid]
     means = evaluate_strategies(traces, platform, time_base, cp, candidates,
-                                seed=seed, cache=cache, workers=workers)
+                                seed=seed, cache=cache, workers=workers,
+                                engine=engine)
     best_i = int(np.argmin(means))
     best_t, best_m = float(grid[best_i]), float(means[best_i])
     refined = dataclasses.replace(base, name=f"BestPeriod({base.name})",
@@ -444,6 +671,18 @@ def _metric_value(metric: str, makespan: float | None,
     raise KeyError(f"unknown metric {metric!r}")
 
 
+def _cell_persist_key(cell: ScenarioSpec, batched_bank: bool) -> str:
+    """Content hash of one evaluation context: the scenario spec (which
+    covers the trace bank seeds/sizes, platform, cp and the evaluation
+    seed) plus the bank sampling mode (batched banks are different draws
+    than per-trace banks)."""
+    tag = "batched|" if batched_bank else ""
+    digest = hashlib.sha256(
+        (f"eval-v{_EVAL_CACHE_VERSION}|" + tag + cell.key()).encode()
+    ).hexdigest()
+    return f"eval-{digest[:32]}"
+
+
 def run_experiment(
     exp: ExperimentSpec,
     *,
@@ -451,6 +690,9 @@ def run_experiment(
     seed: int | None = None,
     workers: int | None = None,
     verbose: bool = False,
+    persist: bool | None = None,
+    engine: str | None = None,
+    batched_traces: bool | None = None,
 ) -> ResultTable:
     """Run an :class:`ExperimentSpec`; returns the tidy result table.
 
@@ -460,7 +702,18 @@ def run_experiment(
     simulated candidate).  ``n_traces`` / ``seed`` override the scenario
     spec; ``n_traces=0`` skips simulation entirely (analytic experiments
     still report each strategy's period).
+
+    ``persist=True`` (or ``REPRO_PERSIST_CACHE=1``) backs each cell's cache
+    with the on-disk store under :func:`default_cache_dir`, keyed by a
+    content hash of the cell spec — interrupted sweeps resume for free and
+    repeated runs of the same cell simulate nothing.  ``engine`` /
+    ``batched_traces`` select the simulation engine and the bank sampling
+    path (see :func:`evaluate_strategies` / :func:`trace_bank`).
     """
+    if persist is None:
+        persist = _env_flag(_PERSIST_ENV)
+    if batched_traces is None:
+        batched_traces = _env_flag(_BATCHED_TRACES_ENV)
     rows: list[dict[str, Any]] = []
     for axis_cols, cell in exp.cells():
         overrides: dict[str, Any] = {}
@@ -475,8 +728,9 @@ def run_experiment(
 
         traces: list[EventTrace] = []
         if cell.n_traces > 0 and built:
-            traces = trace_bank(cell)
-        cache = EvalCache()
+            traces = trace_bank(cell, batched=batched_traces)
+        cache = EvalCache(persist_key=_cell_persist_key(cell, batched_traces)
+                          if persist else None)
 
         # Batch all plain strategies first, then resolve the searches
         # against the warm cache.
@@ -488,7 +742,7 @@ def run_experiment(
         if traces and plain:
             batched = evaluate_strategies(
                 traces, platform, time_base, cp, [s for _, s in plain],
-                seed=cell.seed, cache=cache, workers=workers)
+                seed=cell.seed, cache=cache, workers=workers, engine=engine)
             for (i, _), m in zip(plain, batched):
                 means[i] = m
         for i, (_, s) in enumerate(built):
@@ -501,8 +755,9 @@ def run_experiment(
                     continue
                 refined, m = best_period_search(
                     s, traces, platform, time_base, cp, seed=cell.seed,
-                    cache=cache, workers=workers)
+                    cache=cache, workers=workers, engine=engine)
                 resolved[i], means[i] = refined, m
+        cache.flush()
 
         for i, (sspec, _) in enumerate(built):
             strat = resolved[i]

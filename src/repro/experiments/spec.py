@@ -28,7 +28,8 @@ from typing import Any, Iterator, Mapping
 import numpy as np
 
 from repro.core.prediction import PredictedPlatform, Predictor
-from repro.core.traces import Distribution, EventTrace, make_event_trace
+from repro.core.traces import (Distribution, EventTrace, make_event_trace,
+                               make_event_trace_bank)
 from repro.core.waste import Platform
 
 __all__ = [
@@ -169,27 +170,56 @@ class ScenarioSpec:
 
     # -- trace generation ----------------------------------------------------
 
-    def make_trace(self, index: int, seed: int | None = None) -> EventTrace:
-        """Trace ``index`` of this scenario's bank (seeded, reproducible)."""
-        seed = self.seed if seed is None else seed
-        rng = np.random.default_rng(seed + 1009 * index)
+    def _stream_args(self) -> tuple[int | None, Distribution | None]:
         n_streams = (max(1, self.n // self.procs_per_stream)
                      if self.per_processor else None)
         fdist = (self.false_pred_dist.build()
                  if self.false_pred_dist is not None else None)
-        tr = make_event_trace(
-            self.dist.build(), self.mu, self.recall, self.precision,
-            self.horizon, rng, false_pred_dist=fdist, n_processors=n_streams)
+        return n_streams, fdist
+
+    def _shift(self, tr: EventTrace) -> EventTrace:
         # Shift so the job starts ``start`` seconds into the trace (avoids
         # the synchronized-processor-start artifact, paper §5.1).
         sel = tr.times >= self.start
         return EventTrace(tr.times[sel] - self.start, tr.kinds[sel],
                           self.horizon - self.start)
 
+    def make_trace(self, index: int, seed: int | None = None) -> EventTrace:
+        """Trace ``index`` of this scenario's bank (seeded, reproducible)."""
+        seed = self.seed if seed is None else seed
+        rng = np.random.default_rng(seed + 1009 * index)
+        n_streams, fdist = self._stream_args()
+        tr = make_event_trace(
+            self.dist.build(), self.mu, self.recall, self.precision,
+            self.horizon, rng, false_pred_dist=fdist, n_processors=n_streams)
+        return self._shift(tr)
+
     def make_traces(self, n_traces: int | None = None,
-                    seed: int | None = None) -> list[EventTrace]:
+                    seed: int | None = None, *,
+                    batched: bool = False) -> list[EventTrace]:
+        """The scenario's trace bank.
+
+        ``batched=True`` samples the whole bank in shared RNG waves
+        (:func:`repro.core.traces.make_event_trace_bank`) — statistically
+        identical; ~4x faster when the bank is many small traces (the
+        per-trace Python overhead dominates) and a wash at paper-scale
+        superposition where each trace already saturates the vectorized
+        wave path (see ``BENCH_simulator.json``).  Drawn from one
+        ``default_rng([seed, n])`` stream rather than the per-trace
+        ``default_rng(seed + 1009*i)`` streams, so the two modes produce
+        different (equally valid) banks.
+        """
         n = self.n_traces if n_traces is None else n_traces
-        return [self.make_trace(i, seed=seed) for i in range(n)]
+        if not batched:
+            return [self.make_trace(i, seed=seed) for i in range(n)]
+        seed = self.seed if seed is None else seed
+        rng = np.random.default_rng([seed, n])
+        n_streams, fdist = self._stream_args()
+        bank = make_event_trace_bank(
+            self.dist.build(), self.mu, self.recall, self.precision,
+            self.horizon, rng, false_pred_dist=fdist,
+            n_processors=n_streams, n_traces=n)
+        return [self._shift(tr) for tr in bank]
 
     # -- field update (dotted paths; how sweeps and the CLI set fields) ------
 

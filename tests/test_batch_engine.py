@@ -1,0 +1,479 @@
+"""Lane-parallel batched engine: bit-for-bit equivalence with the scalar
+simulator, runner dispatch, persistent result cache, batched trace banks."""
+
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.batch import BatchResult, simulate_batch, simulate_lanes
+from repro.core.simulator import (AlwaysTrust, FixedProbabilityTrust,
+                                  NeverTrust, SimResult, ThresholdTrust,
+                                  simulate)
+from repro.core.traces import (EventTrace, Exponential, Weibull,
+                               make_event_trace, make_event_trace_bank,
+                               renewal_trace_bank, superposed_trace_bank)
+from repro.core.waste import Platform
+from repro.experiments import (DistributionSpec, EvalCache, ScenarioSpec,
+                               build_strategy, evaluate_strategies,
+                               run_experiment)
+from repro.experiments.runner import _resolve_workers, best_period_search
+
+SMALL = ScenarioSpec(n=32, dist=DistributionSpec("weibull", {"shape": 0.7}),
+                     mu_ind=32 * 1e5, c=600.0, d=60.0, r=600.0,
+                     time_base_years_total=0.1, start=0.0, n_traces=4,
+                     seed=3)
+
+
+def trace_of(times, kinds, horizon=1e9):
+    return EventTrace(np.asarray(times, float), np.asarray(kinds, np.int8),
+                      horizon)
+
+
+def batch_one(trace, platform, time_base, period, *, seed=0, **kw):
+    """simulate_batch on a single lane, unwrapped to a SimResult."""
+    res = simulate_batch([trace], platform, time_base, [period],
+                         trace_seeds=[seed], **kw)
+    assert isinstance(res, BatchResult)
+    return res.result(0, 0)
+
+
+def assert_same(got: SimResult, want: SimResult, context=""):
+    for f in dataclasses.fields(SimResult):
+        g, w = getattr(got, f.name), getattr(want, f.name)
+        assert g == w, f"{context}: {f.name}: batch {g} != scalar {w}"
+
+
+# ---------------------------------------------------------------------------
+# Mechanics: the scalar unit scenarios, replayed through the lane engine
+# ---------------------------------------------------------------------------
+
+def test_fault_free_execution_matches():
+    p = Platform(mu=1e12, c=10.0, d=1.0, r=2.0)
+    res = batch_one(trace_of([], []), p, 360.0, 100.0)
+    assert res.makespan == pytest.approx(400.0)
+    assert res.n_periodic_ckpts == 4
+
+
+def test_unit_scenarios_match_scalar_exactly():
+    p = Platform(mu=1e12, c=10.0, d=2.0, r=3.0)
+    cases = [
+        (trace_of([150.0], [0]), dict()),                    # mid-period fault
+        (trace_of([95.0], [0]), dict()),                     # fault in ckpt
+        (trace_of([50.0], [1]), dict(trust=AlwaysTrust())),  # trusted true
+        (trace_of([50.0], [1]), dict(trust=NeverTrust())),   # untrusted true
+        (trace_of([50.0], [2]), dict(trust=AlwaysTrust())),  # false pred
+        (trace_of([2.0], [2]), dict(trust=AlwaysTrust())),   # unhonourable
+        (trace_of([20.0], [2]), dict(trust=ThresholdTrust(30.0))),
+        (trace_of([50.0], [1]), dict(trust=AlwaysTrust(),
+                                     inexact_window=20.0)),
+        (trace_of([50.0, 55.0, 170.0], [1, 2, 0]),
+         dict(trust=AlwaysTrust(), inexact_window=30.0)),    # pred pile-up
+    ]
+    for i, (trace, kw) in enumerate(cases):
+        want = simulate(trace, p, 360.0, 100.0, cp=4.0,
+                        rng=np.random.default_rng(17), **kw)
+        got = batch_one(trace, p, 360.0, 100.0, cp=4.0, seed=17, **kw)
+        assert_same(got, want, f"case {i}")
+
+
+def test_period_below_checkpoint_raises():
+    p = Platform(mu=1e5, c=600.0)
+    with pytest.raises(ValueError):
+        simulate_batch([trace_of([], [])], p, 1e4, [10.0])
+
+
+# ---------------------------------------------------------------------------
+# Randomized equivalence suite (the 1e-9 acceptance bar, met exactly)
+# ---------------------------------------------------------------------------
+
+def _random_case(case: int):
+    r = np.random.default_rng(1000 + case)
+    platform = Platform(mu=float(r.uniform(2e4, 2e5)),
+                        c=float(r.uniform(100, 900)),
+                        d=float(r.uniform(0, 120)),
+                        r=float(r.uniform(0, 900)))
+    cp = float(r.uniform(0.1, 2.0)) * platform.c
+    time_base = float(r.uniform(2, 6)) * platform.mu
+    dist = Exponential(1.0) if case % 2 == 0 else Weibull(0.7, 1.0)
+    trust = [NeverTrust(), AlwaysTrust(),
+             ThresholdTrust(float(r.uniform(0, platform.c * 3))),
+             FixedProbabilityTrust(float(r.uniform(0.2, 0.8)))][case % 4]
+    window = [0.0, 2.0 * platform.c][case % 2]
+    traces = [make_event_trace(dist, platform.mu, float(r.uniform(0, 1)),
+                               float(r.uniform(0.3, 1.0)), 30 * time_base,
+                               np.random.default_rng(7 * case + i))
+              for i in range(3)]
+    periods = [float(x) for x in
+               np.random.default_rng(case).uniform(platform.c * 2,
+                                                   platform.c * 20, 3)]
+    return platform, cp, time_base, trust, window, traces, periods
+
+
+@pytest.mark.parametrize("case", range(8))
+def test_randomized_equivalence(case):
+    platform, cp, tb, trust, window, traces, periods = _random_case(case)
+    seeds = [11 + 7919 * i for i in range(len(traces))]
+    batch = simulate_batch(traces, platform, tb, periods, cp=cp,
+                           trust=trust, inexact_window=window,
+                           trace_seeds=seeds)
+    for ci, period in enumerate(periods):
+        for ti, trace in enumerate(traces):
+            want = simulate(trace, platform, tb, period, cp=cp, trust=trust,
+                            inexact_window=window,
+                            rng=np.random.default_rng(seeds[ti]))
+            assert_same(batch.result(ci, ti), want, f"case {case}")
+
+
+def test_simulate_lanes_sparse_subset():
+    platform, cp, tb, trust, window, traces, periods = _random_case(2)
+    lanes = [(0, 2), (1, 0), (2, 1), (2, 2)]       # (trace, period) pairs
+    ms = simulate_lanes(
+        traces, platform, tb, cp=cp,
+        trace_indices=[t for t, _ in lanes],
+        periods=[periods[c] for _, c in lanes],
+        trusts=[trust] * len(lanes),
+        windows=[window] * len(lanes),
+        seeds=[5 + 7919 * t for t, _ in lanes])
+    for j, (ti, ci) in enumerate(lanes):
+        want = simulate(traces[ti], platform, tb, periods[ci], cp=cp,
+                        trust=trust, inexact_window=window,
+                        rng=np.random.default_rng(5 + 7919 * ti))
+        assert ms[j] == want.makespan
+
+
+def test_per_candidate_trust_and_window():
+    platform, cp, tb, _, _, traces, periods = _random_case(4)
+    trusts = [NeverTrust(), ThresholdTrust(200.0), AlwaysTrust()]
+    windows = [0.0, 2 * platform.c, platform.c]
+    batch = simulate_batch(traces, platform, tb, periods, cp=cp,
+                           trust=trusts, inexact_window=windows,
+                           trace_seeds=[3, 4, 5])
+    for ci in range(3):
+        for ti, trace in enumerate(traces):
+            want = simulate(trace, platform, tb, periods[ci], cp=cp,
+                            trust=trusts[ci], inexact_window=windows[ci],
+                            rng=np.random.default_rng(3 + ti))
+            assert_same(batch.result(ci, ti), want)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis property suite (skips when hypothesis is unavailable)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:        # pragma: no cover - optional test dep
+    _HAVE_HYPOTHESIS = False
+
+
+if _HAVE_HYPOTHESIS:
+    @given(st.integers(0, 10 ** 6), st.floats(100.0, 900.0),
+           st.floats(0.0, 1.0), st.floats(0.3, 1.0),
+           st.sampled_from(["exp", "weibull"]),
+           st.sampled_from(["never", "always", "threshold", "fixed_q"]),
+           st.booleans())
+    @settings(max_examples=20, deadline=None)
+    def test_property_batch_equals_scalar(seed, c, recall, precision,
+                                          dist_kind, trust_kind, inexact):
+        r = np.random.default_rng(seed)
+        platform = Platform(mu=float(r.uniform(2e4, 1e5)), c=c,
+                            d=float(r.uniform(0, 100)),
+                            r=float(r.uniform(0, 600)))
+        cp = float(r.uniform(0.2, 1.5)) * c
+        tb = float(r.uniform(2, 5)) * platform.mu
+        dist = Exponential(1.0) if dist_kind == "exp" else Weibull(0.7, 1.0)
+        trust = {"never": NeverTrust(), "always": AlwaysTrust(),
+                 "threshold": ThresholdTrust(float(r.uniform(0, 2 * c))),
+                 "fixed_q": FixedProbabilityTrust(0.5)}[trust_kind]
+        window = 2.0 * c if inexact else 0.0
+        traces = [make_event_trace(dist, platform.mu, recall, precision,
+                                   20 * tb, np.random.default_rng(seed + i))
+                  for i in range(2)]
+        periods = [float(x) for x in r.uniform(c * 2, c * 15, 2)]
+        batch = simulate_batch(traces, platform, tb, periods, cp=cp,
+                               trust=trust, inexact_window=window,
+                               trace_seeds=[seed, seed + 1])
+        for ci, period in enumerate(periods):
+            for ti, trace in enumerate(traces):
+                want = simulate(trace, platform, tb, period, cp=cp,
+                                trust=trust, inexact_window=window,
+                                rng=np.random.default_rng(seed + ti))
+                assert_same(batch.result(ci, ti), want)
+
+
+# ---------------------------------------------------------------------------
+# Runner dispatch: lane engine vs forced-scalar path, dynamic fallback
+# ---------------------------------------------------------------------------
+
+def test_runner_engines_agree_bit_for_bit():
+    traces = SMALL.make_traces()
+    plat, tb, cp = SMALL.platform, SMALL.time_base, SMALL.cp
+    strategies = [build_strategy("rfo", SMALL),
+                  build_strategy("optimal_prediction", SMALL),
+                  build_strategy("inexact_prediction", SMALL)]
+    auto = evaluate_strategies(traces, plat, tb, cp, strategies, seed=7,
+                               engine="auto")
+    scalar = evaluate_strategies(traces, plat, tb, cp, strategies, seed=7,
+                                 engine="scalar")
+    assert auto == scalar
+
+
+def test_runner_dynamic_strategy_falls_back_to_scalar():
+    sc = SMALL
+    traces = sc.make_traces()
+    dyn = build_strategy("dynamic_rfo", sc)          # callable period
+    assert callable(dyn.period)
+    got = evaluate_strategies(traces, sc.platform, sc.time_base, sc.cp,
+                              [dyn, build_strategy("rfo", sc)], seed=2)
+    want = evaluate_strategies(traces, sc.platform, sc.time_base, sc.cp,
+                               [dyn, build_strategy("rfo", sc)], seed=2,
+                               engine="scalar")
+    assert got == want
+
+
+def test_best_period_search_same_optimum_on_both_engines():
+    traces = SMALL.make_traces()
+    plat, tb, cp = SMALL.platform, SMALL.time_base, SMALL.cp
+    base = build_strategy("rfo", SMALL)
+    sa, ma = best_period_search(base, traces, plat, tb, cp, n_points=8,
+                                engine="auto")
+    ss, ms = best_period_search(base, traces, plat, tb, cp, n_points=8,
+                                engine="scalar")
+    assert (sa.period, ma) == (ss.period, ms)
+
+
+def test_tolerance_pinned_regression_means():
+    """Regression pin for evaluate_strategies means on the SMALL scenario —
+    guards engine, trace generation and seeding against silent drift."""
+    traces = SMALL.make_traces()
+    plat, tb, cp = SMALL.platform, SMALL.time_base, SMALL.cp
+    strategies = [build_strategy("rfo", SMALL),
+                  build_strategy("optimal_prediction", SMALL),
+                  build_strategy("young", SMALL)]
+    means = evaluate_strategies(traces, plat, tb, cp, strategies, seed=7)
+    want = [119433.55140339246, 103766.19817640496, 126397.87625327974]
+    assert means == pytest.approx(want, rel=1e-12)
+
+
+def test_unpicklable_lambda_period_runs_serially(monkeypatch):
+    """Ad-hoc closure periods are legal simulator inputs; the now-default
+    process pool must peel them off to a serial pass, not crash."""
+    from repro.core.policies import Strategy
+    monkeypatch.delenv("REPRO_EXPERIMENT_WORKERS", raising=False)
+    traces = SMALL.make_traces()
+    # Distinct lambda objects -> distinct cache keys -> enough pending
+    # scalar work (5 x 4 traces >= _MIN_PARALLEL_SIMS) to engage the pool.
+    lams = [Strategy(f"Lambda{i}", lambda t: 9000.0, NeverTrust())
+            for i in range(5)]
+    got = evaluate_strategies(traces, SMALL.platform, SMALL.time_base,
+                              SMALL.cp, lams, seed=1, workers=4)
+    want = evaluate_strategies(traces, SMALL.platform, SMALL.time_base,
+                               SMALL.cp, lams, seed=1, workers=0)
+    assert got == want
+
+
+def test_engine_batch_is_strict():
+    traces = SMALL.make_traces()
+    dyn = build_strategy("dynamic_rfo", SMALL)
+    with pytest.raises(ValueError, match="batch"):
+        evaluate_strategies(traces, SMALL.platform, SMALL.time_base,
+                            SMALL.cp, [dyn], engine="batch")
+    ok = evaluate_strategies(traces, SMALL.platform, SMALL.time_base,
+                             SMALL.cp, [build_strategy("rfo", SMALL)],
+                             engine="batch")
+    assert ok == evaluate_strategies(traces, SMALL.platform, SMALL.time_base,
+                                     SMALL.cp,
+                                     [build_strategy("rfo", SMALL)],
+                                     engine="scalar")
+
+
+def test_resolve_workers_defaults_to_cpu_count(monkeypatch):
+    monkeypatch.delenv("REPRO_EXPERIMENT_WORKERS", raising=False)
+    assert _resolve_workers(None) == (os.cpu_count() or 1)
+    monkeypatch.setenv("REPRO_EXPERIMENT_WORKERS", "3")
+    assert _resolve_workers(None) == 3
+    assert _resolve_workers(1) == 1
+
+
+# ---------------------------------------------------------------------------
+# Persistent on-disk cache
+# ---------------------------------------------------------------------------
+
+def test_eval_cache_persists_and_resumes(tmp_path):
+    traces = SMALL.make_traces()
+    plat, tb, cp = SMALL.platform, SMALL.time_base, SMALL.cp
+    strategies = [build_strategy("rfo", SMALL),
+                  build_strategy("inexact_prediction", SMALL)]
+    cold = EvalCache(persist_key="ctx", cache_dir=tmp_path)
+    first = evaluate_strategies(traces, plat, tb, cp, strategies, seed=7,
+                                cache=cold)
+    assert cold.misses == len(strategies) * len(traces)
+    cold.flush()
+    assert (tmp_path / "ctx.json").exists()
+
+    warm = EvalCache(persist_key="ctx", cache_dir=tmp_path)
+    again = evaluate_strategies(traces, plat, tb, cp, strategies, seed=7,
+                                cache=warm)
+    assert again == first
+    assert warm.misses == 0 and warm.hits == len(strategies) * len(traces)
+
+
+def test_eval_cache_skips_non_serializable_candidates(tmp_path):
+    traces = SMALL.make_traces()
+    dyn = build_strategy("dynamic_rfo", SMALL)       # HazardPeriod period
+    cache = EvalCache(persist_key="dyn", cache_dir=tmp_path)
+    evaluate_strategies(traces, SMALL.platform, SMALL.time_base, SMALL.cp,
+                        [dyn], seed=1, cache=cache)
+    cache.flush()
+    assert not (tmp_path / "dyn.json").exists()      # nothing persistable
+
+
+def test_eval_cache_tolerates_corrupt_store(tmp_path):
+    for i, payload in enumerate(["[]", "{\"makespans\": []}", "not json",
+                                 "{\"makespans\": {\"bad key\": 1}}",
+                                 "{\"makespans\": {\"[1,[],0]\": 5}}"]):
+        (tmp_path / f"c{i}.json").write_text(payload)
+        cache = EvalCache(persist_key=f"c{i}", cache_dir=tmp_path)
+        assert len(cache) == 0
+
+
+def test_run_experiment_persist_resume(tmp_path, monkeypatch):
+    from repro.experiments import ExperimentSpec, StrategySpec
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path))
+    exp = ExperimentSpec(name="t", scenario=SMALL,
+                         strategies=(StrategySpec("rfo"),
+                                     StrategySpec("optimal_prediction")))
+    t1 = run_experiment(exp, persist=True)
+    assert list(tmp_path.glob("eval-*.json"))
+    t2 = run_experiment(exp, persist=True)
+    assert t1.rows == t2.rows
+    # persist=False must not touch or read the store
+    t3 = run_experiment(exp, persist=False)
+    assert t3.rows == t1.rows
+
+
+# ---------------------------------------------------------------------------
+# Batched trace generation
+# ---------------------------------------------------------------------------
+
+def test_renewal_trace_bank_shapes_and_stats():
+    rng = np.random.default_rng(0)
+    bank = renewal_trace_bank(Exponential(10.0), 1000.0, rng, 16)
+    assert len(bank) == 16
+    for times in bank:
+        assert np.all(np.diff(times) > 0)
+        assert times.size == 0 or times[-1] < 1000.0
+    mean_count = np.mean([t.size for t in bank])
+    assert mean_count == pytest.approx(100.0, rel=0.3)
+
+
+def test_superposed_trace_bank_matches_scalar_statistics():
+    rng = np.random.default_rng(1)
+    bank = superposed_trace_bank(Exponential(100.0), 10, 1000.0, rng, 12)
+    assert len(bank) == 12
+    for times in bank:
+        assert np.all(np.diff(times) >= 0)
+    # superposition of 10 procs with mean 100 ~ rate 0.1/s -> ~100 events
+    assert np.mean([t.size for t in bank]) == pytest.approx(100.0, rel=0.3)
+
+
+def test_make_event_trace_bank_kinds_and_merge():
+    rng = np.random.default_rng(2)
+    bank = make_event_trace_bank(Exponential(1.0), 50.0, 0.8, 0.7, 5000.0,
+                                 rng, n_traces=8)
+    assert len(bank) == 8
+    for tr in bank:
+        assert np.all(np.diff(tr.times) >= 0)
+        assert set(np.unique(tr.kinds)) <= {0, 1, 2}
+    # recall 0.8 -> most faults predicted
+    kinds = np.concatenate([tr.kinds for tr in bank])
+    n_faults = np.sum(kinds != 2)
+    assert np.sum(kinds == 1) / max(1, n_faults) == pytest.approx(0.8,
+                                                                  abs=0.1)
+
+
+def test_scenario_batched_bank_equivalent_results():
+    """A batched bank is a different draw but statistically interchangeable:
+    evaluate a strategy on both and require agreement within a few percent."""
+    spec = SMALL.replace(n_traces=16)
+    per_trace = spec.make_traces()
+    batched = spec.make_traces(batched=True)
+    assert len(batched) == len(per_trace)
+    strat = build_strategy("rfo", spec)
+    plat, tb, cp = spec.platform, spec.time_base, spec.cp
+    m1 = evaluate_strategies(per_trace, plat, tb, cp, [strat])[0]
+    m2 = evaluate_strategies(batched, plat, tb, cp, [strat])[0]
+    assert m2 == pytest.approx(m1, rel=0.05)
+
+
+def test_trace_bank_batched_entries_are_distinct():
+    from repro.experiments.runner import clear_trace_bank, trace_bank
+    clear_trace_bank()
+    a = trace_bank(SMALL, batched=False)
+    b = trace_bank(SMALL, batched=True)
+    assert a is trace_bank(SMALL, batched=False)
+    assert b is trace_bank(SMALL, batched=True)
+    assert a is not b
+    clear_trace_bank()
+
+
+# ---------------------------------------------------------------------------
+# JAX backend (subprocess: needs x64 without disturbing this process's jax)
+# ---------------------------------------------------------------------------
+
+_JAX_CHECK = """
+import numpy as np
+from repro.core.batch import simulate_batch
+from repro.core.simulator import ThresholdTrust, simulate
+from repro.core.traces import Exponential, make_event_trace
+from repro.core.waste import Platform
+
+p = Platform(mu=5e4, c=600.0, d=60.0, r=600.0)
+tb, cp = 2e5, 600.0
+trust = ThresholdTrust(700.0)
+traces = [make_event_trace(Exponential(1.0), p.mu, 0.6, 0.8, 30 * tb,
+                           np.random.default_rng(i)) for i in range(3)]
+periods = [3000.0, 9000.0]
+batch = simulate_batch(traces, p, tb, periods, cp=cp, trust=trust,
+                       backend="jax")
+for ci, period in enumerate(periods):
+    for ti, tr in enumerate(traces):
+        want = simulate(tr, p, tb, period, cp=cp, trust=trust,
+                        rng=np.random.default_rng(0))
+        assert batch.result(ci, ti) == want, (ci, ti)
+print("JAX-OK")
+"""
+
+
+@pytest.mark.slow
+def test_jax_backend_matches_scalar_subprocess():
+    jax = pytest.importorskip("jax")
+    del jax
+    env = dict(os.environ, JAX_ENABLE_X64="1",
+               PYTHONPATH=os.pathsep.join(
+                   [os.path.join(os.path.dirname(__file__), "..", "src")]
+                   + sys.path))
+    proc = subprocess.run([sys.executable, "-c", _JAX_CHECK], env=env,
+                          capture_output=True, text=True, timeout=570)
+    assert proc.returncode == 0, proc.stderr
+    assert "JAX-OK" in proc.stdout
+
+
+def test_jax_backend_rejects_unsupported_config():
+    pytest.importorskip("jax")
+    import jax as _jax
+    p = Platform(mu=5e4, c=600.0)
+    tr = trace_of([], [])
+    if not _jax.config.jax_enable_x64:
+        with pytest.raises(RuntimeError, match="x64"):
+            simulate_batch([tr], p, 1e4, [2000.0], backend="jax")
+    else:  # pragma: no cover - depends on session config
+        with pytest.raises(ValueError):
+            simulate_batch([tr], p, 1e4, [2000.0], backend="jax",
+                           trust=FixedProbabilityTrust(0.5))
