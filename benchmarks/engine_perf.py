@@ -26,11 +26,46 @@ import time
 import numpy as np
 
 
+def _engine_cell(traces, platform, time_base, cp, trust, periods, seeds,
+                 scalar_periods: int, **sim_kwargs) -> dict:
+    """Time one batch-vs-scalar cell: the batched engine on the full
+    (periods x traces) grid, the scalar loop on ``scalar_periods`` columns
+    (extrapolated linearly), and their max |makespan| disagreement."""
+    from repro.core.batch import simulate_batch
+    from repro.core.simulator import simulate
+
+    t0 = time.perf_counter()
+    batch = simulate_batch(traces, platform, time_base, periods, cp=cp,
+                           trust=trust, trace_seeds=seeds, **sim_kwargs)
+    t_batch = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    max_diff = 0.0
+    for ci in range(scalar_periods):
+        for ti, tr in enumerate(traces):
+            res = simulate(tr, platform, time_base, float(periods[ci]),
+                           cp=cp, trust=trust,
+                           rng=np.random.default_rng(int(seeds[ti])),
+                           **sim_kwargs)
+            max_diff = max(max_diff,
+                           abs(res.makespan - batch.makespan[ci, ti]))
+    t_scalar = time.perf_counter() - t0
+    n_periods = len(periods)
+    t_scalar_full = t_scalar * n_periods / scalar_periods
+    return {
+        "grid": f"{n_periods} periods x {len(traces)} traces",
+        "batch_s": round(t_batch, 3),
+        "scalar_s_measured": round(t_scalar, 3),
+        "scalar_s_est_full_grid": round(t_scalar_full, 3),
+        "speedup": round(t_scalar_full / max(t_batch, 1e-9), 1),
+        "max_abs_makespan_diff": max_diff,
+    }
+
+
 def run(n_traces: int, n_periods: int, scalar_periods: int,
         batched_traces: bool) -> dict:
-    from repro.core.batch import simulate_batch
     from repro.core.prediction import beta_lim
-    from repro.core.simulator import ThresholdTrust, simulate
+    from repro.core.simulator import ThresholdTrust
     from repro.experiments.spec import ScenarioSpec
 
     spec = ScenarioSpec(n_traces=n_traces)
@@ -82,32 +117,25 @@ def run(n_traces: int, n_periods: int, scalar_periods: int,
     periods = np.geomspace(platform.c * 2.0, platform.mu * 0.5, n_periods)
     seeds = 7919 * np.arange(n_traces)
 
-    t0 = time.perf_counter()
-    batch = simulate_batch(traces, platform, time_base, periods, cp=cp,
-                           trust=trust, trace_seeds=seeds)
-    t_batch = time.perf_counter() - t0
+    out["engine"] = dict(
+        _engine_cell(traces, platform, time_base, cp, trust, periods, seeds,
+                     scalar_periods),
+        lanes=n_periods * n_traces)
 
-    t0 = time.perf_counter()
-    max_diff = 0.0
-    for ci in range(scalar_periods):
-        for ti, tr in enumerate(traces):
-            res = simulate(tr, platform, time_base, float(periods[ci]),
-                           cp=cp, trust=trust,
-                           rng=np.random.default_rng(int(seeds[ti])))
-            max_diff = max(max_diff,
-                           abs(res.makespan - batch.makespan[ci, ti]))
-    t_scalar = time.perf_counter() - t0
-    t_scalar_full = t_scalar * n_periods / scalar_periods
+    # -- window-strategy lanes (arXiv:1302.4558 "within" mode) -------------
+    # Same grid on a window-bearing bank with in-window proactive
+    # checkpointing: the heaviest per-lane state the engine carries.
+    from repro.core.windows import beta_lim_window, t_window_period
+    wspec = spec.replace(window=9000.0)
+    wtraces = wspec.make_traces(batched=batched_traces)
+    tp = t_window_period(wspec.pp, wspec.window)
+    wtrust = ThresholdTrust(beta_lim_window(wspec.pp, wspec.window, tp))
 
-    out["engine"] = {
-        "grid": f"{n_periods} periods x {n_traces} traces",
-        "lanes": n_periods * n_traces,
-        "batch_s": round(t_batch, 3),
-        "scalar_s_measured": round(t_scalar, 3),
-        "scalar_s_est_full_grid": round(t_scalar_full, 3),
-        "speedup": round(t_scalar_full / max(t_batch, 1e-9), 1),
-        "max_abs_makespan_diff": max_diff,
-    }
+    out["engine_window"] = dict(
+        _engine_cell(wtraces, platform, time_base, cp, wtrust, periods,
+                     seeds, scalar_periods, window_mode="within",
+                     window_period=tp),
+        window=wspec.window, window_period=round(tp, 1))
     return out
 
 
@@ -135,6 +163,7 @@ def main() -> None:
 
     result = run(n_traces, n_periods, scalar_periods, args.batched_traces)
     gen, eng = result["bank_gen"], result["engine"]
+    weng = result["engine_window"]
     small = result["bank_gen_small_traces"]
     print(f"bank gen ({n_traces} traces): per-trace {gen['per_trace_s']}s, "
           f"batched {gen['batched_s']}s ({gen['speedup']}x)")
@@ -144,8 +173,15 @@ def main() -> None:
     print(f"engine ({eng['grid']}): batch {eng['batch_s']}s, scalar "
           f"~{eng['scalar_s_est_full_grid']}s -> {eng['speedup']}x "
           f"(max |diff| = {eng['max_abs_makespan_diff']})")
+    print(f"engine window I={weng['window']:g} Tp={weng['window_period']}: "
+          f"batch {weng['batch_s']}s, scalar "
+          f"~{weng['scalar_s_est_full_grid']}s -> {weng['speedup']}x "
+          f"(max |diff| = {weng['max_abs_makespan_diff']})")
     if eng["max_abs_makespan_diff"] > 1e-9:
         raise AssertionError("engines disagree beyond the 1e-9 contract")
+    if weng["max_abs_makespan_diff"] > 1e-9:
+        raise AssertionError("window-mode engines disagree beyond the "
+                             "1e-9 contract")
 
     with open(args.out, "w") as fh:
         json.dump(result, fh, indent=1)

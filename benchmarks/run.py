@@ -67,7 +67,7 @@ def report_roofline(path: str = "roofline_results.json") -> None:
 def _import_benchmarks():
     """Import every benchmark module so experiments register themselves."""
     from . import (beyond, exec_times, log_traces, multilevel,
-                   recall_precision, table2, waste_vs_n)
+                   recall_precision, table2, waste_vs_n, window_sweep)
     return {
         "table2": table2.run,
         "exec_times": exec_times.run,
@@ -76,6 +76,7 @@ def _import_benchmarks():
         "recall_precision": recall_precision.run,
         "beyond": beyond.run,
         "multilevel": multilevel.run,
+        "window_sweep": window_sweep.run,
     }
 
 

@@ -1,0 +1,94 @@
+"""Prediction-window sweep (arXiv:1302.4558): waste vs window length I.
+
+Sweeps the window length from 0 (exact dates) to about two checkpointing
+periods, crossed with the literature predictors, and compares the window
+action policies:
+
+  * RFO               — predictor ignored entirely (baseline);
+  * OptimalPrediction — the exact-date refined policy (window still
+                        materializes the fault somewhere in [t, t+I]);
+  * WindowStart       — one proactive checkpoint at the window start;
+  * WindowProactive   — periodic proactive checkpoints inside the window
+                        (period T_p* = sqrt(2 I C_p kappa)).
+
+Claims asserted in quick mode:
+  * at I = 0 WindowStart reproduces the exact-date refined policy
+    bit-for-bit (same candidate: period T_pred, threshold beta_lim);
+  * widening the window hurts WindowStart (the in-window loss r I/2);
+  * at the widest window WindowProactive beats WindowStart (bounding the
+    work at risk pays for the in-window checkpoints).
+
+    PYTHONPATH=src python -m benchmarks.run --experiment window_sweep
+    PYTHONPATH=src python -m benchmarks.run --only window_sweep
+"""
+
+from __future__ import annotations
+
+from repro.experiments import (ExperimentSpec, ScenarioSpec, StrategySpec,
+                               SweepSpec, register_experiment, run_experiment)
+
+WINDOWS = [0.0, 600.0, 3000.0, 9000.0, 18000.0]
+
+
+@register_experiment("window_sweep",
+                     "waste vs prediction-window length I x predictor "
+                     "(arXiv:1302.4558 axes)")
+def build(quick: bool = True) -> ExperimentSpec:
+    return ExperimentSpec(
+        name="window_sweep",
+        scenario=ScenarioSpec(n_traces=4 if quick else 50),
+        strategies=(
+            StrategySpec("rfo"),
+            StrategySpec("optimal_prediction"),
+            StrategySpec("window_start"),
+            StrategySpec("window_proactive"),
+        ),
+        sweep=SweepSpec(
+            axes={"recall,precision": [(0.85, 0.82), (0.70, 0.40)],
+                  "window": WINDOWS},
+            labels={"recall,precision": ["good", "fair"]},
+            names={"recall,precision": "predictor"},
+        ),
+        description="waste vs prediction-window length I (0 = exact dates)",
+    )
+
+
+def run(quick: bool = True) -> dict:
+    exp = build(quick=quick)
+    table = run_experiment(exp, verbose=True)
+    print(table.format())
+
+    out: dict = {"rows": table.rows}
+    for predictor in ("good", "fair"):
+        # Claim 1: I = 0 recovers the exact-date refined policy.  Both
+        # strategies resolve to (T_pred, ThresholdTrust(beta_lim)), so the
+        # runner's cache dedup already guarantees identical makespans; the
+        # assert locks the strategy construction.
+        m_exact = table.value("makespan", predictor=predictor, window=0.0,
+                              strategy="OptimalPrediction")
+        m_start0 = table.value("makespan", predictor=predictor, window=0.0,
+                               strategy="WindowStart")
+        assert m_start0 == m_exact, \
+            f"{predictor}: WindowStart(I=0) != OptimalPrediction " \
+            f"({m_start0} vs {m_exact})"
+
+        # Claim 2: a wider window costs WindowStart makespan.
+        m_wide = table.value("makespan", predictor=predictor,
+                             window=WINDOWS[-1], strategy="WindowStart")
+        assert m_wide > m_start0, \
+            f"{predictor}: widest window should hurt WindowStart " \
+            f"({m_wide} <= {m_start0})"
+
+        # Claim 3: at the widest window, in-window proactive checkpointing
+        # beats the single window-start checkpoint.
+        m_pro = table.value("makespan", predictor=predictor,
+                            window=WINDOWS[-1], strategy="WindowProactive")
+        assert m_pro < m_wide, \
+            f"{predictor}: WindowProactive should beat WindowStart at " \
+            f"I={WINDOWS[-1]} ({m_pro} >= {m_wide})"
+        out[f"{predictor}_exact_days"] = m_exact / 86400.0
+        out[f"{predictor}_wide_start_days"] = m_wide / 86400.0
+        out[f"{predictor}_wide_proactive_days"] = m_pro / 86400.0
+    print("[window_sweep] claims OK: I=0 reproduces exact dates; "
+          "windows hurt; in-window checkpointing recovers part of it")
+    return out

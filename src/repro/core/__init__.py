@@ -13,9 +13,12 @@ Layers:
                  lanes advanced together as SoA NumPy state, bit-for-bit
                  vs simulator.py (optional jax backend in batch_jax.py).
   policies.py    the compared strategies incl. BestPeriod search.
+  windows.py     prediction *windows* (arXiv:1302.4558): waste formulas,
+                 optimal periods and strategies for the interval [t, t+I]
+                 prediction family (ignore / instant / within modes).
 """
 
-from . import batch, policies, prediction, simulator, traces, waste
+from . import batch, policies, prediction, simulator, traces, waste, windows
 from .batch import BatchResult, simulate_batch
 from .prediction import (PredictedPlatform, Predictor, beta_lim,
                          optimal_period_with_prediction, t_pred,
@@ -24,13 +27,18 @@ from .prediction import (PredictedPlatform, Predictor, beta_lim,
 from .simulator import SimResult, simulate
 from .traces import EventTrace, Exponential, UniformDist, Weibull, make_event_trace
 from .waste import Platform, platform_mtbf, t_daly, t_rfo, t_young, waste
+from .windows import (WindowPlan, beta_lim_window, optimal_window_plan,
+                      t_window_period, waste_window, window_strategy)
 
 __all__ = [
     "batch", "policies", "prediction", "simulator", "traces", "waste",
+    "windows",
     "BatchResult", "simulate_batch",
     "Platform", "Predictor", "PredictedPlatform", "EventTrace", "SimResult",
     "Exponential", "Weibull", "UniformDist",
     "platform_mtbf", "t_young", "t_daly", "t_rfo", "beta_lim",
     "optimal_period_with_prediction", "t_pred", "t_pred_asymptotic",
     "waste1", "waste2", "waste_with_prediction", "make_event_trace", "simulate",
+    "WindowPlan", "beta_lim_window", "optimal_window_plan", "t_window_period",
+    "waste_window", "window_strategy",
 ]

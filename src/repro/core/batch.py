@@ -24,7 +24,12 @@ for every supported candidate:
     stochastic one draws per-lane, preserving the scalar draw order);
   * exact and inexact prediction windows (uncertainty offsets are drawn
     from the lane generator at prediction-announcement time, exactly where
-    the scalar engine draws them).
+    the scalar engine draws them);
+  * prediction-window action policies (arXiv:1302.4558): per-event window
+    lengths from ``EventTrace.windows`` and per-candidate ``window_mode``
+    ("instant" / "within") with its in-window proactive period — the
+    "within" cadence runs as extra per-lane window state (win_end/win_rem)
+    inside the same lockstep schedule passes.
 
 An optional JAX backend (``backend="jax"``) runs the same lockstep loop as
 a single ``lax.while_loop`` over the lane arrays so banks can be dispatched
@@ -40,9 +45,9 @@ from typing import Sequence
 
 import numpy as np
 
-from .simulator import (_CKPT, _DOWN, _PROCKPT, _RECOVER, _WORK, AlwaysTrust,
-                        FixedProbabilityTrust, NeverTrust, SimResult,
-                        ThresholdTrust, TrustPolicy)
+from .simulator import (_CKPT, _DOWN, _PROCKPT, _RECOVER, _WORK, WINDOW_MODES,
+                        AlwaysTrust, FixedProbabilityTrust, NeverTrust,
+                        SimResult, ThresholdTrust, TrustPolicy)
 from .traces import FAULT_PRED, FAULT_UNPRED, EventTrace
 from .waste import Platform
 
@@ -52,10 +57,14 @@ __all__ = [
     "simulate_lanes",
     "supported_trust",
     "trust_code",
+    "window_mode_code",
 ]
 
 # Trust-policy codes for the vectorized decision step.
 _TRUST_NEVER, _TRUST_ALWAYS, _TRUST_THRESHOLD, _TRUST_FIXED_Q = range(4)
+
+# Window-mode codes (index into simulator.WINDOW_MODES).
+_WMODE_INSTANT, _WMODE_WITHIN = range(2)
 
 # Lane program counter: what happens when ``now`` reaches ``target``.
 _PC_POP = 0      # needs its next event popped (target is meaningless)
@@ -91,29 +100,42 @@ def trust_code(trust: TrustPolicy) -> tuple[int, float]:
 
 @dataclasses.dataclass(frozen=True)
 class _EventBank:
-    """Traces packed as a padded 2-D event tensor (one row per trace)."""
+    """Traces packed as a padded 2-D event tensor (one row per trace).
+
+    ``windows`` is the per-event prediction-window tensor, present iff any
+    trace carries :attr:`EventTrace.windows`; rows of window-less traces
+    hold the -1 sentinel meaning "fall back to the lane's inexact_window".
+    """
 
     times: np.ndarray   # (n_traces, max_events) float64, +inf padded
     kinds: np.ndarray   # (n_traces, max_events) int8, -1 padded
     n_events: np.ndarray  # (n_traces,) int64
+    windows: np.ndarray | None = None  # (n_traces, max_events) float64
 
 
 def _pack_bank(traces: Sequence[EventTrace], start: float) -> _EventBank:
-    shifted: list[tuple[np.ndarray, np.ndarray]] = []
+    shifted: list[tuple[np.ndarray, np.ndarray, np.ndarray | None]] = []
     for tr in traces:
         sel = tr.times >= start
         shifted.append((np.asarray(tr.times[sel] - start, dtype=np.float64),
-                        np.asarray(tr.kinds[sel], dtype=np.int8)))
+                        np.asarray(tr.kinds[sel], dtype=np.int8),
+                        None if tr.windows is None
+                        else np.asarray(tr.windows[sel], dtype=np.float64)))
     n = len(shifted)
-    width = max([t.size for t, _ in shifted], default=0)
+    width = max([t.size for t, _, _ in shifted], default=0)
     times = np.full((n, max(1, width)), np.inf, dtype=np.float64)
     kinds = np.full((n, max(1, width)), -1, dtype=np.int8)
     n_events = np.zeros(n, dtype=np.int64)
-    for i, (t, k) in enumerate(shifted):
+    windows: np.ndarray | None = None
+    if any(w is not None for _, _, w in shifted):
+        windows = np.full((n, max(1, width)), -1.0, dtype=np.float64)
+    for i, (t, k, w) in enumerate(shifted):
         times[i, :t.size] = t
         kinds[i, :k.size] = k
         n_events[i] = t.size
-    return _EventBank(times, kinds, n_events)
+        if windows is not None and w is not None:
+            windows[i, :w.size] = w
+    return _EventBank(times, kinds, n_events, windows)
 
 
 # ---------------------------------------------------------------------------
@@ -196,6 +218,10 @@ class _LaneState:
         self.pred_t = np.zeros(L, f8)
         self.pred_true = np.zeros(L, bool)
         self.pred_fault_date = np.zeros(L, f8)
+        self.pred_win = np.zeros(L, f8)
+        # Active prediction window ("within" mode), mirrors _Machine.
+        self.win_end = np.full(L, -np.inf, f8)
+        self.win_rem = np.full(L, np.inf, f8)
         # Deferred actual faults (true predictions): (time, seq) slots.
         self.def_time = np.full((L, 4), np.inf, f8)
         self.def_seq = np.full((L, 4), _BIG_SEQ, np.int64)
@@ -242,7 +268,8 @@ class _LaneState:
 
 
 def _complete_phases(st: _LaneState, lanes: np.ndarray, periods: np.ndarray,
-                     p: Platform, cp: float, time_base: float) -> None:
+                     p: Platform, cp: float, time_base: float,
+                     lane_wwp: np.ndarray) -> None:
     """Vectorized `_Machine._complete_phase` for the given lane indices
     (called with ``now`` already moved to ``phase_end``)."""
     ph = st.phase[lanes]
@@ -254,6 +281,8 @@ def _complete_phases(st: _LaneState, lanes: np.ndarray, periods: np.ndarray,
         st.saved[ck] = st.done[ck]
         fin = ck[st.saved[ck] >= time_base - 1e-9]
         st.finished[fin] = True
+        act = ck[st.now[ck] < st.win_end[ck]]
+        st.win_rem[act] = lane_wwp[act]
         _new_period(st, ck[st.saved[ck] < time_base - 1e-9], periods, p,
                     time_base)
 
@@ -265,6 +294,9 @@ def _complete_phases(st: _LaneState, lanes: np.ndarray, periods: np.ndarray,
         st.period_start[pk] = st.now[pk]
         st.phase[pk] = _WORK
         st.phase_end[pk] = np.inf
+        # In-window cadence restarts from every save.
+        act = pk[st.now[pk] < st.win_end[pk]]
+        st.win_rem[act] = lane_wwp[act]
 
     dn = lanes[ph == _DOWN]
     if dn.size:
@@ -308,6 +340,9 @@ def _apply_faults(st: _LaneState, lanes: np.ndarray, p: Platform,
     st.done[lanes] = st.saved[lanes]
     st.phase[lanes] = _DOWN
     st.phase_end[lanes] = t + p.d
+    # A fault ends any active prediction window.
+    st.win_end[lanes] = -np.inf
+    st.win_rem[lanes] = np.inf
 
 
 def _run_lanes(
@@ -321,12 +356,25 @@ def _run_lanes(
     lane_window: np.ndarray,
     lane_seed: np.ndarray,
     cp: float,
+    lane_wmode: np.ndarray | None = None,
+    lane_wperiod: np.ndarray | None = None,
 ) -> _LaneState:
     """Run all lanes to completion; returns the final lane state."""
     L = lane_trace.size
     if np.any(lane_period < platform.c):
         bad = float(lane_period[lane_period < platform.c][0])
         raise ValueError(f"period {bad} < checkpoint {platform.c}")
+    if lane_wmode is None:
+        lane_wmode = np.zeros(L, dtype=np.int8)
+    if lane_wperiod is None:
+        lane_wperiod = np.zeros(L, dtype=np.float64)
+    within = lane_wmode == _WMODE_WITHIN
+    if np.any(within & (lane_wperiod <= cp)):
+        bad = float(lane_wperiod[within & (lane_wperiod <= cp)][0])
+        raise ValueError(f"window_period {bad} <= C_p {cp}: no work fits "
+                         f"between in-window checkpoints")
+    # In-window work quantum per lane (only "within" lanes ever read it).
+    lane_wwp = np.where(within, lane_wperiod - cp, np.inf)
 
     st = _LaneState(L, lane_period, platform.c, time_base)
     cursor = np.zeros(L, dtype=np.int64)
@@ -339,6 +387,11 @@ def _run_lanes(
     # Lane generators, created lazily: only inexact-window and
     # FixedProbability lanes ever draw.
     needs_rng = (lane_window > 0.0) | (lane_trust_kind == _TRUST_FIXED_Q)
+    if bank.windows is not None:
+        # Traces with window-bearing prediction events draw the fault's
+        # in-window offset at announcement time.
+        trace_has_win = (bank.windows > 0.0).any(axis=1)
+        needs_rng = needs_rng | trace_has_win[lane_trace]
     rngs = [np.random.default_rng(int(lane_seed[i])) if needs_rng[i] else None
             for i in range(L)]
 
@@ -377,10 +430,12 @@ def _run_lanes(
             st.def_seq[d_idx, df_slot[take_def]] = _BIG_SEQ
 
             # Fault events: deferred pops and unpredicted trace faults.
+            # Only trace faults count here — deferred faults of true
+            # predictions were already counted at announcement.
             is_fault = take_def | (take_trace & (k_tr == FAULT_UNPRED))
             f_idx = idx[is_fault]
             if f_idx.size:
-                st.n_faults[f_idx] += 1
+                st.n_faults[idx[take_trace & (k_tr == FAULT_UNPRED)]] += 1
                 st.target[f_idx] = np.where(take_def[is_fault],
                                             df_t[is_fault], t_tr[is_fault])
                 st.pc[f_idx] = _PC_FAULT
@@ -392,12 +447,21 @@ def _run_lanes(
                 st.n_predictions[p_idx] += 1
                 t = t_tr[is_pred]
                 is_true = k_tr[is_pred] == FAULT_PRED
+                st.n_faults[p_idx[is_true]] += 1
+                # Per-event window, falling back to the lane inexact_window
+                # (the scalar simulate() precedence).
+                if bank.windows is not None:
+                    w_ev = np.where(have, bank.windows[rows, col],
+                                    -1.0)[is_pred]
+                    w_eff = np.where(w_ev < 0.0, lane_window[p_idx], w_ev)
+                else:
+                    w_eff = lane_window[p_idx]
                 fault_date = t.copy()
-                draw = is_true & (lane_window[p_idx] > 0.0)
+                draw = is_true & (w_eff > 0.0)
                 for j in np.nonzero(draw)[0]:
                     lane = p_idx[j]
                     fault_date[j] = t[j] + float(
-                        rngs[lane].uniform(0.0, lane_window[lane]))
+                        rngs[lane].uniform(0.0, w_eff[j]))
                 ckpt_start = t - cp
                 honour = ckpt_start >= st.now[p_idx]
 
@@ -407,13 +471,13 @@ def _run_lanes(
                 st.pred_t[h_idx] = t[honour]
                 st.pred_true[h_idx] = is_true[honour]
                 st.pred_fault_date[h_idx] = fault_date[honour]
+                st.pred_win[h_idx] = w_eff[honour]
 
                 # Not enough room for C_p: ignored by necessity; a true
                 # prediction's fault still strikes.
                 n_idx = p_idx[~honour]
                 st.n_ignored[n_idx] += 1
                 late_true = ~honour & is_true
-                st.n_faults[p_idx[late_true]] += 1
                 st.push_deferred(p_idx[late_true], fault_date[late_true])
 
         # -- 2. arrivals: lanes whose schedule reached the event date -------
@@ -446,11 +510,15 @@ def _run_lanes(
             st.phase_end[a_idx] = st.pred_t[a_idx]
             st.n_trusted[a_idx] += 1
             st.n_trusted_true[a_idx[st.pred_true[a_idx]]] += 1
+            # Arm the prediction window on trusting "within" lanes: keep
+            # proactive-checkpointing until pred_t + window.
+            arm = a_idx[(lane_wmode[a_idx] == _WMODE_WITHIN)
+                        & (st.pred_win[a_idx] > 0.0)]
+            st.win_end[arm] = st.pred_t[arm] + st.pred_win[arm]
 
             st.n_ignored[lanes[~working]] += 1
 
             push = lanes[st.pred_true[lanes]]
-            st.n_faults[push] += 1
             st.push_deferred(push, st.pred_fault_date[push])
             st.pc[lanes] = _PC_POP
             st.target[lanes] = -np.inf
@@ -476,13 +544,36 @@ def _run_lanes(
 
             ww = adv[is_work & ~wrem0]
             if ww.size:
+                # Inside an active prediction window the chunk also stops at
+                # the in-window checkpoint cadence and the window end; the
+                # min over the same operands keeps inactive lanes bit-exact.
+                in_win = st.now[ww] < st.win_end[ww]
                 dt = np.minimum(st.w_rem[ww], st.target[ww] - st.now[ww])
+                if in_win.any():
+                    cap = np.where(in_win,
+                                   np.minimum(st.win_rem[ww],
+                                              st.win_end[ww] - st.now[ww]),
+                                   np.inf)
+                    dt = np.minimum(dt, cap)
                 st.now[ww] += dt
                 st.done[ww] += dt
                 st.w_rem[ww] -= dt
+                st.win_rem[ww[in_win]] -= dt[in_win]
                 fin_work = ww[st.w_rem[ww] <= 0.0]
                 st.phase[fin_work] = _CKPT
                 st.phase_end[fin_work] = st.now[fin_work] + platform.c
+                if in_win.any():
+                    live = (st.w_rem[ww] > 0.0) & in_win
+                    # In-window proactive checkpoint due.
+                    pro = ww[live & (st.win_rem[ww] <= 0.0)
+                             & (st.now[ww] < st.win_end[ww])]
+                    st.phase[pro] = _PROCKPT
+                    st.phase_end[pro] = st.now[pro] + cp
+                    # Window elapsed without a fault: back to the periodic
+                    # schedule.
+                    closed = ww[live & (st.now[ww] >= st.win_end[ww])]
+                    st.win_end[closed] = -np.inf
+                    st.win_rem[closed] = np.inf
 
             in_phase = adv[~is_work]              # just-started ckpts wait
             if in_phase.size:
@@ -490,7 +581,7 @@ def _run_lanes(
                 lanes = in_phase[complete]
                 st.now[lanes] = st.phase_end[lanes]
                 _complete_phases(st, lanes, lane_period, platform, cp,
-                                 time_base)
+                                 time_base, lane_wwp)
                 stall = in_phase[~complete]
                 st.now[stall] = st.target[stall]
 
@@ -503,9 +594,18 @@ def _run_lanes(
 # Public API
 # ---------------------------------------------------------------------------
 
+def window_mode_code(mode: str) -> int:
+    """Engine code of a window action mode name."""
+    try:
+        return WINDOW_MODES.index(mode)
+    except ValueError:
+        raise ValueError(f"unknown window_mode {mode!r} "
+                         f"(expected one of {WINDOW_MODES})") from None
+
+
 def _as_candidate_arrays(
-    periods, trust, inexact_window, n_cand: int,
-) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    periods, trust, inexact_window, window_mode, window_period, n_cand: int,
+) -> tuple[np.ndarray, ...]:
     period_arr = np.asarray(periods, dtype=np.float64).reshape(n_cand)
     if trust is None or isinstance(trust, TrustPolicy):
         trust_seq = [trust or NeverTrust()] * n_cand
@@ -519,7 +619,13 @@ def _as_candidate_arrays(
     param_arr = np.array([q for _, q in codes], dtype=np.float64)
     window_arr = np.broadcast_to(
         np.asarray(inexact_window, dtype=np.float64), (n_cand,)).copy()
-    return period_arr, kind_arr, param_arr, window_arr
+    if isinstance(window_mode, str):
+        window_mode = [window_mode] * n_cand
+    wmode_arr = np.array([window_mode_code(m) for m in window_mode],
+                         dtype=np.int8).reshape(n_cand)
+    wperiod_arr = np.broadcast_to(
+        np.asarray(window_period, dtype=np.float64), (n_cand,)).copy()
+    return period_arr, kind_arr, param_arr, window_arr, wmode_arr, wperiod_arr
 
 
 def simulate_lanes(
@@ -533,6 +639,8 @@ def simulate_lanes(
     trusts: Sequence[TrustPolicy],
     windows: Sequence[float],
     seeds: Sequence[int],
+    window_modes: Sequence[str] | None = None,
+    window_periods: Sequence[float] | None = None,
     start: float = 0.0,
 ) -> np.ndarray:
     """Simulate an explicit list of (trace, candidate) lanes; returns the
@@ -543,6 +651,7 @@ def simulate_lanes(
     grid — e.g. when a result cache already holds some pairs.  Lane ``j``
     is bit-for-bit ``simulate(traces[trace_indices[j]], ..., periods[j],
     trust=trusts[j], inexact_window=windows[j],
+    window_mode=window_modes[j], window_period=window_periods[j],
     rng=np.random.default_rng(seeds[j]))``.
     """
     lane_trace = np.asarray(trace_indices, dtype=np.int64)
@@ -552,14 +661,23 @@ def simulate_lanes(
     lane_param = np.array([q for _, q in codes], dtype=np.float64)
     lane_window = np.asarray(windows, dtype=np.float64)
     lane_seed = np.asarray(seeds, dtype=np.int64)
+    lane_wmode = (np.zeros(lane_trace.size, dtype=np.int8)
+                  if window_modes is None else
+                  np.array([window_mode_code(m) for m in window_modes],
+                           dtype=np.int8))
+    lane_wperiod = (np.zeros(lane_trace.size, dtype=np.float64)
+                    if window_periods is None else
+                    np.asarray(window_periods, dtype=np.float64))
     if not (lane_trace.size == lane_period.size == lane_kind.size
-            == lane_window.size == lane_seed.size):
+            == lane_window.size == lane_seed.size == lane_wmode.size
+            == lane_wperiod.size):
         raise ValueError("lane array lengths differ")
     if lane_trace.size == 0:
         return np.empty(0, dtype=np.float64)
     bank = _pack_bank(traces, start)
     st = _run_lanes(bank, platform, time_base, lane_trace, lane_period,
-                    lane_kind, lane_param, lane_window, lane_seed, cp)
+                    lane_kind, lane_param, lane_window, lane_seed, cp,
+                    lane_wmode, lane_wperiod)
     return st.now
 
 
@@ -572,6 +690,8 @@ def simulate_batch(
     cp: float | None = None,
     trust: TrustPolicy | Sequence[TrustPolicy] | None = None,
     inexact_window: float | Sequence[float] = 0.0,
+    window_mode: str | Sequence[str] = "instant",
+    window_period: float | Sequence[float] = 0.0,
     start: float = 0.0,
     trace_seeds: Sequence[int] | int | None = None,
     backend: str = "numpy",
@@ -587,7 +707,12 @@ def simulate_batch(
       trust: one policy for all candidates, or one per candidate.  Must be
         Never/Always/Threshold/FixedProbability — callable periods or other
         policies need the scalar engine.
-      inexact_window: scalar or per-candidate uncertainty window.
+      inexact_window: scalar or per-candidate uncertainty window (fallback
+        when the traces carry no per-event window lengths).
+      window_mode: scalar or per-candidate window action mode, "instant"
+        or "within" (see :func:`repro.core.simulator.simulate`).
+      window_period: scalar or per-candidate in-window proactive period
+        T_p (> C_p) for "within" candidates.
       start: job start offset into the traces (paper: one year).
       trace_seeds: per-trace RNG seeds; lane (c, t) draws from a fresh
         ``default_rng(trace_seeds[t])`` exactly like the scalar engine does
@@ -605,8 +730,9 @@ def simulate_batch(
     scalar_period = np.isscalar(periods) or (
         isinstance(periods, np.ndarray) and periods.ndim == 0)
     n_cand = 1 if scalar_period else len(periods)
-    period_arr, kind_arr, param_arr, window_arr = _as_candidate_arrays(
-        periods, trust, inexact_window, n_cand)
+    (period_arr, kind_arr, param_arr, window_arr, wmode_arr,
+     wperiod_arr) = _as_candidate_arrays(
+        periods, trust, inexact_window, window_mode, window_period, n_cand)
 
     n_traces = len(traces)
     if trace_seeds is None:
@@ -623,9 +749,16 @@ def simulate_batch(
     lane_kind = np.repeat(kind_arr, n_traces)
     lane_param = np.repeat(param_arr, n_traces)
     lane_window = np.repeat(window_arr, n_traces)
+    lane_wmode = np.repeat(wmode_arr, n_traces)
+    lane_wperiod = np.repeat(wperiod_arr, n_traces)
     lane_seed = np.tile(seeds, n_cand)
 
     if backend == "jax":
+        if np.any(wmode_arr == _WMODE_WITHIN) or bank.windows is not None:
+            raise ValueError(
+                "backend='jax' supports exact-date predictions only "
+                "(no window-bearing traces or 'within' window modes); "
+                "use backend='numpy'")
         from .batch_jax import run_lanes_jax
         out = run_lanes_jax(bank, platform, time_base, lane_trace,
                             lane_period, lane_kind, lane_param, lane_window,
@@ -649,7 +782,8 @@ def simulate_batch(
         raise ValueError(f"unknown backend {backend!r}")
 
     st = _run_lanes(bank, platform, time_base, lane_trace, lane_period,
-                    lane_kind, lane_param, lane_window, lane_seed, cp)
+                    lane_kind, lane_param, lane_window, lane_seed, cp,
+                    lane_wmode, lane_wperiod)
     shape = (n_cand, n_traces)
     return BatchResult(
         makespan=st.now.reshape(shape), time_base=time_base,

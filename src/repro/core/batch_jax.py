@@ -112,14 +112,17 @@ def run_lanes_jax(bank, platform: Platform, time_base: float,
         def_time = jnp.where(clear, jnp.inf, s["def_time"])
         def_seq = jnp.where(clear, _BIG_SEQ, s["def_seq"])
 
+        # Deferred pops were already counted at announcement; only trace
+        # faults count here (mirrors the scalar engine's counting).
         is_fault = take_def | (take_trace & (k_tr == FAULT_UNPRED))
-        n_faults = s["n_faults"] + is_fault
+        n_faults = s["n_faults"] + (take_trace & (k_tr == FAULT_UNPRED))
         target = jnp.where(is_fault, jnp.where(take_def, min_t, t_tr), target)
         pc = jnp.where(is_fault, _PC_FAULT, pc)
 
         is_pred = take_trace & (k_tr != FAULT_UNPRED)
         n_predictions = s["n_predictions"] + is_pred
         is_true = is_pred & (k_tr == FAULT_PRED)
+        n_faults = n_faults + is_true      # counted at announcement
         ckpt_start = t_tr - cp
         honour = is_pred & (ckpt_start >= s["now"])
         pc = jnp.where(honour, _PC_PRED, pc)
@@ -129,7 +132,6 @@ def run_lanes_jax(bank, platform: Platform, time_base: float,
         ignored = is_pred & ~honour
         n_ignored = s["n_ignored"] + ignored
         push = ignored & is_true
-        n_faults = n_faults + push
         def_time, def_seq, next_seq, overflow = push_deferred(
             def_time, def_seq, s["next_seq"], s["overflow"], push, t_tr)
 
@@ -168,7 +170,6 @@ def run_lanes_jax(bank, platform: Platform, time_base: float,
         n_trusted_true = s["n_trusted_true"] + (trusted & pred_true)
         n_ignored = n_ignored + (arr_p & ~working)
         push2 = arr_p & pred_true
-        n_faults = n_faults + push2
         def_time, def_seq, next_seq, overflow = push_deferred(
             def_time, def_seq, next_seq, overflow, push2, pred_t)
         pc = jnp.where(arr_p, _PC_POP, pc)

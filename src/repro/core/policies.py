@@ -45,12 +45,19 @@ __all__ = [
 
 @dataclasses.dataclass(frozen=True)
 class Strategy:
-    """A named (period, trust policy) pair, ready to hand to the simulator."""
+    """A named (period, trust policy) pair, ready to hand to the simulator.
+
+    ``window_mode`` / ``window_period`` select the prediction-window action
+    policy (arXiv:1302.4558; see :func:`repro.core.simulator.simulate`):
+    the defaults reproduce the exact-date behaviour.
+    """
 
     name: str
     period: float
     trust: TrustPolicy
     inexact_window: float = 0.0  # simulation-side date uncertainty
+    window_mode: str = "instant"
+    window_period: float = 0.0   # in-window proactive period ("within")
 
     def with_period(self, period: float) -> "Strategy":
         return dataclasses.replace(self, period=period)

@@ -179,7 +179,14 @@ def waste_with_prediction(t: float, pp: PredictedPlatform) -> float:
 
 def t_nopred(pp: PredictedPlatform, alpha: float = ALPHA_CAP,
              enforce_cap: bool = False) -> float:
-    """Minimizer of WASTE1 on [C, C_p/p] (Eq. 16): clamp T_RFO to the interval."""
+    """Minimizer of WASTE1 on [C, C_p/p] (Eq. 16): clamp T_RFO to the interval.
+
+    When ``beta_lim(pp) < C`` the validity interval is empty — every legal
+    period exceeds the trust breakpoint, so the WASTE1 branch does not exist
+    and :func:`optimal_period_with_prediction` skips it.  The clamp below
+    still returns C in that regime (callers that only need a feasible period
+    keep working), but WASTE1 evaluated there is out of domain.
+    """
     plat = pp.platform
     hi = beta_lim(pp)
     t = t_rfo(plat)
@@ -218,11 +225,17 @@ def optimal_period_with_prediction(pp: PredictedPlatform) -> tuple[float, float,
     Returns (T*, waste(T*), use_predictions) where ``use_predictions`` tells
     whether the optimal regime is the WASTE2 branch (act on predictions past
     beta_lim) or the WASTE1 branch (ignore the predictor entirely).
+
+    When ``beta_lim(pp) < C`` the WASTE1 validity interval [C, C_p/p] is
+    empty — any legal period sits past the breakpoint, so the policy always
+    acts and only the WASTE2 branch exists.
     """
-    tn = t_nopred(pp)
     tp = t_pred(pp)
-    w1 = waste1(tn, pp)
     w2 = waste2(tp, pp)
+    if beta_lim(pp) < pp.platform.c:
+        return tp, w2, True
+    tn = t_nopred(pp)
+    w1 = waste1(tn, pp)
     if w1 <= w2:
         return tn, w1, False
     return tp, w2, True

@@ -23,6 +23,15 @@ the paper:
   * InexactPrediction (§5.1): a true prediction announced for date ``e``
     materializes at ``e + U(0, window)``; the proactive checkpoint still
     completes at ``e``, so the work done in [e, actual fault) is lost.
+  * Prediction *windows* (companion paper, arXiv:1302.4558): a prediction
+    announces the interval [e, e+I].  The per-event window I comes from
+    ``EventTrace.windows`` when present, else from the ``inexact_window``
+    argument.  ``window_mode`` selects what a trusted prediction does with
+    the window: ``"instant"`` (default) takes the single proactive
+    checkpoint completing at the window start — today's InexactPrediction
+    mechanics — while ``"within"`` additionally keeps taking proactive
+    checkpoints of length C_p every ``window_period`` seconds while the
+    window is open, bounding the work at risk to W_p = window_period - C_p.
 
 The engine is a small phase machine (WORK / CKPT / PROCKPT / DOWN / RECOVER)
 advanced event by event; between events it follows the periodic schedule.
@@ -41,6 +50,7 @@ from .traces import FALSE_PRED, FAULT_PRED, FAULT_UNPRED, EventTrace
 from .waste import Platform
 
 __all__ = [
+    "WINDOW_MODES",
     "TrustPolicy",
     "NeverTrust",
     "AlwaysTrust",
@@ -57,6 +67,14 @@ _WORK, _CKPT, _PROCKPT, _DOWN, _RECOVER = range(5)
 # Event kinds inside the simulator queue (trace kinds + deferred faults).
 _EV_FAULT = 0        # an actual fault strikes now
 _EV_PREDICTION = 1   # a prediction (true or false) is announced for date t
+
+# _EV_FAULT payloads: trace faults are counted at pop; deferred faults of
+# true predictions were already counted at announcement.
+_FAULT_FROM_TRACE = 0
+_FAULT_DEFERRED = 1
+
+# Window action modes (companion paper, arXiv:1302.4558).
+WINDOW_MODES = ("instant", "within")
 
 
 # ---------------------------------------------------------------------------
@@ -155,6 +173,11 @@ class _Machine:
         self.period_start = 0.0  # completion time of the last checkpoint/recovery
         self.w_rem = self._fresh_work()
         self.finished = False
+        # Active prediction window ("within" mode): while now < win_end the
+        # machine takes a proactive checkpoint every win_wp seconds of work.
+        self.win_end = -math.inf
+        self.win_rem = math.inf  # work left until the next in-window prockpt
+        self.win_wp = math.inf   # in-window work quantum (window_period - cp)
 
     def _fresh_work(self) -> float:
         return min(self.work_per_period, self.time_base - self.saved)
@@ -168,12 +191,24 @@ class _Machine:
                 if self.w_rem <= 0.0:
                     self._start_ckpt()
                     continue
-                dt = min(self.w_rem, target - self.now)
+                in_win = self.now < self.win_end
+                if in_win:
+                    dt = min(self.w_rem, self.win_rem,
+                             self.win_end - self.now, target - self.now)
+                else:
+                    dt = min(self.w_rem, target - self.now)
                 self.now += dt
                 self.done += dt
                 self.w_rem -= dt
+                if in_win:
+                    self.win_rem -= dt
                 if self.w_rem <= 0.0:
                     self._start_ckpt()
+                elif in_win:
+                    if self.win_rem <= 0.0 and self.now < self.win_end:
+                        self._start_prockpt()
+                    elif self.now >= self.win_end:
+                        self._close_window()
             else:
                 if self.phase_end <= target:
                     self.now = self.phase_end
@@ -188,6 +223,14 @@ class _Machine:
         self.phase = _CKPT
         self.phase_end = self.now + self.p.c
 
+    def _start_prockpt(self) -> None:
+        self.phase = _PROCKPT
+        self.phase_end = self.now + self.cp
+
+    def _close_window(self) -> None:
+        self.win_end = -math.inf
+        self.win_rem = math.inf
+
     def _complete_phase(self) -> None:
         if self.phase == _CKPT:
             self.res.n_periodic_ckpts += 1
@@ -196,6 +239,8 @@ class _Machine:
             if self.saved >= self.time_base - 1e-9:
                 self.finished = True
                 return
+            if self.now < self.win_end:
+                self.win_rem = self.win_wp
             self._new_period()
         elif self.phase == _PROCKPT:
             self.res.time_prockpt += self.cp
@@ -205,6 +250,9 @@ class _Machine:
             self.period_start = self.now
             self.phase = _WORK
             self.phase_end = math.inf
+            # In-window cadence restarts from every save.
+            if self.now < self.win_end:
+                self.win_rem = self.win_wp
         elif self.phase == _DOWN:
             self.res.time_down += self.p.d
             self.phase = _RECOVER
@@ -252,6 +300,8 @@ class _Machine:
         # Restart (or start) downtime; a fault during DOWN/RECOVER restarts D.
         self.phase = _DOWN
         self.phase_end = t + self.p.d
+        # A fault ends any active prediction window.
+        self._close_window()
 
     def try_proactive(self, pred_date: float) -> bool:
         """Attempt a proactive checkpoint completing exactly at ``pred_date``.
@@ -275,6 +325,8 @@ def simulate(
     cp: float | None = None,
     trust: TrustPolicy | None = None,
     inexact_window: float = 0.0,
+    window_mode: str = "instant",
+    window_period: float = 0.0,
     start: float = 0.0,
     rng: np.random.Generator | None = None,
 ) -> SimResult:
@@ -288,13 +340,29 @@ def simulate(
       cp: proactive checkpoint duration C_p (defaults to C).
       trust: trust policy for predictions (default: never trust).
       inexact_window: width of the uncertainty window for true predictions
-        (paper's InexactPrediction uses 2C); 0 = exact dates.
+        (paper's InexactPrediction uses 2C); 0 = exact dates.  Used as the
+        fallback when the trace carries no per-event window lengths
+        (:attr:`EventTrace.windows` takes precedence).
+      window_mode: what a trusted prediction does with its window
+        (arXiv:1302.4558): ``"instant"`` takes only the proactive
+        checkpoint completing at the window start; ``"within"``
+        additionally checkpoints every ``window_period`` seconds while the
+        window is open.
+      window_period: in-window proactive period T_p (> C_p); required for
+        ``window_mode="within"``.
       start: job start offset into the trace (paper: one year).
       rng: used for the trust policy randomness and inexact fault dates.
     """
     cp = platform.c if cp is None else cp
     trust = trust or NeverTrust()
     rng = rng or np.random.default_rng(0)
+    if window_mode not in WINDOW_MODES:
+        raise ValueError(f"unknown window_mode {window_mode!r} "
+                         f"(expected one of {WINDOW_MODES})")
+    within = window_mode == "within"
+    if within and window_period <= cp:
+        raise ValueError(f"window_period {window_period} <= C_p {cp}: "
+                         f"no work fits between in-window checkpoints")
 
     res = SimResult(makespan=0.0, time_base=time_base)
     m = _Machine(platform, cp, period, time_base, res)
@@ -303,25 +371,29 @@ def simulate(
     sel = trace.times >= start
     times = trace.times[sel] - start
     kinds = trace.kinds[sel]
+    wins = trace.windows[sel] if trace.windows is not None else None
 
-    # Event queue: (time, seq, ev_kind, payload). Predictions enter at their
-    # *predicted date* (the lead time is assumed >= C_p, §2.2); deferred
-    # actual faults (inexact mode / untrusted true predictions) are pushed
-    # back as _EV_FAULT.
-    queue: list[tuple[float, int, int, int]] = []
+    # Event queue: (time, seq, ev_kind, payload, window). Predictions enter
+    # at their *predicted date* (the lead time is assumed >= C_p, §2.2);
+    # deferred actual faults (inexact mode / untrusted true predictions) are
+    # pushed back as _EV_FAULT.  window < 0 means "no per-event window":
+    # fall back to the inexact_window argument.
+    queue: list[tuple[float, int, int, int, float]] = []
     seq = 0
-    for t, k in zip(times, kinds):
+    for i, (t, k) in enumerate(zip(times, kinds)):
+        w = -1.0 if wins is None else float(wins[i])
         if k == FAULT_UNPRED:
-            queue.append((float(t), seq, _EV_FAULT, 0))
+            queue.append((float(t), seq, _EV_FAULT, _FAULT_FROM_TRACE, 0.0))
         else:
-            queue.append((float(t), seq, _EV_PREDICTION, int(k)))
+            queue.append((float(t), seq, _EV_PREDICTION, int(k), w))
         seq += 1
     heapq.heapify(queue)
 
     while queue and not m.finished:
-        t, _, ev, payload = heapq.heappop(queue)
+        t, _, ev, payload, w = heapq.heappop(queue)
         if ev == _EV_FAULT:
-            res.n_faults += 1
+            if payload == _FAULT_FROM_TRACE:
+                res.n_faults += 1
             m.advance_to(t)
             if m.finished:
                 break
@@ -331,9 +403,15 @@ def simulate(
         # A prediction announced for date t (true iff payload == FAULT_PRED).
         res.n_predictions += 1
         is_true = payload == FAULT_PRED
+        w_i = inexact_window if w < 0.0 else w
         fault_date = t
-        if is_true and inexact_window > 0.0:
-            fault_date = t + float(rng.uniform(0.0, inexact_window))
+        if is_true:
+            # Counted at announcement — consistent with the _EV_FAULT
+            # handler, which counts before advancing — so a job completing
+            # during the pre-checkpoint advance still tallies the fault.
+            res.n_faults += 1
+            if w_i > 0.0:
+                fault_date = t + float(rng.uniform(0.0, w_i))
 
         # Advance to the latest proactive-checkpoint start time.
         ckpt_start = t - cp
@@ -350,6 +428,12 @@ def simulate(
                         res.n_trusted += 1
                         if is_true:
                             res.n_trusted_true += 1
+                        if within and w_i > 0.0:
+                            # Arm the window: once the initial proactive
+                            # checkpoint completes at t, keep checkpointing
+                            # every window_period seconds until t + I.
+                            m.win_end = t + w_i
+                            m.win_wp = window_period - cp
             else:
                 res.n_ignored_by_necessity += 1
         else:
@@ -358,8 +442,8 @@ def simulate(
         if is_true:
             # The actual fault still strikes (at fault_date), whether or not
             # we checkpointed proactively.
-            res.n_faults += 1
-            heapq.heappush(queue, (fault_date, seq, _EV_FAULT, 0))
+            heapq.heappush(queue, (fault_date, seq, _EV_FAULT,
+                                   _FAULT_DEFERRED, 0.0))
             seq += 1
 
     m.run_to_completion()

@@ -13,6 +13,13 @@ Event encoding used throughout: structured arrays (time, kind) with kinds
   FAULT_PRED    actual fault, predicted (prediction date == fault date; the
                 simulator adds the uncertainty window for InexactPrediction)
   FALSE_PRED    prediction that does not materialize
+
+Prediction *windows* (companion paper, arXiv:1302.4558): with ``window=I``
+each prediction event additionally carries the announced interval length I
+(``EventTrace.windows``) — the predictor promises the fault anywhere in
+[t, t+I], and the simulator draws the materialization date from the lane
+RNG.  ``window=0`` leaves ``windows`` unset, reproducing exact-date traces
+bit-for-bit.
 """
 
 from __future__ import annotations
@@ -262,15 +269,24 @@ def superposed_trace_bank(dist_ind: Distribution, n: int, horizon: float,
 
 @dataclasses.dataclass(frozen=True)
 class EventTrace:
-    """Merged, time-sorted platform event stream."""
+    """Merged, time-sorted platform event stream.
+
+    ``windows`` (optional) carries the announced prediction-window length I
+    per event: a FAULT_PRED / FALSE_PRED event at time t promises the fault
+    in [t, t+I].  ``None`` means exact-date predictions (the simulator's
+    ``inexact_window`` argument then acts as the per-run fallback width).
+    """
 
     times: np.ndarray  # float64, ascending
     kinds: np.ndarray  # int8, FAULT_UNPRED / FAULT_PRED / FALSE_PRED
     horizon: float
+    windows: np.ndarray | None = None  # float64 per-event window length
 
     def __post_init__(self) -> None:
         if self.times.shape != self.kinds.shape:
             raise ValueError("times/kinds shape mismatch")
+        if self.windows is not None and self.windows.shape != self.times.shape:
+            raise ValueError("times/windows shape mismatch")
 
     @property
     def fault_times(self) -> np.ndarray:
@@ -295,6 +311,7 @@ def make_event_trace(
     *,
     false_pred_dist: Distribution | None = None,
     n_processors: int | None = None,
+    window: float = 0.0,
 ) -> EventTrace:
     """Build the merged event trace for one simulated instance (paper §5.1).
 
@@ -305,6 +322,11 @@ def make_event_trace(
 
     False predictions follow ``false_pred_dist`` (default: same family as
     the fault distribution, per §5.2) rescaled to mean p*mu/(r*(1-p)).
+
+    ``window > 0`` stamps every prediction event with the announced window
+    length I (arXiv:1302.4558): the fault materializes in [t, t+I], the
+    offset being drawn by the simulator.  ``window=0`` produces exact-date
+    traces identical to before.
     """
     if n_processors:
         faults = superposed_trace(fault_dist.rescaled(mu * n_processors),
@@ -322,16 +344,23 @@ def make_event_trace(
     else:
         false_preds = np.empty(0, dtype=np.float64)
 
-    return _merge_events(faults, kinds, false_preds, horizon)
+    return _merge_events(faults, kinds, false_preds, horizon, window=window)
 
 
 def _merge_events(faults: np.ndarray, kinds: np.ndarray,
-                  false_preds: np.ndarray, horizon: float) -> EventTrace:
+                  false_preds: np.ndarray, horizon: float,
+                  window: float = 0.0) -> EventTrace:
     times = np.concatenate([faults, false_preds])
     all_kinds = np.concatenate(
         [kinds, np.full(false_preds.size, FALSE_PRED, dtype=np.int8)])
     order = np.argsort(times, kind="stable")
-    return EventTrace(times[order], all_kinds[order], horizon)
+    times, all_kinds = times[order], all_kinds[order]
+    windows = None
+    if window > 0.0:
+        # Prediction events (true and false) announce [t, t+I]; plain
+        # faults carry no window.
+        windows = np.where(all_kinds == FAULT_UNPRED, 0.0, float(window))
+    return EventTrace(times, all_kinds, horizon, windows=windows)
 
 
 def make_event_trace_bank(
@@ -345,6 +374,7 @@ def make_event_trace_bank(
     false_pred_dist: Distribution | None = None,
     n_processors: int | None = None,
     n_traces: int = 1,
+    window: float = 0.0,
 ) -> list[EventTrace]:
     """A whole bank of merged event traces sampled from one generator.
 
@@ -375,7 +405,7 @@ def make_event_trace_bank(
     else:
         false_bank = [np.empty(0, dtype=np.float64)] * n_traces
 
-    return [_merge_events(f, k, fp, horizon)
+    return [_merge_events(f, k, fp, horizon, window=window)
             for f, k, fp in zip(fault_bank, kind_bank, false_bank)]
 
 

@@ -208,6 +208,42 @@ def _simple_policy(scenario: ScenarioSpec,
     return policies.simple_policy(scenario.pp, q=q)
 
 
+# -- prediction-window strategies (arXiv:1302.4558; core/windows.py) --------
+
+def _scenario_window(scenario: ScenarioSpec, window: float | None) -> float:
+    return scenario.window if window is None else float(window)
+
+
+@register_strategy("window_ignore")
+def _window_ignore(scenario: ScenarioSpec,
+                   window: float | None = None) -> policies.Strategy:
+    """Ignore window predictions entirely (the RFO baseline on the window
+    scenario; faults still materialize inside their windows)."""
+    from repro.core.windows import window_strategy
+    return window_strategy(scenario.pp, _scenario_window(scenario, window),
+                           mode="ignore")
+
+
+@register_strategy("window_start")
+def _window_start(scenario: ScenarioSpec,
+                  window: float | None = None) -> policies.Strategy:
+    """One proactive checkpoint completing at the window start (the
+    'instant' reduction of a window prediction)."""
+    from repro.core.windows import window_strategy
+    return window_strategy(scenario.pp, _scenario_window(scenario, window),
+                           mode="instant")
+
+
+@register_strategy("window_proactive")
+def _window_proactive(scenario: ScenarioSpec, window: float | None = None,
+                      window_period: float | None = None) -> policies.Strategy:
+    """Periodic proactive checkpointing inside the window (period T_p*, or
+    an explicit ``window_period``), with the window trust breakpoint."""
+    from repro.core.windows import window_strategy
+    return window_strategy(scenario.pp, _scenario_window(scenario, window),
+                           mode="within", window_period=window_period)
+
+
 @register_strategy("fixed_period")
 def _fixed_period(scenario: ScenarioSpec, period: float = 0.0,
                   trust_threshold: float | None = None) -> policies.Strategy:

@@ -86,7 +86,8 @@ _MIN_PARALLEL_SIMS = 16
 # the *spec* content hash only — it cannot see code changes.  Bump this
 # whenever simulator mechanics, trace generation or runner seeding change
 # the makespans a spec produces, or stale pre-change results will be served.
-_EVAL_CACHE_VERSION = 1
+# v2: candidate keys grew the window_mode/window_period axis (PR 3).
+_EVAL_CACHE_VERSION = 2
 
 
 def _env_flag(name: str) -> bool:
@@ -151,18 +152,19 @@ def _candidate_key(strategy: Strategy) -> tuple:
     period = strategy.period
     if callable(period) and not isinstance(period, collections.abc.Hashable):
         period = _IdKey(period)
-    return (period, _trust_key(strategy.trust), strategy.inexact_window)
+    return (period, _trust_key(strategy.trust), strategy.inexact_window,
+            strategy.window_mode, strategy.window_period)
 
 
 def _persistable_key(key: tuple) -> str | None:
     """Canonical JSON form of a candidate key, or None if the candidate has
     no value semantics (callable period, opaque trust policy)."""
-    period, trust, window = key
+    period, trust, window, wmode, wperiod = key
     if not isinstance(period, (int, float)):
         return None
     if any(isinstance(part, _IdKey) for part in trust):
         return None
-    return json.dumps([period, list(trust), window])
+    return json.dumps([period, list(trust), window, wmode, wperiod])
 
 
 def default_cache_dir() -> Path:
@@ -208,8 +210,8 @@ class EvalCache:
 
     @staticmethod
     def _decode_key(ckey_str: str) -> tuple:
-        period, trust, window = json.loads(ckey_str)
-        return (period, tuple(trust), window)
+        period, trust, window, wmode, wperiod = json.loads(ckey_str)
+        return (period, tuple(trust), window, wmode, wperiod)
 
     def _read_store(self) -> dict:
         """The on-disk makespan map; any unreadable or wrong-shape file
@@ -326,7 +328,9 @@ def _simulate_pair(trace: EventTrace, platform: Platform, time_base: float,
     rng = np.random.default_rng(seed + 7919 * trace_idx)
     res = simulate(trace, platform, time_base, strategy.period, cp=cp,
                    trust=strategy.trust,
-                   inexact_window=strategy.inexact_window, rng=rng)
+                   inexact_window=strategy.inexact_window,
+                   window_mode=strategy.window_mode,
+                   window_period=strategy.window_period, rng=rng)
     return res.makespan
 
 
@@ -440,6 +444,10 @@ def evaluate_strategies(
             periods=[float(strategies[si].period) for si, _ in lane_items],
             trusts=[strategies[si].trust for si, _ in lane_items],
             windows=[strategies[si].inexact_window for si, _ in lane_items],
+            window_modes=[strategies[si].window_mode
+                          for si, _ in lane_items],
+            window_periods=[strategies[si].window_period
+                            for si, _ in lane_items],
             seeds=seed + 7919 * tr_idx)
         for (si, ti), m in zip(lane_items, lane_ms):
             makespans[si, ti] = m

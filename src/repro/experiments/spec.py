@@ -110,6 +110,11 @@ class ScenarioSpec:
     faults drawn from ``dist`` (superposed per-processor streams when
     ``per_processor``), and a job of ``time_base_years_total / N`` years
     starting ``start`` seconds into the trace.
+
+    ``window`` is the prediction-window length I (arXiv:1302.4558): with
+    I > 0 every prediction event in the scenario's traces announces the
+    interval [t, t+I] and the true fault materializes uniformly inside it.
+    ``window=0`` (default) keeps exact-date predictions, bit-for-bit.
     """
 
     n: int = 2 ** 16
@@ -117,6 +122,7 @@ class ScenarioSpec:
         default_factory=lambda: DistributionSpec("exponential"))
     recall: float = 0.85
     precision: float = 0.82
+    window: float = 0.0
     cp_ratio: float = 1.0
     c: float = 600.0
     r: float = 600.0
@@ -182,7 +188,9 @@ class ScenarioSpec:
         # the synchronized-processor-start artifact, paper §5.1).
         sel = tr.times >= self.start
         return EventTrace(tr.times[sel] - self.start, tr.kinds[sel],
-                          self.horizon - self.start)
+                          self.horizon - self.start,
+                          windows=None if tr.windows is None
+                          else tr.windows[sel])
 
     def make_trace(self, index: int, seed: int | None = None) -> EventTrace:
         """Trace ``index`` of this scenario's bank (seeded, reproducible)."""
@@ -191,7 +199,8 @@ class ScenarioSpec:
         n_streams, fdist = self._stream_args()
         tr = make_event_trace(
             self.dist.build(), self.mu, self.recall, self.precision,
-            self.horizon, rng, false_pred_dist=fdist, n_processors=n_streams)
+            self.horizon, rng, false_pred_dist=fdist, n_processors=n_streams,
+            window=self.window)
         return self._shift(tr)
 
     def make_traces(self, n_traces: int | None = None,
@@ -218,7 +227,7 @@ class ScenarioSpec:
         bank = make_event_trace_bank(
             self.dist.build(), self.mu, self.recall, self.precision,
             self.horizon, rng, false_pred_dist=fdist,
-            n_processors=n_streams, n_traces=n)
+            n_processors=n_streams, n_traces=n, window=self.window)
         return [self._shift(tr) for tr in bank]
 
     # -- field update (dotted paths; how sweeps and the CLI set fields) ------

@@ -1,0 +1,34 @@
+"""JAX version compatibility for the Pallas TPU kernels.
+
+The TPU compiler-params dataclass was renamed across JAX releases:
+``pltpu.TPUCompilerParams`` (jax <= 0.4.x / 0.5.x) became
+``pltpu.CompilerParams`` (newer releases, with the old name deprecated).
+Every kernel resolves the class through this single shim so the repo runs
+on either side of the rename.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["CompilerParams", "resolve_compiler_params"]
+
+
+def resolve_compiler_params(mod=pltpu):
+    """The TPU compiler-params class of ``mod``, whichever name it carries.
+
+    Prefers the new ``CompilerParams`` name, falls back to the legacy
+    ``TPUCompilerParams``; raises AttributeError when neither exists (an
+    unsupported pallas build).
+    """
+    cls = getattr(mod, "CompilerParams", None)
+    if cls is None:
+        cls = getattr(mod, "TPUCompilerParams", None)
+    if cls is None:
+        raise AttributeError(
+            "pallas TPU module exposes neither CompilerParams nor "
+            "TPUCompilerParams; unsupported JAX version")
+    return cls
+
+
+CompilerParams = resolve_compiler_params()

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .compat import CompilerParams
+
 __all__ = ["decode_attention_pallas"]
 
 NEG_INF = -1e30
@@ -102,7 +104,7 @@ def decode_attention_pallas(q: jax.Array, k_cache: jax.Array,
             pltpu.VMEM((g,), jnp.float32),
             pltpu.VMEM((g, hd), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(length.astype(jnp.int32), qr, kr, vr)

@@ -155,6 +155,37 @@ def test_quantize_zero_delta():
     np.testing.assert_array_equal(np.asarray(rec), np.asarray(x))
 
 
+# -- JAX version-compat shim ------------------------------------------------
+
+def test_compiler_params_shim_resolves_both_names():
+    """The kernels' compiler-params class must resolve under either the new
+    (CompilerParams) or legacy (TPUCompilerParams) pltpu attribute name."""
+    from types import SimpleNamespace
+
+    from jax.experimental.pallas import tpu as pltpu
+
+    from repro.kernels.compat import CompilerParams, resolve_compiler_params
+
+    class New:
+        pass
+
+    class Old:
+        pass
+
+    assert resolve_compiler_params(SimpleNamespace(CompilerParams=New)) is New
+    assert resolve_compiler_params(
+        SimpleNamespace(TPUCompilerParams=Old)) is Old
+    # The new name wins when both exist (it is the non-deprecated one).
+    assert resolve_compiler_params(
+        SimpleNamespace(CompilerParams=New, TPUCompilerParams=Old)) is New
+    with pytest.raises(AttributeError):
+        resolve_compiler_params(SimpleNamespace())
+    # The module-level alias matches this JAX's pltpu and accepts the
+    # argument every kernel passes.
+    assert CompilerParams is resolve_compiler_params(pltpu)
+    CompilerParams(dimension_semantics=("parallel", "arbitrary"))
+
+
 # -- kernels wired into the model (attn_impl config knob) -------------------
 
 @pytest.mark.parametrize("arch", ["llama3.2-1b", "recurrentgemma-2b"])

@@ -152,15 +152,32 @@ def test_t_nopred_clamped_to_interval():
     assert ppl2.platform.c <= t2 <= beta_lim(ppl2) + 1e-9
 
 
+def test_degenerate_beta_lim_excludes_waste1_branch():
+    """beta_lim < C: the WASTE1 validity interval [C, C_p/p] is empty, so
+    the optimum must come from the WASTE2 branch alone — not from comparing
+    against WASTE1 evaluated out of domain at T = C."""
+    ppl = pp(n=2**19, cp=60.0)
+    assert beta_lim(ppl) < ppl.platform.c
+    t_star, w_star, use = optimal_period_with_prediction(ppl)
+    assert use
+    assert t_star == pytest.approx(t_pred(ppl))
+    assert w_star == pytest.approx(waste2(t_star, ppl))
+
+
 @given(st.floats(0.1, 0.95), st.floats(0.1, 0.95),
        st.sampled_from([0.1, 0.5, 1.0, 2.0]), st.integers(2**10, 2**19))
 @settings(max_examples=60, deadline=None)
 def test_optimal_never_worse_than_no_prediction(r, p, cp_ratio, n):
     """min(WASTE1*, WASTE2*) <= WASTE1* by construction — and the chosen
-    branch's waste must match waste_with_prediction at T*."""
+    branch's waste must match waste_with_prediction at T*.  The WASTE1
+    comparison only applies when its validity interval [C, C_p/p] is
+    non-empty; otherwise only the WASTE2 branch exists."""
     ppl = pp(n=n, recall=r, precision=p, cp=600.0 * cp_ratio)
     t_star, w_star, use = optimal_period_with_prediction(ppl)
-    w1 = waste1(t_nopred(ppl), ppl)
-    assert w_star <= w1 + 1e-12
+    if beta_lim(ppl) >= ppl.platform.c:
+        w1 = waste1(t_nopred(ppl), ppl)
+        assert w_star <= w1 + 1e-12
+    else:
+        assert use
     assert w_star == pytest.approx(
         waste_with_prediction(max(t_star, ppl.platform.c), ppl), rel=1e-6)

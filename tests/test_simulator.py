@@ -109,6 +109,27 @@ def test_prediction_too_early_in_period_unhonourable():
     assert res.n_trusted == 0
 
 
+def test_n_faults_counts_each_materialized_fault_once():
+    """A true prediction's fault is tallied exactly once (at announcement,
+    consistent with the _EV_FAULT handler counting before advancing)."""
+    p = Platform(mu=1e12, c=10.0, d=2.0, r=3.0)
+    for trust in (AlwaysTrust(), NeverTrust()):
+        res = simulate(trace_of([50.0], [1]), p, time_base=360.0,
+                       period=100.0, cp=4.0, trust=trust)
+        assert res.n_faults == 1
+    # The job completes during the pre-checkpoint advance: the announced
+    # fault still counts, like an unpredicted fault popped past completion.
+    res = simulate(trace_of([500.0], [1]), p, time_base=360.0, period=100.0,
+                   cp=4.0, trust=AlwaysTrust())
+    assert res.n_faults == 1
+    assert res.n_faults_hit == 0
+    # Mixed trace: n_faults equals the number of actual faults processed.
+    res = simulate(trace_of([50.0, 120.0, 260.0], [1, 0, 2]), p,
+                   time_base=600.0, period=100.0, cp=4.0,
+                   trust=AlwaysTrust())
+    assert res.n_faults == 2
+
+
 def test_inexact_prediction_window():
     """InexactPrediction: fault strikes in [date, date+window); work done
     between the proactive save and the actual fault is destroyed."""

@@ -1,0 +1,382 @@
+"""Prediction-window axis (arXiv:1302.4558): trace stamping, scalar/batch
+bit-for-bit equivalence, window=0 regression to exact dates, waste-formula
+continuity at the window thresholds, pinned window_sweep means."""
+
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.batch import simulate_batch, simulate_lanes
+from repro.core.prediction import (PredictedPlatform, Predictor, beta_lim,
+                                   t_pred, waste2)
+from repro.core.simulator import (AlwaysTrust, FixedProbabilityTrust,
+                                  NeverTrust, SimResult, ThresholdTrust,
+                                  simulate)
+from repro.core.traces import (FALSE_PRED, FAULT_PRED, FAULT_UNPRED,
+                               EventTrace, Exponential, Weibull,
+                               make_event_trace, make_event_trace_bank)
+from repro.core.waste import Platform
+from repro.core.windows import (WindowPlan, beta_lim_window,
+                                optimal_window_plan, t_window_period,
+                                waste_window, waste_window_instant,
+                                waste_window_within, window_strategy)
+from repro.core.waste import t_rfo
+from repro.experiments import (DistributionSpec, ScenarioSpec, build_strategy,
+                               evaluate_strategies)
+
+MU_IND = 125.0 * 365.0 * 86400.0
+
+WSMALL = ScenarioSpec(n=32, dist=DistributionSpec("weibull", {"shape": 0.7}),
+                      mu_ind=32 * 1e5, c=600.0, d=60.0, r=600.0,
+                      window=3600.0, time_base_years_total=0.1, start=0.0,
+                      n_traces=4, seed=3)
+
+
+def pp(n=2 ** 16, c=600.0, cp=600.0, d=60.0, r=600.0, recall=0.85,
+       precision=0.82) -> PredictedPlatform:
+    plat = Platform(mu=MU_IND / n, c=c, d=d, r=r)
+    return PredictedPlatform(plat, Predictor(recall, precision), cp)
+
+
+def trace_of(times, kinds, windows=None, horizon=1e9):
+    return EventTrace(np.asarray(times, float), np.asarray(kinds, np.int8),
+                      horizon,
+                      windows=None if windows is None
+                      else np.asarray(windows, float))
+
+
+def assert_same(got: SimResult, want: SimResult, context=""):
+    for f in dataclasses.fields(SimResult):
+        g, w = getattr(got, f.name), getattr(want, f.name)
+        assert g == w, f"{context}: {f.name}: batch {g} != scalar {w}"
+
+
+# ---------------------------------------------------------------------------
+# Trace layer: window-bearing prediction events
+# ---------------------------------------------------------------------------
+
+def test_make_event_trace_stamps_prediction_windows():
+    rng = np.random.default_rng(0)
+    tr = make_event_trace(Exponential(1.0), 50.0, 0.8, 0.7, 5000.0, rng,
+                          window=120.0)
+    assert tr.windows is not None
+    preds = (tr.kinds == FAULT_PRED) | (tr.kinds == FALSE_PRED)
+    assert np.all(tr.windows[preds] == 120.0)
+    assert np.all(tr.windows[tr.kinds == FAULT_UNPRED] == 0.0)
+
+
+def test_window_zero_leaves_traces_unstamped():
+    rng = np.random.default_rng(0)
+    tr = make_event_trace(Exponential(1.0), 50.0, 0.8, 0.7, 5000.0, rng)
+    assert tr.windows is None
+    bank = make_event_trace_bank(Exponential(1.0), 50.0, 0.8, 0.7, 5000.0,
+                                 np.random.default_rng(1), n_traces=3)
+    assert all(tr.windows is None for tr in bank)
+
+
+def test_event_trace_bank_stamps_windows():
+    bank = make_event_trace_bank(Exponential(1.0), 50.0, 0.8, 0.7, 5000.0,
+                                 np.random.default_rng(2), n_traces=3,
+                                 window=60.0)
+    for tr in bank:
+        assert tr.windows is not None
+        assert np.all(tr.windows[tr.kinds != FAULT_UNPRED] == 60.0)
+
+
+def test_scenario_spec_window_flows_into_traces():
+    spec = WSMALL
+    for tr in spec.make_traces():
+        assert tr.windows is not None
+        preds = tr.kinds != FAULT_UNPRED
+        assert np.all(tr.windows[preds] == spec.window)
+    plain = spec.replace(window=0.0)
+    assert all(tr.windows is None for tr in plain.make_traces())
+
+
+def test_event_trace_windows_shape_validated():
+    with pytest.raises(ValueError):
+        EventTrace(np.array([1.0, 2.0]), np.array([0, 1], np.int8), 10.0,
+                   windows=np.array([5.0]))
+
+
+# ---------------------------------------------------------------------------
+# Simulator mechanics ("within" mode) + engine equivalence
+# ---------------------------------------------------------------------------
+
+def test_within_mode_checkpoints_inside_window():
+    """A trusted window prediction keeps proactive-checkpointing every
+    window_period until the window closes."""
+    p = Platform(mu=1e12, c=10.0, d=2.0, r=3.0)
+    # Window [50, 130); T_p = 24 (C_p=4): initial prockpt at [46,50), then
+    # work 20 / ckpt 4 cycles at 74, 98, 122 -> 4 proactive ckpts total.
+    res = simulate(trace_of([50.0], [2], [80.0]), p, 360.0, 200.0, cp=4.0,
+                   trust=AlwaysTrust(), window_mode="within",
+                   window_period=24.0)
+    assert res.n_trusted == 1
+    assert res.time_prockpt == pytest.approx(4.0 * 4)
+    # Same prediction in instant mode: only the window-start checkpoint.
+    res_i = simulate(trace_of([50.0], [2], [80.0]), p, 360.0, 200.0, cp=4.0,
+                     trust=AlwaysTrust(), window_mode="instant")
+    assert res_i.time_prockpt == pytest.approx(4.0)
+
+
+def test_within_mode_bounds_loss_to_window_quantum():
+    """A true window prediction materializing late in the window destroys
+    at most W_p = window_period - C_p of work."""
+    p = Platform(mu=1e12, c=10.0, d=0.0, r=0.0)
+    rng = np.random.default_rng(5)
+    res = simulate(trace_of([50.0], [1], [200.0]), p, 720.0, 100.0, cp=4.0,
+                   trust=AlwaysTrust(), window_mode="within",
+                   window_period=24.0, rng=rng)
+    assert res.n_trusted_true == 1
+    assert res.time_lost <= 24.0 - 4.0 + 1e-9
+    # Instant mode on the same draw loses the full in-window work.
+    res_i = simulate(trace_of([50.0], [1], [200.0]), p, 720.0, 100.0, cp=4.0,
+                     trust=AlwaysTrust(), window_mode="instant",
+                     rng=np.random.default_rng(5))
+    assert res_i.time_lost > res.time_lost
+
+
+def test_window_period_validation():
+    p = Platform(mu=1e5, c=600.0)
+    tr = trace_of([], [])
+    with pytest.raises(ValueError, match="window_period"):
+        simulate(tr, p, 1e4, 2000.0, cp=600.0, window_mode="within",
+                 window_period=600.0)
+    with pytest.raises(ValueError, match="window_mode"):
+        simulate(tr, p, 1e4, 2000.0, window_mode="sometimes")
+    with pytest.raises(ValueError, match="window_period"):
+        simulate_batch([tr], p, 1e4, [2000.0], cp=600.0,
+                       window_mode="within", window_period=10.0)
+    with pytest.raises(ValueError, match="window_mode"):
+        simulate_batch([tr], p, 1e4, [2000.0], window_mode="sometimes")
+
+
+def _window_case(case: int):
+    r = np.random.default_rng(9000 + case)
+    platform = Platform(mu=float(r.uniform(2e4, 2e5)),
+                        c=float(r.uniform(100, 900)),
+                        d=float(r.uniform(0, 120)),
+                        r=float(r.uniform(0, 900)))
+    cp = float(r.uniform(0.1, 2.0)) * platform.c
+    time_base = float(r.uniform(2, 6)) * platform.mu
+    dist = Exponential(1.0) if case % 2 == 0 else Weibull(0.7, 1.0)
+    trust = [AlwaysTrust(), ThresholdTrust(float(r.uniform(0, platform.c * 3))),
+             FixedProbabilityTrust(float(r.uniform(0.2, 0.8))),
+             NeverTrust()][case % 4]
+    window = float(r.uniform(0.5, 6.0)) * platform.c
+    # Mode flips every 4 cases while trust cycles mod 4, so every
+    # (trust, mode) pair — incl. stochastic trust inside an armed window —
+    # gets scalar-vs-batch parity coverage.
+    wmode = ["instant", "within"][(case // 4) % 2]
+    wperiod = cp + float(r.uniform(0.2, 3.0)) * platform.c
+    traces = [make_event_trace(dist, platform.mu, float(r.uniform(0.3, 1.0)),
+                               float(r.uniform(0.3, 1.0)), 30 * time_base,
+                               np.random.default_rng(7 * case + i),
+                               window=window)
+              for i in range(3)]
+    periods = [float(x) for x in
+               np.random.default_rng(case).uniform(platform.c * 2,
+                                                   platform.c * 20, 3)]
+    return platform, cp, time_base, trust, wmode, wperiod, traces, periods
+
+
+@pytest.mark.parametrize("case", range(16))
+def test_randomized_window_equivalence(case):
+    """Window-bearing banks + both action modes: batch == scalar, every
+    counter, bit for bit."""
+    platform, cp, tb, trust, wmode, wperiod, traces, periods = \
+        _window_case(case)
+    seeds = [11 + 7919 * i for i in range(len(traces))]
+    batch = simulate_batch(traces, platform, tb, periods, cp=cp, trust=trust,
+                           window_mode=wmode, window_period=wperiod,
+                           trace_seeds=seeds)
+    for ci, period in enumerate(periods):
+        for ti, trace in enumerate(traces):
+            want = simulate(trace, platform, tb, period, cp=cp, trust=trust,
+                            window_mode=wmode, window_period=wperiod,
+                            rng=np.random.default_rng(seeds[ti]))
+            assert_same(batch.result(ci, ti), want, f"case {case}")
+
+
+def test_simulate_lanes_mixed_window_modes():
+    platform, cp, tb, _, _, wperiod, traces, periods = _window_case(1)
+    trusts = [AlwaysTrust(), ThresholdTrust(500.0), AlwaysTrust()]
+    modes = ["instant", "within", "within"]
+    ms = simulate_lanes(
+        traces, platform, tb, cp=cp,
+        trace_indices=[0, 1, 2],
+        periods=periods,
+        trusts=trusts,
+        windows=[0.0, 0.0, 0.0],
+        window_modes=modes,
+        window_periods=[0.0, wperiod, wperiod],
+        seeds=[5, 5 + 7919, 5 + 2 * 7919])
+    for j in range(3):
+        want = simulate(traces[j], platform, tb, periods[j], cp=cp,
+                        trust=trusts[j], window_mode=modes[j],
+                        window_period=(0.0, wperiod, wperiod)[j],
+                        rng=np.random.default_rng(5 + 7919 * j))
+        assert ms[j] == want.makespan
+
+
+def test_jax_backend_rejects_window_lanes():
+    pytest.importorskip("jax")
+    p = Platform(mu=5e4, c=600.0)
+    tr = trace_of([], [])
+    with pytest.raises(ValueError, match="window"):
+        simulate_batch([tr], p, 1e4, [2000.0], cp=600.0, backend="jax",
+                       window_mode="within", window_period=1800.0)
+    wtr = trace_of([5000.0], [1], [600.0])
+    with pytest.raises(ValueError, match="window"):
+        simulate_batch([wtr], p, 1e4, [2000.0], backend="jax")
+
+
+# ---------------------------------------------------------------------------
+# window = 0 regression: the exact-date behaviour is recovered bit-for-bit
+# ---------------------------------------------------------------------------
+
+def test_window_zero_equals_exact_date_results():
+    plain = WSMALL.replace(window=0.0)
+    traces = plain.make_traces()
+    plat, tb, cp = plain.platform, plain.time_base, plain.cp
+    exact = build_strategy("optimal_prediction", plain)
+    start = build_strategy("window_start", plain)
+    pro = build_strategy("window_proactive", plain)
+    # At I = 0 the window strategies resolve to the exact-date refined
+    # policy: same period, same threshold, no "within" machinery.
+    assert start.period == exact.period
+    assert start.trust == ThresholdTrust(beta_lim(plain.pp))
+    assert pro.window_mode == "instant" and pro.window_period == 0.0
+    means = evaluate_strategies(traces, plat, tb, cp, [exact, start, pro],
+                                seed=7)
+    assert means[0] == means[1] == means[2]
+
+
+def test_within_machinery_inert_without_windows():
+    """On a window-less trace with inexact_window=0, "within" mode never
+    arms and the result equals the plain exact-date run, bit for bit."""
+    platform, cp, tb, _, _, wperiod, _, periods = _window_case(2)
+    tr = make_event_trace(Exponential(1.0), platform.mu, 0.7, 0.6, 20 * tb,
+                          np.random.default_rng(3))
+    assert tr.windows is None
+    want = simulate(tr, platform, tb, periods[0], cp=cp,
+                    trust=AlwaysTrust(), rng=np.random.default_rng(1))
+    got = simulate(tr, platform, tb, periods[0], cp=cp, trust=AlwaysTrust(),
+                   window_mode="within", window_period=wperiod,
+                   rng=np.random.default_rng(1))
+    assert_same(got, want)
+
+
+# ---------------------------------------------------------------------------
+# Analytic layer: continuity + optimality (mirrors prediction.py tests)
+# ---------------------------------------------------------------------------
+
+def test_waste_formulas_reduce_to_exact_dates_at_zero_window():
+    ppl = pp()
+    for t in (5000.0, 15000.0, 40000.0):
+        assert waste_window_instant(t, ppl, 0.0) == waste2(t, ppl)
+        assert waste_window_within(t, ppl, 0.0, 3000.0) \
+            == pytest.approx(waste2(t, ppl), rel=1e-12)
+    assert beta_lim_window(ppl, 0.0) == beta_lim(ppl)
+    assert beta_lim_window(ppl, 0.0, 3000.0) == beta_lim(ppl)
+
+
+def test_waste_continuity_at_window_thresholds():
+    """Continuity in I at the W_p = I switch of the within formula, and of
+    the threshold as I -> 0."""
+    ppl = pp()
+    tp = 3000.0
+    wp = tp - ppl.cp
+    for f in (lambda i: waste_window_within(15000.0, ppl, i, tp),
+              lambda i: beta_lim_window(ppl, i, tp)):
+        left, right = f(wp * (1 - 1e-9)), f(wp * (1 + 1e-9))
+        assert left == pytest.approx(right, rel=1e-6)
+    eps = 1e-6
+    assert beta_lim_window(ppl, eps, tp) == pytest.approx(beta_lim(ppl),
+                                                          rel=1e-6)
+    assert waste_window(15000.0, ppl, eps, "within", tp) == pytest.approx(
+        waste2(15000.0, ppl), rel=1e-9)
+
+
+def test_t_window_period_is_argmin():
+    ppl = pp()
+    window = 18000.0
+    tp_star = t_window_period(ppl, window)
+    assert ppl.cp < tp_star < window
+    w_star = waste_window_within(t_pred(ppl), ppl, window, tp_star)
+    for tp in np.geomspace(ppl.cp * 1.01, window * 3, 300):
+        assert waste_window_within(t_pred(ppl), ppl, window, float(tp)) \
+            >= w_star - 1e-12
+
+
+def test_optimal_window_plan_picks_best_mode():
+    ppl = pp()
+    # At I = 0 every acting plan equals exact-date WASTE2 at T_pred.
+    plan0 = optimal_window_plan(ppl, 0.0)
+    assert isinstance(plan0, WindowPlan)
+    assert plan0.waste == pytest.approx(waste2(t_pred(ppl), ppl), rel=1e-12)
+    # A huge window makes acting worthless: the ignore plan must win.
+    plan_big = optimal_window_plan(ppl, 1e9)
+    assert plan_big.mode == "ignore"
+    assert plan_big.period == pytest.approx(max(ppl.platform.c,
+                                                t_rfo(ppl.platform)))
+    # At a few periods, within beats instant analytically.
+    w_in = optimal_window_plan(ppl, 18000.0, mode="within").waste
+    w_st = optimal_window_plan(ppl, 18000.0, mode="instant").waste
+    assert w_in < w_st
+
+
+def test_window_strategy_modes():
+    ppl = pp()
+    ig = window_strategy(ppl, 9000.0, "ignore")
+    assert isinstance(ig.trust, NeverTrust) and ig.window_mode == "instant"
+    st = window_strategy(ppl, 9000.0, "instant")
+    assert st.inexact_window == 9000.0
+    assert st.trust == ThresholdTrust(beta_lim(ppl))
+    pro = window_strategy(ppl, 9000.0, "within")
+    assert pro.window_mode == "within"
+    assert pro.window_period == pytest.approx(t_window_period(ppl, 9000.0))
+    assert pro.trust == ThresholdTrust(
+        beta_lim_window(ppl, 9000.0, pro.window_period))
+    # Tiny windows degrade gracefully to the instant mechanics.
+    tiny = window_strategy(ppl, 1.0, "within")
+    assert tiny.window_mode == "instant"
+    with pytest.raises(ValueError):
+        window_strategy(ppl, 9000.0, "sometimes")
+    # An explicit in-window period must leave room for work — fail at
+    # construction, not mid-sweep inside the engines.
+    with pytest.raises(ValueError, match="window_period"):
+        window_strategy(ppl, 9000.0, "within", window_period=ppl.cp)
+
+
+# ---------------------------------------------------------------------------
+# Runner integration + pinned window_sweep cell
+# ---------------------------------------------------------------------------
+
+def test_runner_window_strategies_engines_agree():
+    traces = WSMALL.make_traces()
+    plat, tb, cp = WSMALL.platform, WSMALL.time_base, WSMALL.cp
+    strategies = [build_strategy("window_ignore", WSMALL),
+                  build_strategy("window_start", WSMALL),
+                  build_strategy("window_proactive", WSMALL)]
+    auto = evaluate_strategies(traces, plat, tb, cp, strategies, seed=7,
+                               engine="auto")
+    scalar = evaluate_strategies(traces, plat, tb, cp, strategies, seed=7,
+                                 engine="scalar")
+    assert auto == scalar
+
+
+def test_window_sweep_pinned_means():
+    """Regression pin for one window_sweep cell (WSMALL, I=3600): guards
+    window trace generation, both engines and the strategy constructions
+    against silent drift."""
+    traces = WSMALL.make_traces()
+    strategies = [build_strategy(name, WSMALL) for name in
+                  ("window_ignore", "window_start", "window_proactive")]
+    means = evaluate_strategies(traces, WSMALL.platform, WSMALL.time_base,
+                                WSMALL.cp, strategies, seed=7)
+    want = [125891.38666757442, 110187.96486062315, 109255.70226936118]
+    assert means == pytest.approx(want, rel=1e-12)
