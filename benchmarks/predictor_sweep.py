@@ -1,0 +1,194 @@
+"""Predictor-family sweep: generative predictors x drift, static vs adaptive.
+
+The predictor subsystem (``repro.predictors``) makes "which predictor?" a
+scenario axis: the sweep crosses the registered generative models —
+
+  * ``oracle``      — the paper's stamped (r, p) predictor;
+  * ``lead_time``   — sampled per-event prediction windows (lead times);
+  * ``bursty``      — correlated false alarms at the nominal rate;
+  * ``drifting``    — precision degrades over the run (slow / fast);
+
+— with the strategies RFO (predictor ignored), OptimalPrediction (the
+static paper-optimal plan at the *nominal* (r, p)) and Adaptive (online
+(r-hat, p-hat) estimation with re-planning, ``repro.predictors.estimator``).
+
+Claims asserted in quick mode:
+
+  * on the oracle cell the static paper plan beats RFO, and Adaptive
+    (correct prior) stays within a few percent of it — estimation noise
+    does not wreck a well-planned run;
+  * **convergence** (the acceptance criterion): started from a stale
+    prior (r=0.3, p=0.99), the adaptive strategy's re-planned operating
+    point converges to the analytic ``optimal_period_with_prediction``
+    plan at the *true* (r, p) — every lane re-plans, the final periods
+    bracket T*, the final trust thresholds sit at beta_lim = C_p/p, and
+    the trust decision matches the analytic WASTE2-branch choice;
+  * the adaptive run beats the same stale plan left static.
+
+    PYTHONPATH=src python -m benchmarks.run --experiment predictor_sweep
+    PYTHONPATH=src python -m benchmarks.run --only predictor_sweep
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.batch import simulate_batch
+from repro.core.prediction import beta_lim, optimal_period_with_prediction
+from repro.experiments import (ExperimentSpec, PredictorSpec, ScenarioSpec,
+                               StrategySpec, SweepSpec, build_strategy,
+                               evaluate_strategies, register_experiment,
+                               run_experiment, trace_bank)
+
+PREDICTOR_LABELS = ["oracle", "lead_time", "bursty", "drift_slow",
+                    "drift_fast"]
+
+
+def predictor_axis(sc: ScenarioSpec) -> list[PredictorSpec]:
+    """The swept predictor families; the drifting ramps are placed inside
+    the job window (the job starts ``sc.start`` seconds into the trace)
+    so quality actually degrades *during* the run."""
+    drift = {"drift_start": sc.start, "drift_span": 2.0 * sc.time_base}
+    return [
+        PredictorSpec("oracle"),
+        PredictorSpec("lead_time", {"lead_mean": 3600.0, "min_lead": 600.0}),
+        PredictorSpec("bursty", {"burst_size": 4.0, "burst_gap": 900.0}),
+        PredictorSpec("drifting", {"precision_end": 0.6, **drift}),
+        PredictorSpec("drifting", {"precision_end": 0.25, "recall_end": 0.6,
+                                   **drift}),
+    ]
+
+# Stale prior for the convergence cell: the adaptive strategy must discover
+# the true predictor quality and re-plan its way to the analytic optimum.
+STALE_PRIOR = {"prior_recall": 0.3, "prior_precision": 0.99, "tol": 0.02}
+
+
+@register_experiment("predictor_sweep",
+                     "waste vs generative predictor family x drift "
+                     "(oracle / lead_time / bursty / drifting), static vs "
+                     "adaptive re-planning")
+def build(quick: bool = True) -> ExperimentSpec:
+    scenario = ScenarioSpec(n_traces=4 if quick else 25)
+    return ExperimentSpec(
+        name="predictor_sweep",
+        scenario=scenario,
+        strategies=(
+            StrategySpec("rfo"),
+            StrategySpec("optimal_prediction"),
+            StrategySpec("adaptive"),
+        ),
+        sweep=SweepSpec(
+            axes={"predictor": [p.to_dict()
+                                for p in predictor_axis(scenario)]},
+            labels={"predictor": PREDICTOR_LABELS},
+        ),
+        description="generative predictor families x static vs adaptive "
+                    "planning",
+    )
+
+
+def _convergence_cell(quick: bool) -> dict:
+    """The acceptance assert: stale-prior adaptive converges to the
+    analytic plan at the true (r, p) on the oracle scenario."""
+    sc = ScenarioSpec(n_traces=6 if quick else 20,
+                      time_base_years_total=40000.0)
+    traces = trace_bank(sc)
+    plat, tb, cp = sc.platform, sc.time_base, sc.cp
+
+    ad = build_strategy("adaptive", sc, **STALE_PRIOR)
+    batch = simulate_batch(
+        traces, plat, tb, [ad.period], cp=cp, trust=ad.trust,
+        adaptive=ad.adaptive,
+        trace_seeds=[sc.seed + 7919 * i for i in range(len(traces))])
+
+    t_true, _, use_true = optimal_period_with_prediction(sc.pp)
+    thr_true = beta_lim(sc.pp)
+    periods = batch.final_period[0]
+    thresholds = batch.final_threshold[0]
+    replans = batch.n_replans[0]
+    r_hat, p_hat = batch.est_recall[0], batch.est_precision[0]
+
+    rel_t = np.abs(periods - t_true) / t_true
+    rel_thr = np.abs(thresholds - thr_true) / thr_true
+    assert use_true, "paper scenario: predictions are analytically worth it"
+    assert (replans >= 1).all(), \
+        f"every lane must re-plan away from the stale prior, got {replans}"
+    assert np.isfinite(thresholds).all(), \
+        "adaptive trust decision must converge to 'act' (finite beta_lim)"
+    assert float(rel_thr.max()) < 0.15, \
+        f"final thresholds should sit at beta_lim={thr_true:.0f}, " \
+        f"rel err {rel_thr}"
+    assert float(rel_t.mean()) < 0.20 and float(rel_t.max()) < 0.35, \
+        f"final periods should converge to T*={t_true:.0f}, rel err {rel_t}"
+    assert abs(float(r_hat.mean()) - sc.recall) < 0.1
+    assert abs(float(p_hat.mean()) - sc.precision) < 0.1
+
+    # The re-planned run must beat the same stale plan left static.
+    stale = build_strategy("fixed_period", sc, period=ad.period,
+                           trust_threshold=ad.trust.threshold)
+    m_stale, m_ad = evaluate_strategies(traces, plat, tb, cp, [stale, ad],
+                                        seed=sc.seed)
+    assert m_ad < m_stale, \
+        f"adaptive ({m_ad}) should beat the stale static plan ({m_stale})"
+    return {
+        "t_star": t_true, "beta_lim": thr_true,
+        "final_periods": [round(float(t), 1) for t in periods],
+        "final_thresholds": [round(float(t), 1) for t in thresholds],
+        "est_recall": [round(float(v), 3) for v in r_hat],
+        "est_precision": [round(float(v), 3) for v in p_hat],
+        "n_replans": [int(n) for n in replans],
+        "stale_static_days": m_stale / 86400.0,
+        "adaptive_days": m_ad / 86400.0,
+    }
+
+
+def run(quick: bool = True) -> dict:
+    exp = build(quick=quick)
+    table = run_experiment(exp, verbose=True)
+    print(table.format())
+    out: dict = {"rows": table.rows}
+
+    # Claim 1: on the oracle cell the static paper plan beats RFO and the
+    # adaptive strategy (correct prior) stays within a few percent of it.
+    m_rfo = table.value("makespan", predictor="oracle", strategy="RFO")
+    m_opt = table.value("makespan", predictor="oracle",
+                        strategy="OptimalPrediction")
+    m_ad = table.value("makespan", predictor="oracle", strategy="Adaptive")
+    assert m_opt < m_rfo, f"oracle: static plan should beat RFO " \
+                          f"({m_opt} >= {m_rfo})"
+    assert m_ad < m_opt * 1.03, \
+        f"oracle: adaptive should track the static optimum within 3% " \
+        f"({m_ad} vs {m_opt})"
+    out["oracle_days"] = {"rfo": m_rfo / 86400.0, "optimal": m_opt / 86400.0,
+                          "adaptive": m_ad / 86400.0}
+
+    # Claim 1b: predictor pathologies cost the static plan makespan.  The
+    # fault streams are identical across cells (the predictor draws after
+    # the fault draws), so these are paired comparisons.
+    m_lead = table.value("makespan", predictor="lead_time",
+                         strategy="OptimalPrediction")
+    m_drift = table.value("makespan", predictor="drift_fast",
+                          strategy="OptimalPrediction")
+    assert m_lead > m_opt, \
+        f"lead-time windows should cost the exact-date plan " \
+        f"({m_lead} <= {m_opt})"
+    assert m_drift > m_opt, \
+        f"fast quality drift should cost the static plan " \
+        f"({m_drift} <= {m_opt})"
+
+    # Claim 2 (acceptance criterion): stale-prior adaptive converges to
+    # the analytic optimal_period_with_prediction plan.
+    out["convergence"] = _convergence_cell(quick)
+    print(f"[predictor_sweep] convergence: T*="
+          f"{out['convergence']['t_star']:.0f} <- final periods "
+          f"{out['convergence']['final_periods']}; beta_lim="
+          f"{out['convergence']['beta_lim']:.0f} <- "
+          f"{out['convergence']['final_thresholds']}")
+    print("[predictor_sweep] claims OK: static beats RFO; adaptive tracks "
+          "the optimum and converges from a stale prior to the analytic "
+          "plan")
+    return out
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -31,9 +31,71 @@ import json
 import os
 import sys
 
+try:  # registry available when src/ is importable (the usual CLI setup)
+    from repro.experiments import (ExperimentSpec, ScenarioSpec,
+                                   build_experiment, register_experiment)
+except ImportError:  # pragma: no cover - bare script usage
+    register_experiment = None
+    build_experiment = None
+
+
+if register_experiment is not None:
+    @register_experiment("roofline",
+                         "per-(arch x shape) three-term roofline from the "
+                         "compiled dry-run (subprocess: needs 512 XLA "
+                         "host devices)")
+    def build_spec(quick: bool = True) -> ExperimentSpec:
+        """The accelerator sweep as spec data: the (arch x shape) grid,
+        artifact paths and the XLA device requirement live in
+        ``scenario.extras``, so the registry CLI can enumerate, override
+        (``--set extras.pairs=...``) and dispatch it like any other
+        experiment — it just runs in a subprocess with the dry-run device
+        flag instead of through the trace runner."""
+        return ExperimentSpec(
+            name="roofline",
+            scenario=ScenarioSpec(n_traces=0, extras={
+                "external_runner": "benchmarks.roofline",
+                "pairs": "tinyllama-1.1b:train_4k" if quick else "all",
+                "rules": None,
+                "tag": None,
+                "dryrun_json": "dryrun_results.json",
+                "out": "roofline_results.json",
+                "xla_devices": 512,
+            }),
+            strategies=(),
+            metrics=(),
+            description="compiled-HLO roofline sweep (FLOPs / HBM / ICI "
+                        "terms per arch x shape)",
+        )
+
+
+def spec_args(exp) -> tuple[list[str], dict[str, str]]:
+    """Derive the subprocess argv tail + env for a spec-driven run.
+
+    Shared by the registry CLI (``benchmarks.run --experiment roofline``)
+    and ``--from-spec``; unit-testable without jax or the device flag.
+    """
+    extras = dict(exp.scenario.extras)
+    args = ["--pairs", str(extras.get("pairs", "all")),
+            "--dryrun-json", str(extras.get("dryrun_json",
+                                            "dryrun_results.json")),
+            "--out", str(extras.get("out", "roofline_results.json"))]
+    if extras.get("rules"):
+        args += ["--rules", str(extras["rules"])]
+    if extras.get("tag"):
+        args += ["--tag", str(extras["tag"])]
+    for key, value in dict(extras.get("overrides", {})).items():
+        args += ["--set", f"{key}={value}"]
+    n_dev = int(extras.get("xla_devices", 512))
+    env = {"XLA_FLAGS": f"--xla_force_host_platform_device_count={n_dev}"}
+    return args, env
+
 
 def _require_devices() -> None:
-    if "--xla_force_host_platform_device_count=512" not in os.environ.get(
+    # Honour a device-count flag already set by the caller (the registry
+    # CLI's subprocess env, or --from-spec) — only default to 512 when
+    # none is present, and import jax immediately to lock the flag.
+    if "--xla_force_host_platform_device_count" not in os.environ.get(
             "XLA_FLAGS", ""):
         os.environ["XLA_FLAGS"] = \
             "--xla_force_host_platform_device_count=512"
@@ -126,16 +188,12 @@ def corrected_pair(arch: str, shape_name: str, mesh, mesh_name: str,
 
 
 def main() -> None:
-    _require_devices()
-    import jax
-    from repro.configs import REGISTRY, SHAPES, get, skip_reason
-    from repro.launch.mesh import make_production_mesh
-
     ap = argparse.ArgumentParser()
-    ap.add_argument("--pairs", default="all",
-                    help='"all" or comma list arch:shape')
-    ap.add_argument("--dryrun-json", default="dryrun_results.json")
-    ap.add_argument("--out", default="roofline_results.json")
+    ap.add_argument("--pairs", default=None,
+                    help='"all" or comma list arch:shape (default: the '
+                         'spec value with --from-spec, else "all")')
+    ap.add_argument("--dryrun-json", default=None)
+    ap.add_argument("--out", default=None)
     ap.add_argument("--append", action="store_true")
     ap.add_argument("--set", action="append", default=[],
                     help="cfg override key=value (python literal)")
@@ -143,7 +201,44 @@ def main() -> None:
                     choices=[None, "default", "seq_parallel", "decode"])
     ap.add_argument("--tag", default=None,
                     help="variant tag recorded with each row")
+    ap.add_argument("--from-spec", default=None, metavar="NAME",
+                    help="take pairs/artifact paths/overrides/device "
+                         "count from the registered experiment spec "
+                         "(e.g. 'roofline') as *defaults* — explicit "
+                         "flags still win, --set entries append")
+    ap.add_argument("--quick", action="store_true",
+                    help="with --from-spec: the spec's quick-mode grid")
     args = ap.parse_args()
+
+    # Spec extras are fallbacks for flags the user did not pass.
+    extras: dict = {}
+    if args.from_spec:
+        if build_experiment is None:
+            raise SystemExit("--from-spec needs the registry importable: "
+                             "run with PYTHONPATH=src")
+        exp = build_experiment(args.from_spec, quick=args.quick)
+        extras = dict(exp.scenario.extras)
+        args.set = [f"{k}={v}"
+                    for k, v in dict(extras.get("overrides", {})).items()] \
+            + args.set
+        _, spec_env = spec_args(exp)
+        os.environ.setdefault("XLA_FLAGS", spec_env["XLA_FLAGS"])
+    if args.pairs is None:
+        args.pairs = str(extras.get("pairs", "all"))
+    if args.dryrun_json is None:
+        args.dryrun_json = str(extras.get("dryrun_json",
+                                          "dryrun_results.json"))
+    if args.out is None:
+        args.out = str(extras.get("out", "roofline_results.json"))
+    if args.rules is None and extras.get("rules"):
+        args.rules = str(extras["rules"])
+    if args.tag is None and extras.get("tag"):
+        args.tag = str(extras["tag"])
+
+    _require_devices()
+    import jax  # noqa: F401  (device flag locked above)
+    from repro.configs import REGISTRY, SHAPES, get, skip_reason
+    from repro.launch.mesh import make_production_mesh
 
     import ast
     overrides = {}

@@ -67,7 +67,9 @@ def report_roofline(path: str = "roofline_results.json") -> None:
 def _import_benchmarks():
     """Import every benchmark module so experiments register themselves."""
     from . import (beyond, exec_times, log_traces, multilevel,
-                   recall_precision, table2, waste_vs_n, window_sweep)
+                   predictor_sweep, recall_precision, roofline, table2,
+                   waste_vs_n, window_sweep)
+    del roofline  # registers the spec-driven accelerator sweep only
     return {
         "table2": table2.run,
         "exec_times": exec_times.run,
@@ -77,6 +79,7 @@ def _import_benchmarks():
         "beyond": beyond.run,
         "multilevel": multilevel.run,
         "window_sweep": window_sweep.run,
+        "predictor_sweep": predictor_sweep.run,
     }
 
 
@@ -132,6 +135,20 @@ def run_one_experiment(name: str, overrides: dict[str, object],
                     f"--set '{covering}=[...]'")
             scenario = scenario.replace(**{key: value})
     exp = dataclasses.replace(exp, sweep=sweep, scenario=scenario)
+    if exp.scenario.extras.get("external_runner"):
+        # Spec-driven accelerator sweep (e.g. roofline): runs as a
+        # subprocess under the dry-run device flag the spec demands.
+        import subprocess
+        from benchmarks.roofline import spec_args
+        args_tail, env_extra = spec_args(exp)
+        cmd = [sys.executable, "-m", exp.scenario.extras["external_runner"]]
+        cmd += args_tail
+        print(f"# {exp.name}: {exp.description}")
+        print("exec:", " ".join(cmd), flush=True)
+        rc = subprocess.call(cmd, env=dict(os.environ, **env_extra))
+        if rc != 0:
+            raise SystemExit(rc)
+        return
     if not exp.strategies:
         raise SystemExit(
             f"experiment {name!r} uses a custom engine; run it with "

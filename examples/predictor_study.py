@@ -1,25 +1,31 @@
-"""Predictor design study: what should a fault-predictor team optimize?
+"""Predictor design study on the generative predictor subsystem.
 
-Reproduces the paper's §5.4 conclusion ("better safe than sorry": recall
-beats precision) and extends it with the analytic model: iso-waste curves
-over the (recall, precision) plane for a 2^16-processor platform, plus the
-break-even precision below which predictions should be ignored entirely.
+Part 1 (analytic, paper §5.4): what should a fault-predictor team
+optimize?  Iso-waste over the (recall, precision) plane says recall —
+reproduced with the experiment API's SweepSpec.
 
-The (recall, precision) plane is generated with the experiment API's
-SweepSpec — the same declarative axes the simulation benchmarks use — and
-each cell's predicted platform comes from its ScenarioSpec.
+Part 2 (generative, repro.predictors): what happens when the predictor is
+not the idealized stamp?  A ``drifting`` predictor degrades from the
+"good" literature predictor (r=0.85, p=0.82) to a poor one *during* the
+run; the static paper-optimal plan keeps trusting with the stale
+beta_lim while the ``adaptive`` strategy tracks (r-hat, p-hat) online
+(``repro.predictors.estimator``) and re-plans period + trust threshold as
+the estimates drift.
 
 Run:  PYTHONPATH=src python examples/predictor_study.py
 """
 
 import numpy as np
 
+from repro.core.batch import simulate_batch
 from repro.core.prediction import optimal_period_with_prediction
 from repro.core.waste import t_rfo, waste
-from repro.experiments import ScenarioSpec, SweepSpec
+from repro.experiments import (PredictorSpec, ScenarioSpec, SweepSpec,
+                               build_strategy, evaluate_strategies,
+                               trace_bank)
 
 
-def main() -> None:
+def analytic_plane() -> None:
     base = ScenarioSpec(n=2 ** 16, c=600.0, d=60.0, r=600.0)
     plat = base.platform
     w_nopred = waste(t_rfo(plat), plat)
@@ -38,38 +44,69 @@ def main() -> None:
             _, w, used = optimal_period_with_prediction(cells[(r, p)].pp)
             row.append(f"{w:.4f}{'*' if not used else ' '}  ")
         print(f"r={r:<5.2f} " + "".join(row))
-    print("(* = predictor analytically not worth using)\n")
+    print("(* = predictor analytically not worth using)")
 
-    # Sensitivity: d(waste)/d(recall) vs d(waste)/d(precision) at the
-    # literature predictor point (paper §5.4).
+    # Sensitivity at the literature predictor point (paper §5.4).
     r0, p0, eps = 0.7, 0.7, 0.05
 
     def w_at(r, p):
-        sc = base.replace(recall=r, precision=p)
-        return optimal_period_with_prediction(sc.pp)[1]
+        return optimal_period_with_prediction(
+            base.replace(recall=r, precision=p).pp)[1]
 
     dr = (w_at(r0 + eps, p0) - w_at(r0 - eps, p0)) / (2 * eps)
     dp = (w_at(r0, p0 + eps) - w_at(r0, p0 - eps)) / (2 * eps)
-    print(f"at (r={r0}, p={p0}): dWaste/dRecall = {dr:+.4f}, "
-          f"dWaste/dPrecision = {dp:+.4f}")
-    print(f"-> recall is {abs(dr / dp):.1f}x more valuable than precision "
-          f"(paper §5.4: invest in recall)")
+    print(f"\nat (r={r0}, p={p0}): dWaste/dRecall = {dr:+.4f}, "
+          f"dWaste/dPrecision = {dp:+.4f} -> invest in recall "
+          f"({abs(dr / dp):.1f}x more valuable)\n")
     assert abs(dr) > abs(dp)
 
-    # Break-even: smallest precision at which predictions still help,
-    # as a function of C_p/C.
-    print("\nbreak-even precision (predictions worth using) vs C_p/C:")
-    for cp_ratio in (0.1, 0.5, 1.0, 2.0):
-        lo = None
-        for p in np.linspace(0.01, 0.99, 99):
-            sc = base.replace(recall=0.85, precision=float(p),
-                              cp_ratio=cp_ratio)
-            if optimal_period_with_prediction(sc.pp)[2]:
-                lo = p
-                break
-        print(f"  C_p = {cp_ratio:>4.1f} C : p_breakeven ~ "
-              f"{lo if lo is not None else '>0.99'}"
-              f"{'' if lo else ' (never worth it)'}")
+
+def adaptive_demo() -> None:
+    # The drift ramp is placed inside the job window: quality starts
+    # degrading when the job starts and bottoms out two time_bases later.
+    base = ScenarioSpec(n_traces=5, time_base_years_total=40000.0)
+    sc = base.replace(predictor=PredictorSpec("drifting", {
+        "precision_end": 0.25, "recall_end": 0.5,
+        "drift_start": base.start, "drift_span": 2.0 * base.time_base}))
+    traces = trace_bank(sc)
+    plat, tb, cp = sc.platform, sc.time_base, sc.cp
+
+    static = build_strategy("optimal_prediction", sc)
+    adaptive = build_strategy("adaptive", sc, tol=0.03)
+    rfo = build_strategy("rfo", sc)
+    print("drifting predictor: (r, p) = (0.85, 0.82) -> (0.50, 0.25) "
+          "during the run")
+    m_rfo, m_static, m_ad = evaluate_strategies(
+        traces, plat, tb, cp, [rfo, static, adaptive], seed=sc.seed)
+    print(f"  RFO (ignore predictor):      {m_rfo / 86400:8.2f} days")
+    print(f"  OptimalPrediction (static):  {m_static / 86400:8.2f} days")
+    print(f"  Adaptive (online re-plan):   {m_ad / 86400:8.2f} days")
+
+    # Inside the adaptive runs: what did the estimator see and do?
+    batch = simulate_batch(
+        traces, plat, tb, [adaptive.period], cp=cp, trust=adaptive.trust,
+        adaptive=adaptive.adaptive,
+        trace_seeds=[sc.seed + 7919 * i for i in range(len(traces))])
+    print("\nper-trace adaptive diagnostics (start plan: "
+          f"T={adaptive.period:.0f}s, beta_lim={adaptive.trust.threshold:.0f}s):")
+    for ti in range(len(traces)):
+        res = batch.result(0, ti)
+        print(f"  trace {ti}: {res.n_replans:2d} replans -> "
+              f"T={res.final_period:8.0f}s "
+              f"thr={res.final_threshold:7.1f}s  "
+              f"r-hat={res.est_recall:.3f} p-hat={res.est_precision:.3f}")
+    assert all(batch.n_replans[0] >= 1), "drift must trigger re-planning"
+    # The estimator should have noticed the degradation (estimates are
+    # run-averages, so they sit between the start and end quality).
+    assert float(batch.est_precision[0].mean()) < 0.75
+    print("\nthe adaptive strategy noticed the degradation (p-hat well "
+          "below the nominal 0.82) and re-planned; the static plan kept "
+          "trusting a predictor that no longer deserved it")
+
+
+def main() -> None:
+    analytic_plane()
+    adaptive_demo()
 
 
 if __name__ == "__main__":

@@ -29,13 +29,23 @@ for every supported candidate:
     lengths from ``EventTrace.windows`` and per-candidate ``window_mode``
     ("instant" / "within") with its in-window proactive period — the
     "within" cadence runs as extra per-lane window state (win_end/win_rem)
-    inside the same lockstep schedule passes.
+    inside the same lockstep schedule passes;
+  * adaptive re-planning (``adaptive=`` an
+    :class:`repro.predictors.AdaptiveConfig` per candidate): every lane
+    carries its own online (r-hat, p-hat) estimator as SoA integer
+    counters, updated at the same event-pop points as the scalar engine,
+    and re-plans its period / trust threshold through the shared
+    :func:`repro.predictors.estimator.maybe_replan` — estimates, replan
+    points and plans are bit-for-bit the scalar engine's.
 
 An optional JAX backend (``backend="jax"``) runs the same lockstep loop as
 a single ``lax.while_loop`` over the lane arrays so banks can be dispatched
-to accelerators; it supports the deterministic trust policies with exact
-predictions (no draw sites), and requires x64 mode for the equivalence
-contract to hold.
+to accelerators; it supports the four standard trust policies and inexact
+prediction windows (per-lane randomness is pre-drawn into stream-prefix
+tables, consumed at the same draw sites as the scalar engine), and
+requires x64 mode for the equivalence contract to hold.  Window-bearing
+traces, "within" window modes and adaptive candidates still need the NumPy
+backend.
 """
 
 from __future__ import annotations
@@ -163,6 +173,11 @@ class BatchResult:
     time_prockpt: np.ndarray
     time_down: np.ndarray
     time_lost: np.ndarray
+    n_replans: np.ndarray | None = None
+    final_period: np.ndarray | None = None
+    final_threshold: np.ndarray | None = None
+    est_recall: np.ndarray | None = None
+    est_precision: np.ndarray | None = None
 
     @property
     def waste(self) -> np.ndarray:
@@ -172,7 +187,7 @@ class BatchResult:
         return np.where(self.makespan > 0, 1.0 - out, 0.0)
 
     def result(self, ci: int, ti: int) -> SimResult:
-        return SimResult(
+        res = SimResult(
             makespan=float(self.makespan[ci, ti]),
             time_base=self.time_base,
             n_faults=int(self.n_faults[ci, ti]),
@@ -187,6 +202,17 @@ class BatchResult:
             time_down=float(self.time_down[ci, ti]),
             time_lost=float(self.time_lost[ci, ti]),
         )
+        if self.n_replans is not None:
+            res.n_replans = int(self.n_replans[ci, ti])
+        if self.final_period is not None:
+            res.final_period = float(self.final_period[ci, ti])
+        if self.final_threshold is not None:
+            res.final_threshold = float(self.final_threshold[ci, ti])
+        if self.est_recall is not None:
+            res.est_recall = float(self.est_recall[ci, ti])
+        if self.est_precision is not None:
+            res.est_precision = float(self.est_precision[ci, ti])
+        return res
 
 
 # ---------------------------------------------------------------------------
@@ -226,9 +252,17 @@ class _LaneState:
         self.def_time = np.full((L, 4), np.inf, f8)
         self.def_seq = np.full((L, 4), _BIG_SEQ, np.int64)
         self.next_seq = np.zeros(L, np.int64)
-        # Counters.
+        # Per-lane online-estimator state (adaptive lanes only; SoA form of
+        # the scalar engine's integer counters + the (r, p) last planned on).
         i8 = np.int64
+        self.ad_ntp = np.zeros(L, i8)    # confirmed (true) predictions
+        self.ad_nfp = np.zeros(L, i8)    # false predictions
+        self.ad_nuf = np.zeros(L, i8)    # unpredicted faults
+        self.ad_pr = np.zeros(L, f8)     # recall last planned on
+        self.ad_pp = np.zeros(L, f8)     # precision last planned on
+        # Counters.
         self.n_faults = np.zeros(L, i8)
+        self.n_replans = np.zeros(L, i8)
         self.n_faults_hit = np.zeros(L, i8)
         self.n_predictions = np.zeros(L, i8)
         self.n_trusted = np.zeros(L, i8)
@@ -358,6 +392,7 @@ def _run_lanes(
     cp: float,
     lane_wmode: np.ndarray | None = None,
     lane_wperiod: np.ndarray | None = None,
+    lane_adaptive: Sequence | None = None,
 ) -> _LaneState:
     """Run all lanes to completion; returns the final lane state."""
     L = lane_trace.size
@@ -368,6 +403,34 @@ def _run_lanes(
         lane_wmode = np.zeros(L, dtype=np.int8)
     if lane_wperiod is None:
         lane_wperiod = np.zeros(L, dtype=np.float64)
+
+    # Adaptive lanes: the plan is a per-lane (period, threshold) pair the
+    # estimator mutates, so those arrays become lane state.
+    ad_active = np.array([a is not None for a in lane_adaptive],
+                         dtype=bool) if lane_adaptive is not None \
+        else np.zeros(L, dtype=bool)
+    ad_minp = ad_minf = ad_tol = None
+    if ad_active.any():
+        bad_trust = ad_active & ~np.isin(lane_trust_kind,
+                                         (_TRUST_NEVER, _TRUST_THRESHOLD))
+        if bad_trust.any():
+            raise ValueError(
+                "adaptive re-planning requires a Threshold or Never trust "
+                "policy (the plan sets the threshold)")
+        lane_period = lane_period.astype(np.float64, copy=True)
+        lane_trust_kind = lane_trust_kind.copy()
+        lane_trust_param = lane_trust_param.copy()
+        # Never-trust adaptive lanes become threshold lanes at +inf so a
+        # re-plan only has to move the parameter (scalar: ad_thr = inf).
+        never = ad_active & (lane_trust_kind == _TRUST_NEVER)
+        lane_trust_kind[never] = _TRUST_THRESHOLD
+        lane_trust_param[never] = np.inf
+        ad_minp = np.array([(a.min_preds if a else 0)
+                            for a in lane_adaptive], dtype=np.int64)
+        ad_minf = np.array([(a.min_faults if a else 0)
+                            for a in lane_adaptive], dtype=np.int64)
+        ad_tol = np.array([(a.tol if a else 0.0)
+                           for a in lane_adaptive], dtype=np.float64)
     within = lane_wmode == _WMODE_WITHIN
     if np.any(within & (lane_wperiod <= cp)):
         bad = float(lane_wperiod[within & (lane_wperiod <= cp)][0])
@@ -377,6 +440,43 @@ def _run_lanes(
     lane_wwp = np.where(within, lane_wperiod - cp, np.inf)
 
     st = _LaneState(L, lane_period, platform.c, time_base)
+    if ad_active.any():
+        from repro.predictors.estimator import P_HAT_MIN, maybe_replan
+        st.ad_pr[:] = [a.prior_recall if a else 0.0 for a in lane_adaptive]
+        st.ad_pp[:] = [a.prior_precision if a else 0.0
+                       for a in lane_adaptive]
+
+    def _adaptive_replan(lanes: np.ndarray) -> None:
+        """Estimator step for the (already counter-updated) adaptive lanes.
+
+        The vectorized prefilter evaluates the confidence gate and the
+        hysteresis with the same integer/float operations as
+        :func:`repro.predictors.estimator.maybe_replan`, then each
+        surviving lane re-plans through that very function — so replan
+        points and plans are bit-for-bit the scalar engine's.
+        """
+        ntp, nfp, nuf = st.ad_ntp[lanes], st.ad_nfp[lanes], st.ad_nuf[lanes]
+        gate = ((ntp + nfp) >= ad_minp[lanes]) \
+            & ((ntp + nuf) >= ad_minf[lanes])
+        if not gate.any():
+            return
+        sub = lanes[gate]
+        ntp, nfp, nuf = ntp[gate], nfp[gate], nuf[gate]
+        r_hat = ntp / (ntp + nuf)
+        p_hat = np.maximum(ntp / (ntp + nfp), P_HAT_MIN)
+        moved = (np.abs(r_hat - st.ad_pr[sub]) > ad_tol[sub]) \
+            | (np.abs(p_hat - st.ad_pp[sub]) > ad_tol[sub])
+        for lane in sub[moved]:
+            out = maybe_replan(lane_adaptive[lane], platform, cp,
+                               int(st.ad_ntp[lane]), int(st.ad_nfp[lane]),
+                               int(st.ad_nuf[lane]),
+                               float(st.ad_pr[lane]), float(st.ad_pp[lane]))
+            if out is None:      # pragma: no cover - the prefilter is exact
+                continue
+            st.ad_pr[lane], st.ad_pp[lane], lane_period[lane], \
+                lane_trust_param[lane] = out
+            st.n_replans[lane] += 1
+
     cursor = np.zeros(L, dtype=np.int64)
     # Phase durations indexed by phase code (`_Machine._phase_duration`).
     dur_table = np.array([0.0, platform.c, cp, platform.d, platform.r])
@@ -435,10 +535,16 @@ def _run_lanes(
             is_fault = take_def | (take_trace & (k_tr == FAULT_UNPRED))
             f_idx = idx[is_fault]
             if f_idx.size:
-                st.n_faults[idx[take_trace & (k_tr == FAULT_UNPRED)]] += 1
+                uf_idx = idx[take_trace & (k_tr == FAULT_UNPRED)]
+                st.n_faults[uf_idx] += 1
                 st.target[f_idx] = np.where(take_def[is_fault],
                                             df_t[is_fault], t_tr[is_fault])
                 st.pc[f_idx] = _PC_FAULT
+                # Unpredicted faults are recall observations.
+                upd = uf_idx[ad_active[uf_idx]]
+                if upd.size:
+                    st.ad_nuf[upd] += 1
+                    _adaptive_replan(upd)
 
             # Prediction events (true or false) announced for date t.
             is_pred = take_trace & (k_tr != FAULT_UNPRED)
@@ -448,6 +554,14 @@ def _run_lanes(
                 t = t_tr[is_pred]
                 is_true = k_tr[is_pred] == FAULT_PRED
                 st.n_faults[p_idx[is_true]] += 1
+                # Prediction outcomes are observed at announcement; the
+                # re-planned threshold governs this very decision (the
+                # scalar engine updates at the same point).
+                upd = p_idx[ad_active[p_idx]]
+                if upd.size:
+                    st.ad_ntp[p_idx[is_true & ad_active[p_idx]]] += 1
+                    st.ad_nfp[p_idx[~is_true & ad_active[p_idx]]] += 1
+                    _adaptive_replan(upd)
                 # Per-event window, falling back to the lane inexact_window
                 # (the scalar simulate() precedence).
                 if bank.windows is not None:
@@ -587,6 +701,18 @@ def _run_lanes(
 
             adv = adv[(st.now[adv] < st.target[adv]) & ~st.finished[adv]]
 
+    # Final-plan / estimator diagnostics (mirrors the scalar SimResult
+    # fields: static lanes report their period and the -1 sentinels).
+    st.final_period = lane_period
+    st.final_threshold = np.where(ad_active, lane_trust_param, -1.0)
+    er = np.full(L, -1.0)
+    ep = np.full(L, -1.0)
+    denom_f = st.ad_ntp + st.ad_nuf
+    denom_p = st.ad_ntp + st.ad_nfp
+    np.divide(st.ad_ntp, denom_f, out=er, where=ad_active & (denom_f > 0))
+    np.divide(st.ad_ntp, denom_p, out=ep, where=ad_active & (denom_p > 0))
+    st.est_recall = er
+    st.est_precision = ep
     return st
 
 
@@ -604,8 +730,9 @@ def window_mode_code(mode: str) -> int:
 
 
 def _as_candidate_arrays(
-    periods, trust, inexact_window, window_mode, window_period, n_cand: int,
-) -> tuple[np.ndarray, ...]:
+    periods, trust, inexact_window, window_mode, window_period, adaptive,
+    n_cand: int,
+) -> tuple:
     period_arr = np.asarray(periods, dtype=np.float64).reshape(n_cand)
     if trust is None or isinstance(trust, TrustPolicy):
         trust_seq = [trust or NeverTrust()] * n_cand
@@ -625,7 +752,15 @@ def _as_candidate_arrays(
                          dtype=np.int8).reshape(n_cand)
     wperiod_arr = np.broadcast_to(
         np.asarray(window_period, dtype=np.float64), (n_cand,)).copy()
-    return period_arr, kind_arr, param_arr, window_arr, wmode_arr, wperiod_arr
+    if adaptive is None or not isinstance(adaptive, (list, tuple)):
+        adaptive_seq = [adaptive] * n_cand
+    else:
+        adaptive_seq = list(adaptive)
+        if len(adaptive_seq) != n_cand:
+            raise ValueError(f"{len(adaptive_seq)} adaptive configs for "
+                             f"{n_cand} periods")
+    return (period_arr, kind_arr, param_arr, window_arr, wmode_arr,
+            wperiod_arr, adaptive_seq)
 
 
 def simulate_lanes(
@@ -641,6 +776,7 @@ def simulate_lanes(
     seeds: Sequence[int],
     window_modes: Sequence[str] | None = None,
     window_periods: Sequence[float] | None = None,
+    adaptives: Sequence | None = None,
     start: float = 0.0,
 ) -> np.ndarray:
     """Simulate an explicit list of (trace, candidate) lanes; returns the
@@ -652,7 +788,7 @@ def simulate_lanes(
     is bit-for-bit ``simulate(traces[trace_indices[j]], ..., periods[j],
     trust=trusts[j], inexact_window=windows[j],
     window_mode=window_modes[j], window_period=window_periods[j],
-    rng=np.random.default_rng(seeds[j]))``.
+    adaptive=adaptives[j], rng=np.random.default_rng(seeds[j]))``.
     """
     lane_trace = np.asarray(trace_indices, dtype=np.int64)
     lane_period = np.asarray(periods, dtype=np.float64)
@@ -668,16 +804,18 @@ def simulate_lanes(
     lane_wperiod = (np.zeros(lane_trace.size, dtype=np.float64)
                     if window_periods is None else
                     np.asarray(window_periods, dtype=np.float64))
+    lane_adaptive = (list(adaptives) if adaptives is not None
+                     else [None] * lane_trace.size)
     if not (lane_trace.size == lane_period.size == lane_kind.size
             == lane_window.size == lane_seed.size == lane_wmode.size
-            == lane_wperiod.size):
+            == lane_wperiod.size == len(lane_adaptive)):
         raise ValueError("lane array lengths differ")
     if lane_trace.size == 0:
         return np.empty(0, dtype=np.float64)
     bank = _pack_bank(traces, start)
     st = _run_lanes(bank, platform, time_base, lane_trace, lane_period,
                     lane_kind, lane_param, lane_window, lane_seed, cp,
-                    lane_wmode, lane_wperiod)
+                    lane_wmode, lane_wperiod, lane_adaptive)
     return st.now
 
 
@@ -692,6 +830,7 @@ def simulate_batch(
     inexact_window: float | Sequence[float] = 0.0,
     window_mode: str | Sequence[str] = "instant",
     window_period: float | Sequence[float] = 0.0,
+    adaptive=None,
     start: float = 0.0,
     trace_seeds: Sequence[int] | int | None = None,
     backend: str = "numpy",
@@ -713,13 +852,19 @@ def simulate_batch(
         or "within" (see :func:`repro.core.simulator.simulate`).
       window_period: scalar or per-candidate in-window proactive period
         T_p (> C_p) for "within" candidates.
+      adaptive: one :class:`repro.predictors.AdaptiveConfig` (or one per
+        candidate, ``None`` entries = static) to run the online (r-hat,
+        p-hat) estimator per lane and re-plan period / trust threshold as
+        the gated estimates drift (see :func:`repro.core.simulator.simulate`).
       start: job start offset into the traces (paper: one year).
       trace_seeds: per-trace RNG seeds; lane (c, t) draws from a fresh
         ``default_rng(trace_seeds[t])`` exactly like the scalar engine does
         per (strategy, trace) pair.  A scalar seeds every trace alike;
         ``None`` means seed 0 (the scalar engine's default rng).
-      backend: ``"numpy"`` (default) or ``"jax"`` (experimental; exact
-        predictions + deterministic trust only, requires x64).
+      backend: ``"numpy"`` (default) or ``"jax"`` (experimental; standard
+        trust policies + inexact windows via pre-drawn randomness tables;
+        no window-bearing traces, "within" modes or adaptive candidates;
+        requires x64).
 
     Returns:
       :class:`BatchResult` with ``(n_candidates, n_traces)`` arrays.  Each
@@ -731,8 +876,9 @@ def simulate_batch(
         isinstance(periods, np.ndarray) and periods.ndim == 0)
     n_cand = 1 if scalar_period else len(periods)
     (period_arr, kind_arr, param_arr, window_arr, wmode_arr,
-     wperiod_arr) = _as_candidate_arrays(
-        periods, trust, inexact_window, window_mode, window_period, n_cand)
+     wperiod_arr, adaptive_seq) = _as_candidate_arrays(
+        periods, trust, inexact_window, window_mode, window_period,
+        adaptive, n_cand)
 
     n_traces = len(traces)
     if trace_seeds is None:
@@ -752,17 +898,22 @@ def simulate_batch(
     lane_wmode = np.repeat(wmode_arr, n_traces)
     lane_wperiod = np.repeat(wperiod_arr, n_traces)
     lane_seed = np.tile(seeds, n_cand)
+    lane_adaptive = [a for a in adaptive_seq for _ in range(n_traces)]
 
     if backend == "jax":
         if np.any(wmode_arr == _WMODE_WITHIN) or bank.windows is not None:
             raise ValueError(
-                "backend='jax' supports exact-date predictions only "
+                "backend='jax' supports per-run inexact windows only "
                 "(no window-bearing traces or 'within' window modes); "
                 "use backend='numpy'")
+        if any(a is not None for a in adaptive_seq):
+            raise ValueError("backend='jax' does not support adaptive "
+                             "re-planning (per-lane cubic root solves); "
+                             "use backend='numpy'")
         from .batch_jax import run_lanes_jax
         out = run_lanes_jax(bank, platform, time_base, lane_trace,
                             lane_period, lane_kind, lane_param, lane_window,
-                            cp)
+                            lane_seed, cp)
         shape = (n_cand, n_traces)
         return BatchResult(
             makespan=out["makespan"].reshape(shape), time_base=time_base,
@@ -777,13 +928,18 @@ def simulate_batch(
             time_prockpt=out["time_prockpt"].reshape(shape),
             time_down=out["time_down"].reshape(shape),
             time_lost=out["time_lost"].reshape(shape),
+            n_replans=np.zeros(shape, dtype=np.int64),
+            final_period=lane_period.reshape(shape).copy(),
+            final_threshold=np.full(shape, -1.0),
+            est_recall=np.full(shape, -1.0),
+            est_precision=np.full(shape, -1.0),
         )
     if backend != "numpy":
         raise ValueError(f"unknown backend {backend!r}")
 
     st = _run_lanes(bank, platform, time_base, lane_trace, lane_period,
                     lane_kind, lane_param, lane_window, lane_seed, cp,
-                    lane_wmode, lane_wperiod)
+                    lane_wmode, lane_wperiod, lane_adaptive)
     shape = (n_cand, n_traces)
     return BatchResult(
         makespan=st.now.reshape(shape), time_base=time_base,
@@ -798,4 +954,9 @@ def simulate_batch(
         time_prockpt=st.time_prockpt.reshape(shape),
         time_down=st.time_down.reshape(shape),
         time_lost=st.time_lost.reshape(shape),
+        n_replans=st.n_replans.reshape(shape),
+        final_period=st.final_period.reshape(shape),
+        final_threshold=st.final_threshold.reshape(shape),
+        est_recall=st.est_recall.reshape(shape),
+        est_precision=st.est_precision.reshape(shape),
     )

@@ -7,13 +7,20 @@ can be jitted and dispatched to an accelerator.  The carried state is pure
 structure-of-arrays, which is exactly the layout an XLA backend wants; no
 Pallas kernel is needed because every step is elementwise over lanes.
 
-Scope (checked, raises otherwise):
+Lane randomness (FixedProbability trust draws, inexact-window fault
+offsets) is **pre-drawn** per lane: every scalar-engine draw consumes
+exactly one float64 from the lane's ``default_rng(seed)`` stream
+(``uniform(0, w)`` is bit-for-bit ``w * random()``), so the first
+``n_draw_sites`` stream values are tabulated up front and the loop carries
+one cursor per lane, consuming ``table[lane, cursor]`` at exactly the
+scalar engine's draw sites — announcement-time window offsets and
+decision-time trust draws stay bit-for-bit without any in-loop RNG.
 
-  * deterministic trust policies only (Never / Always / Threshold) — the
-    FixedProbability policy draws per-lane randomness at state-dependent
-    decision points, which has no race-free vectorized equivalent;
-  * exact predictions only (``inexact_window == 0``) — uncertainty offsets
-    are also per-lane draw sites;
+Remaining scope limits (checked, raises otherwise):
+
+  * no per-event window traces (``EventTrace.windows``) and no "within"
+    window modes — rejected in :func:`repro.core.batch.simulate_batch`;
+  * no adaptive re-planning candidates (per-lane cubic root solves);
   * requires ``jax_enable_x64`` so the float64 op sequence matches the
     scalar engine bit-for-bit (float32 drifts far beyond the 1e-9
     equivalence contract).
@@ -29,7 +36,7 @@ from typing import Any
 import numpy as np
 
 from .simulator import _CKPT, _DOWN, _PROCKPT, _RECOVER, _WORK
-from .traces import FAULT_PRED, FAULT_UNPRED
+from .traces import FALSE_PRED, FAULT_PRED, FAULT_UNPRED
 from .waste import Platform
 
 __all__ = ["run_lanes_jax"]
@@ -40,10 +47,39 @@ _DEF_SLOTS = 8          # deferred-fault capacity; overflow is detected
 _BIG_SEQ = np.iinfo(np.int64).max
 
 
+def _draw_tables(bank, lane_trace: np.ndarray, lane_kind: np.ndarray,
+                 lane_window: np.ndarray,
+                 lane_seed: np.ndarray) -> np.ndarray:
+    """Per-lane stream-prefix tables of pre-drawn uniforms.
+
+    A lane consumes at most one draw per true prediction (the in-window
+    fault offset, when the lane has an inexact window) plus one per
+    prediction event (the FixedProbability trust draw, consumed only when
+    the decision is actually reached) — so the first
+    ``n_true·[w>0] + n_pred·[fixed_q]`` values of the lane's
+    ``default_rng(seed)`` stream bound every draw the scalar engine can
+    make, in consumption order.
+    """
+    n_true = (bank.kinds == FAULT_PRED).sum(axis=1)
+    n_pred = ((bank.kinds == FAULT_PRED)
+              | (bank.kinds == FALSE_PRED)).sum(axis=1)
+    need = (n_true[lane_trace] * (lane_window > 0.0)
+            + n_pred[lane_trace] * (lane_kind == _TRUST_FIXED_Q))
+    need = need.astype(np.int64)
+    width = max(1, int(need.max()) if need.size else 1)
+    tab = np.zeros((lane_trace.size, width), dtype=np.float64)
+    for i, n in enumerate(need):
+        if n:
+            tab[i, :n] = np.random.default_rng(int(lane_seed[i])).random(
+                int(n))
+    return tab
+
+
 def run_lanes_jax(bank, platform: Platform, time_base: float,
                   lane_trace: np.ndarray, lane_period: np.ndarray,
                   lane_kind: np.ndarray, lane_param: np.ndarray,
-                  lane_window: np.ndarray, cp: float) -> dict[str, Any]:
+                  lane_window: np.ndarray, lane_seed: np.ndarray,
+                  cp: float) -> dict[str, Any]:
     import jax
     import jax.numpy as jnp
     from jax import lax
@@ -53,12 +89,6 @@ def run_lanes_jax(bank, platform: Platform, time_base: float,
             "the jax backend needs float64 state for the scalar-equivalence "
             "contract; enable it (jax.config.update('jax_enable_x64', True) "
             "or JAX_ENABLE_X64=1) or use backend='numpy'")
-    if np.any(lane_window > 0.0):
-        raise ValueError("backend='jax' supports exact predictions only "
-                         "(inexact_window == 0); use backend='numpy'")
-    if np.any(lane_kind == _TRUST_FIXED_Q):
-        raise ValueError("backend='jax' supports deterministic trust "
-                         "policies only; use backend='numpy'")
     if np.any(lane_period < platform.c):
         raise ValueError(f"period below checkpoint {platform.c}")
 
@@ -75,6 +105,11 @@ def run_lanes_jax(bank, platform: Platform, time_base: float,
     period = jnp.asarray(lane_period)
     kind = jnp.asarray(lane_kind.astype(np.int32))
     param = jnp.asarray(lane_param)
+    window = jnp.asarray(lane_window)
+    tab = jnp.asarray(_draw_tables(bank, lane_trace, lane_kind, lane_window,
+                                   lane_seed))
+    tab_width = tab.shape[1]
+    lane_ids = jnp.arange(L)
 
     def push_deferred(def_time, def_seq, next_seq, overflow, push, dates):
         empty = jnp.isinf(def_time)
@@ -123,17 +158,26 @@ def run_lanes_jax(bank, platform: Platform, time_base: float,
         n_predictions = s["n_predictions"] + is_pred
         is_true = is_pred & (k_tr == FAULT_PRED)
         n_faults = n_faults + is_true      # counted at announcement
+        # Inexact windows: the true fault materializes at t + w * u with u
+        # the next pre-drawn stream value (the scalar engine's
+        # announcement-time ``rng.uniform(0, w)`` draw, bit-for-bit).
+        draw_win = is_true & (window > 0.0)
+        u = tab[lane_ids, jnp.minimum(s["cur"], tab_width - 1)]
+        fault_date = jnp.where(draw_win, t_tr + window * u, t_tr)
+        cur = s["cur"] + draw_win
         ckpt_start = t_tr - cp
         honour = is_pred & (ckpt_start >= s["now"])
         pc = jnp.where(honour, _PC_PRED, pc)
         target = jnp.where(honour, ckpt_start, target)
         pred_t = jnp.where(honour, t_tr, s["pred_t"])
+        pred_fd = jnp.where(honour, fault_date, s["pred_fd"])
         pred_true = jnp.where(honour, is_true, s["pred_true"])
         ignored = is_pred & ~honour
         n_ignored = s["n_ignored"] + ignored
         push = ignored & is_true
         def_time, def_seq, next_seq, overflow = push_deferred(
-            def_time, def_seq, s["next_seq"], s["overflow"], push, t_tr)
+            def_time, def_seq, s["next_seq"], s["overflow"], push,
+            fault_date)
 
         # -- 2a. fault arrivals ---------------------------------------------
         now, done, saved = s["now"], s["done"], s["saved"]
@@ -161,9 +205,16 @@ def run_lanes_jax(bank, platform: Platform, time_base: float,
         arr_p = active & (pc == _PC_PRED) & (now >= target)
         working = arr_p & (phase == _WORK)
         offset = pred_t - s["period_start"]
+        # FixedProbability trust: the scalar engine draws only when the
+        # decision is reached (phase == WORK at the checkpoint-start
+        # date), so the cursor advances exactly there.
+        draw_q = working & (kind == _TRUST_FIXED_Q)
+        u2 = tab[lane_ids, jnp.minimum(cur, tab_width - 1)]
+        cur = cur + draw_q
         trusted = working & ((kind == _TRUST_ALWAYS)
                              | ((kind == _TRUST_THRESHOLD)
-                                & (offset >= param)))
+                                & (offset >= param))
+                             | (draw_q & (u2 < param)))
         phase = jnp.where(trusted, _PROCKPT, phase)
         phase_end = jnp.where(trusted, pred_t, phase_end)
         n_trusted = s["n_trusted"] + trusted
@@ -171,7 +222,7 @@ def run_lanes_jax(bank, platform: Platform, time_base: float,
         n_ignored = n_ignored + (arr_p & ~working)
         push2 = arr_p & pred_true
         def_time, def_seq, next_seq, overflow = push_deferred(
-            def_time, def_seq, next_seq, overflow, push2, pred_t)
+            def_time, def_seq, next_seq, overflow, push2, pred_fd)
         pc = jnp.where(arr_p, _PC_POP, pc)
         target = jnp.where(arr_p, -jnp.inf, target)
 
@@ -227,7 +278,8 @@ def run_lanes_jax(bank, platform: Platform, time_base: float,
             "period_start": period_start, "phase": phase,
             "phase_end": phase_end, "wpp": wpp, "w_rem": w_rem,
             "finished": finished, "pc": pc, "target": target,
-            "cursor": cursor, "pred_t": pred_t, "pred_true": pred_true,
+            "cursor": cursor, "pred_t": pred_t, "pred_fd": pred_fd,
+            "pred_true": pred_true, "cur": cur,
             "def_time": def_time, "def_seq": def_seq, "next_seq": next_seq,
             "overflow": overflow,
             "n_faults": n_faults, "n_faults_hit": n_faults_hit,
@@ -251,7 +303,8 @@ def run_lanes_jax(bank, platform: Platform, time_base: float,
         "finished": jnp.zeros(L, bool),
         "pc": jnp.full(L, _PC_POP, jnp.int32),
         "target": jnp.full(L, -jnp.inf, f8),
-        "cursor": zi, "pred_t": zf, "pred_true": jnp.zeros(L, bool),
+        "cursor": zi, "pred_t": zf, "pred_fd": zf,
+        "pred_true": jnp.zeros(L, bool), "cur": zi,
         "def_time": jnp.full((L, K), jnp.inf, f8),
         "def_seq": jnp.full((L, K), _BIG_SEQ, i8),
         "next_seq": n_ev_lane.astype(i8),

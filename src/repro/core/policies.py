@@ -49,7 +49,10 @@ class Strategy:
 
     ``window_mode`` / ``window_period`` select the prediction-window action
     policy (arXiv:1302.4558; see :func:`repro.core.simulator.simulate`):
-    the defaults reproduce the exact-date behaviour.
+    the defaults reproduce the exact-date behaviour.  ``adaptive`` (an
+    :class:`repro.predictors.AdaptiveConfig`) turns on online (r, p)
+    estimation with re-planning: ``period`` and ``trust`` then only seed
+    the initial plan.
     """
 
     name: str
@@ -58,6 +61,7 @@ class Strategy:
     inexact_window: float = 0.0  # simulation-side date uncertainty
     window_mode: str = "instant"
     window_period: float = 0.0   # in-window proactive period ("within")
+    adaptive: object | None = None  # repro.predictors.AdaptiveConfig
 
     def with_period(self, period: float) -> "Strategy":
         return dataclasses.replace(self, period=period)

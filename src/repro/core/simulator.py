@@ -137,6 +137,13 @@ class SimResult:
     time_prockpt: float = 0.0      # proactive checkpointing time
     time_down: float = 0.0         # downtime + recovery
     time_lost: float = 0.0         # destroyed (re-executed) work
+    # Adaptive re-planning diagnostics (repro.predictors.estimator); the
+    # sentinels keep non-adaptive runs comparable across engines.
+    n_replans: int = 0
+    final_period: float = -1.0     # last planned period (static: the period)
+    final_threshold: float = -1.0  # last planned trust threshold (-1: static)
+    est_recall: float = -1.0       # final r-hat (-1: no estimator / no data)
+    est_precision: float = -1.0    # final p-hat
 
     @property
     def waste(self) -> float:
@@ -329,6 +336,7 @@ def simulate(
     window_period: float = 0.0,
     start: float = 0.0,
     rng: np.random.Generator | None = None,
+    adaptive=None,
 ) -> SimResult:
     """Simulate one execution; returns the :class:`SimResult`.
 
@@ -352,6 +360,12 @@ def simulate(
         ``window_mode="within"``.
       start: job start offset into the trace (paper: one year).
       rng: used for the trust policy randomness and inexact fault dates.
+      adaptive: an :class:`repro.predictors.AdaptiveConfig` to run the
+        online (r-hat, p-hat) estimator and re-plan (period, trust
+        threshold) from the gated estimates as they drift.  Requires a
+        constant initial period and a Threshold/Never trust policy (the
+        plan *is* the threshold); the re-planned period takes effect at
+        the next period start.
     """
     cp = platform.c if cp is None else cp
     trust = trust or NeverTrust()
@@ -364,8 +378,39 @@ def simulate(
         raise ValueError(f"window_period {window_period} <= C_p {cp}: "
                          f"no work fits between in-window checkpoints")
 
+    # Adaptive re-planning state (repro.predictors.estimator): integer
+    # outcome counters, the (r, p) last planned on, and the live plan.
+    ad_thr = math.inf
+    if adaptive is not None:
+        if not isinstance(period, (int, float)):
+            raise ValueError("adaptive re-planning needs a constant "
+                             "initial period")
+        if isinstance(trust, ThresholdTrust):
+            ad_thr = trust.threshold
+        elif isinstance(trust, NeverTrust):
+            ad_thr = math.inf
+        else:
+            raise ValueError(
+                "adaptive re-planning requires a Threshold or Never trust "
+                f"policy (the plan sets the threshold), got {trust!r}")
+        ad_ntp = ad_nfp = ad_nuf = 0
+        ad_planned_r = adaptive.prior_recall
+        ad_planned_p = adaptive.prior_precision
+        ad_period = float(period)
+
     res = SimResult(makespan=0.0, time_base=time_base)
     m = _Machine(platform, cp, period, time_base, res)
+
+    def _ad_replan() -> None:
+        nonlocal ad_thr, ad_planned_r, ad_planned_p, ad_period
+        from repro.predictors.estimator import maybe_replan
+        out = maybe_replan(adaptive, platform, cp, ad_ntp, ad_nfp, ad_nuf,
+                           ad_planned_r, ad_planned_p)
+        if out is None:
+            return
+        ad_planned_r, ad_planned_p, ad_period, ad_thr = out
+        m.period_fn = (lambda t, _T=ad_period: _T)
+        res.n_replans += 1
 
     # Shift the trace so the job starts at time 0.
     sel = trace.times >= start
@@ -394,6 +439,10 @@ def simulate(
         if ev == _EV_FAULT:
             if payload == _FAULT_FROM_TRACE:
                 res.n_faults += 1
+                if adaptive is not None:
+                    # An unpredicted fault: a recall observation.
+                    ad_nuf += 1
+                    _ad_replan()
             m.advance_to(t)
             if m.finished:
                 break
@@ -403,6 +452,15 @@ def simulate(
         # A prediction announced for date t (true iff payload == FAULT_PRED).
         res.n_predictions += 1
         is_true = payload == FAULT_PRED
+        if adaptive is not None:
+            # The prediction's outcome is observed at announcement (see
+            # repro.predictors.estimator); the re-planned threshold takes
+            # effect from this very decision on.
+            if is_true:
+                ad_ntp += 1
+            else:
+                ad_nfp += 1
+            _ad_replan()
         w_i = inexact_window if w < 0.0 else w
         fault_date = t
         if is_true:
@@ -422,7 +480,8 @@ def simulate(
                 break
             if m.phase == _WORK:
                 offset = t - m.period_start
-                if trust.trust(offset, rng):
+                if (offset >= ad_thr) if adaptive is not None \
+                        else trust.trust(offset, rng):
                     acted = m.try_proactive(t)
                     if acted:
                         res.n_trusted += 1
@@ -448,6 +507,15 @@ def simulate(
 
     m.run_to_completion()
     res.makespan = m.now
+    if adaptive is not None:
+        res.final_period = ad_period
+        res.final_threshold = ad_thr
+        if ad_ntp + ad_nuf > 0:
+            res.est_recall = ad_ntp / (ad_ntp + ad_nuf)
+        if ad_ntp + ad_nfp > 0:
+            res.est_precision = ad_ntp / (ad_ntp + ad_nfp)
+    elif isinstance(period, (int, float)):
+        res.final_period = float(period)
     return res
 
 

@@ -5,8 +5,13 @@ Produces the three event streams the simulator consumes:
                             log-based Empirical), either one platform-level
                             stream scaled to the platform MTBF mu, or the
                             superposition of N per-processor streams;
-  * predicted flags       — each fault is predicted with probability r (recall);
-  * false-prediction times — renewal process with mean mu_P/(1-p) = p mu /(r (1-p)).
+  * predicted flags       — emitted by a generative predictor model
+                            (:mod:`repro.predictors`); the default
+                            ``oracle`` predicts each fault with
+                            probability r (recall);
+  * false-prediction times — also predictor-emitted; the oracle uses a
+                            renewal process with mean mu_P/(1-p)
+                            = p mu /(r (1-p)).
 
 Event encoding used throughout: structured arrays (time, kind) with kinds
   FAULT_UNPRED  actual fault, not predicted
@@ -312,6 +317,7 @@ def make_event_trace(
     false_pred_dist: Distribution | None = None,
     n_processors: int | None = None,
     window: float = 0.0,
+    predictor_model=None,
 ) -> EventTrace:
     """Build the merged event trace for one simulated instance (paper §5.1).
 
@@ -320,13 +326,19 @@ def make_event_trace(
     (its mean is interpreted as mu_ind = mu * n).  Otherwise a single
     platform-level stream rescaled to mean ``mu`` is used.
 
-    False predictions follow ``false_pred_dist`` (default: same family as
-    the fault distribution, per §5.2) rescaled to mean p*mu/(r*(1-p)).
+    The prediction stream is generated by ``predictor_model`` (a
+    :class:`repro.predictors.PredictorModel`), defaulting to the paper's
+    ``oracle`` stamping: each fault predicted with probability r, false
+    predictions from one renewal stream of ``false_pred_dist`` (same
+    family as the fault distribution by default, per §5.2) rescaled to
+    mean p*mu/(r*(1-p)).
 
     ``window > 0`` stamps every prediction event with the announced window
     length I (arXiv:1302.4558): the fault materializes in [t, t+I], the
     offset being drawn by the simulator.  ``window=0`` produces exact-date
-    traces identical to before.
+    traces identical to before.  Per-event windows emitted by the
+    predictor model (e.g. ``lead_time`` sampled leads) take precedence
+    over the constant stamping.
     """
     if n_processors:
         faults = superposed_trace(fault_dist.rescaled(mu * n_processors),
@@ -334,32 +346,41 @@ def make_event_trace(
     else:
         faults = renewal_trace(fault_dist.rescaled(mu), horizon, rng)
 
-    predicted = rng.random(faults.size) < recall
-    kinds = np.where(predicted, FAULT_PRED, FAULT_UNPRED).astype(np.int8)
+    if predictor_model is None:
+        from repro.predictors.models import OraclePredictor
+        predictor_model = OraclePredictor(recall, precision)
+    stream = predictor_model.predict(
+        faults, mu=mu, horizon=horizon, rng=rng,
+        false_dist=false_pred_dist or fault_dist)
 
-    if recall > 0.0 and precision < 1.0:
-        mean_false = precision * mu / (recall * (1.0 - precision))
-        fdist = (false_pred_dist or fault_dist).rescaled(mean_false)
-        false_preds = renewal_trace(fdist, horizon, rng)
-    else:
-        false_preds = np.empty(0, dtype=np.float64)
-
-    return _merge_events(faults, kinds, false_preds, horizon, window=window)
+    return _merge_events(faults, stream.kinds, stream.false_times, horizon,
+                         window=window, true_windows=stream.true_windows,
+                         false_windows=stream.false_windows)
 
 
 def _merge_events(faults: np.ndarray, kinds: np.ndarray,
                   false_preds: np.ndarray, horizon: float,
-                  window: float = 0.0) -> EventTrace:
+                  window: float = 0.0,
+                  true_windows: np.ndarray | None = None,
+                  false_windows: np.ndarray | None = None) -> EventTrace:
     times = np.concatenate([faults, false_preds])
     all_kinds = np.concatenate(
         [kinds, np.full(false_preds.size, FALSE_PRED, dtype=np.int8)])
     order = np.argsort(times, kind="stable")
     times, all_kinds = times[order], all_kinds[order]
     windows = None
-    if window > 0.0:
+    if window > 0.0 or true_windows is not None or false_windows is not None:
         # Prediction events (true and false) announce [t, t+I]; plain
-        # faults carry no window.
-        windows = np.where(all_kinds == FAULT_UNPRED, 0.0, float(window))
+        # faults carry no window.  Per-event model windows win over the
+        # constant stamping.
+        wf = (np.asarray(true_windows, dtype=np.float64)
+              if true_windows is not None
+              else np.full(kinds.size, float(window)))
+        wf = np.where(kinds == FAULT_UNPRED, 0.0, wf)
+        wfp = (np.asarray(false_windows, dtype=np.float64)
+               if false_windows is not None
+               else np.full(false_preds.size, float(window)))
+        windows = np.concatenate([wf, wfp])[order]
     return EventTrace(times, all_kinds, horizon, windows=windows)
 
 
@@ -375,14 +396,15 @@ def make_event_trace_bank(
     n_processors: int | None = None,
     n_traces: int = 1,
     window: float = 0.0,
+    predictor_model=None,
 ) -> list[EventTrace]:
     """A whole bank of merged event traces sampled from one generator.
 
     The vectorized counterpart of calling :func:`make_event_trace` once per
-    trace: fault streams (including the N-processor superposition path),
-    prediction flags and false-prediction streams for the entire bank are
-    each drawn in shared RNG waves.  Statistically identical to per-trace
-    generation, but the draw order differs, so banks are reproducible per
+    trace: fault streams (including the N-processor superposition path)
+    and the predictor model's bank-level prediction streams are each drawn
+    in shared RNG waves.  Statistically identical to per-trace generation,
+    but the draw order differs, so banks are reproducible per
     ``(rng seed, n_traces)`` — not per trace index.
     """
     if n_processors:
@@ -393,20 +415,17 @@ def make_event_trace_bank(
         fault_bank = renewal_trace_bank(fault_dist.rescaled(mu), horizon,
                                         rng, n_traces)
 
-    sizes = np.array([f.size for f in fault_bank])
-    flags = rng.random(int(sizes.sum())) < recall
-    kind_bank = [np.where(part, FAULT_PRED, FAULT_UNPRED).astype(np.int8)
-                 for part in np.split(flags, np.cumsum(sizes)[:-1])]
+    if predictor_model is None:
+        from repro.predictors.models import OraclePredictor
+        predictor_model = OraclePredictor(recall, precision)
+    streams = predictor_model.predict_bank(
+        fault_bank, mu=mu, horizon=horizon, rng=rng,
+        false_dist=false_pred_dist or fault_dist)
 
-    if recall > 0.0 and precision < 1.0:
-        mean_false = precision * mu / (recall * (1.0 - precision))
-        fdist = (false_pred_dist or fault_dist).rescaled(mean_false)
-        false_bank = renewal_trace_bank(fdist, horizon, rng, n_traces)
-    else:
-        false_bank = [np.empty(0, dtype=np.float64)] * n_traces
-
-    return [_merge_events(f, k, fp, horizon, window=window)
-            for f, k, fp in zip(fault_bank, kind_bank, false_bank)]
+    return [_merge_events(f, s.kinds, s.false_times, horizon, window=window,
+                          true_windows=s.true_windows,
+                          false_windows=s.false_windows)
+            for f, s in zip(fault_bank, streams)]
 
 
 def lanl_like_log(rng: np.random.Generator, n_intervals: int = 3010,

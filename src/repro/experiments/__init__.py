@@ -34,13 +34,15 @@ from .runner import (BestPeriodSearch, EvalCache, ResultTable,
                      evaluate_strategies, evaluate_mean, run_experiment,
                      trace_bank)
 from .spec import (MU_IND_SYNTH, SECONDS_PER_DAY, DistributionSpec,
-                   ExperimentSpec, ScenarioSpec, StrategySpec, SweepSpec)
+                   ExperimentSpec, PredictorSpec, ScenarioSpec, StrategySpec,
+                   SweepSpec)
 
 __all__ = [
     "MU_IND_SYNTH",
     "SECONDS_PER_DAY",
     "PREDICTORS",
     "DistributionSpec",
+    "PredictorSpec",
     "ScenarioSpec",
     "StrategySpec",
     "SweepSpec",

@@ -31,7 +31,8 @@ from repro.core.simulator import NeverTrust, ThresholdTrust
 from repro.core.traces import (Distribution, Empirical, Exponential,
                                LogNormalDist, UniformDist, Weibull,
                                lanl_like_log)
-from repro.core.prediction import beta_lim
+from repro.core.prediction import (PredictedPlatform, Predictor, beta_lim,
+                                   optimal_period_with_prediction)
 from repro.core.waste import t_exact_exponential
 
 from .spec import ExperimentSpec, ScenarioSpec
@@ -242,6 +243,30 @@ def _window_proactive(scenario: ScenarioSpec, window: float | None = None,
     from repro.core.windows import window_strategy
     return window_strategy(scenario.pp, _scenario_window(scenario, window),
                            mode="within", window_period=window_period)
+
+
+@register_strategy("adaptive")
+def _adaptive(scenario: ScenarioSpec, prior_recall: float | None = None,
+              prior_precision: float | None = None, min_preds: int = 32,
+              min_faults: int = 16, tol: float = 0.05) -> policies.Strategy:
+    """Online (r-hat, p-hat) estimation with adaptive re-planning.
+
+    Starts on the paper-optimal plan for the *prior* (r, p) — the
+    scenario's nominal predictor by default, or an explicitly stale
+    ``prior_recall`` / ``prior_precision`` — then re-plans T* and the
+    trust threshold from the gated running estimates as they drift
+    (``repro.predictors.estimator``).
+    """
+    from repro.predictors.estimator import AdaptiveConfig
+    r0 = scenario.recall if prior_recall is None else float(prior_recall)
+    p0 = scenario.precision if prior_precision is None \
+        else float(prior_precision)
+    pp = PredictedPlatform(scenario.platform, Predictor(r0, p0), scenario.cp)
+    t0, _, use = optimal_period_with_prediction(pp)
+    trust = ThresholdTrust(beta_lim(pp)) if use else ThresholdTrust(math.inf)
+    cfg = AdaptiveConfig(prior_recall=r0, prior_precision=p0,
+                         min_preds=min_preds, min_faults=min_faults, tol=tol)
+    return policies.Strategy("Adaptive", float(t0), trust, adaptive=cfg)
 
 
 @register_strategy("fixed_period")

@@ -87,7 +87,11 @@ _MIN_PARALLEL_SIMS = 16
 # whenever simulator mechanics, trace generation or runner seeding change
 # the makespans a spec produces, or stale pre-change results will be served.
 # v2: candidate keys grew the window_mode/window_period axis (PR 3).
-_EVAL_CACHE_VERSION = 2
+# v3: candidate keys grew the adaptive-replanning axis and scenarios the
+#     predictor field (PR 4); v2 stores hash differently and are ignored,
+#     and a v2-format candidate key inside a store file fails decoding and
+#     degrades the whole store to empty (invalidated, never misread).
+_EVAL_CACHE_VERSION = 3
 
 
 def _env_flag(name: str) -> bool:
@@ -148,23 +152,35 @@ def _trust_key(trust: TrustPolicy) -> tuple:
     return ("opaque", _IdKey(trust))
 
 
+def _adaptive_key(adaptive) -> tuple | None:
+    """Value tuple of an AdaptiveConfig candidate axis (None = static)."""
+    if adaptive is None:
+        return None
+    if hasattr(adaptive, "key"):
+        return tuple(adaptive.key())
+    return _IdKey(adaptive)  # opaque custom object: identity semantics
+
+
 def _candidate_key(strategy: Strategy) -> tuple:
     period = strategy.period
     if callable(period) and not isinstance(period, collections.abc.Hashable):
         period = _IdKey(period)
     return (period, _trust_key(strategy.trust), strategy.inexact_window,
-            strategy.window_mode, strategy.window_period)
+            strategy.window_mode, strategy.window_period,
+            _adaptive_key(strategy.adaptive))
 
 
 def _persistable_key(key: tuple) -> str | None:
     """Canonical JSON form of a candidate key, or None if the candidate has
     no value semantics (callable period, opaque trust policy)."""
-    period, trust, window, wmode, wperiod = key
+    period, trust, window, wmode, wperiod, adaptive = key
     if not isinstance(period, (int, float)):
         return None
-    if any(isinstance(part, _IdKey) for part in trust):
+    if any(isinstance(part, _IdKey) for part in trust) \
+            or isinstance(adaptive, _IdKey):
         return None
-    return json.dumps([period, list(trust), window, wmode, wperiod])
+    return json.dumps([period, list(trust), window, wmode, wperiod,
+                       None if adaptive is None else list(adaptive)])
 
 
 def default_cache_dir() -> Path:
@@ -210,8 +226,9 @@ class EvalCache:
 
     @staticmethod
     def _decode_key(ckey_str: str) -> tuple:
-        period, trust, window, wmode, wperiod = json.loads(ckey_str)
-        return (period, tuple(trust), window, wmode, wperiod)
+        period, trust, window, wmode, wperiod, adaptive = json.loads(ckey_str)
+        return (period, tuple(trust), window, wmode, wperiod,
+                None if adaptive is None else tuple(adaptive))
 
     def _read_store(self) -> dict:
         """The on-disk makespan map; any unreadable or wrong-shape file
@@ -330,7 +347,8 @@ def _simulate_pair(trace: EventTrace, platform: Platform, time_base: float,
                    trust=strategy.trust,
                    inexact_window=strategy.inexact_window,
                    window_mode=strategy.window_mode,
-                   window_period=strategy.window_period, rng=rng)
+                   window_period=strategy.window_period,
+                   adaptive=strategy.adaptive, rng=rng)
     return res.makespan
 
 
@@ -448,6 +466,7 @@ def evaluate_strategies(
                           for si, _ in lane_items],
             window_periods=[strategies[si].window_period
                             for si, _ in lane_items],
+            adaptives=[strategies[si].adaptive for si, _ in lane_items],
             seeds=seed + 7919 * tr_idx)
         for (si, ti), m in zip(lane_items, lane_ms):
             makespans[si, ti] = m

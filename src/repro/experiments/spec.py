@@ -36,6 +36,7 @@ __all__ = [
     "SECONDS_PER_DAY",
     "MU_IND_SYNTH",
     "DistributionSpec",
+    "PredictorSpec",
     "ScenarioSpec",
     "StrategySpec",
     "SweepSpec",
@@ -101,6 +102,45 @@ def _coerce_dist(value: Any) -> DistributionSpec | None:
 
 
 @dataclasses.dataclass(frozen=True)
+class PredictorSpec:
+    """A generative predictor model by registry name, e.g.
+    ``PredictorSpec("drifting", {"precision_end": 0.3})``.
+
+    The model is built at the scenario's nominal (recall, precision) —
+    params carry only the model-specific knobs — so sweeping the nominal
+    axis and the model family compose.  ``None`` on the scenario means the
+    ``oracle`` stamping (bit-for-bit the legacy traces).
+    """
+
+    name: str
+    params: dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "params", _normalize(self.params))
+
+    def build(self, recall: float, precision: float):
+        from repro.predictors import build_predictor
+        return build_predictor(self.name, recall, precision, **self.params)
+
+    def to_dict(self) -> dict:
+        return {"name": self.name, "params": _jsonable(self.params)}
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any] | str) -> "PredictorSpec":
+        if isinstance(d, str):
+            return cls(name=d)
+        return cls(name=d["name"], params=dict(d.get("params", {})))
+
+
+def _coerce_pred(value: Any) -> PredictorSpec | None:
+    if value is None or isinstance(value, PredictorSpec):
+        return value
+    if isinstance(value, (Mapping, str)):
+        return PredictorSpec.from_dict(value)
+    raise TypeError(f"cannot coerce {value!r} into a PredictorSpec")
+
+
+@dataclasses.dataclass(frozen=True)
 class ScenarioSpec:
     """One simulation cell (paper §5.1 defaults).
 
@@ -115,6 +155,13 @@ class ScenarioSpec:
     I > 0 every prediction event in the scenario's traces announces the
     interval [t, t+I] and the true fault materializes uniformly inside it.
     ``window=0`` (default) keeps exact-date predictions, bit-for-bit.
+
+    ``predictor`` selects the generative predictor model
+    (:mod:`repro.predictors`) that turns the fault stream into the
+    prediction stream; ``None`` (default) is the ``oracle`` stamping at
+    the nominal (recall, precision), bit-for-bit the legacy traces.
+    Model-emitted per-event windows (e.g. ``lead_time``) take precedence
+    over the constant ``window`` stamping.
     """
 
     n: int = 2 ** 16
@@ -123,6 +170,7 @@ class ScenarioSpec:
     recall: float = 0.85
     precision: float = 0.82
     window: float = 0.0
+    predictor: PredictorSpec | None = None
     cp_ratio: float = 1.0
     c: float = 600.0
     r: float = 600.0
@@ -141,6 +189,7 @@ class ScenarioSpec:
         object.__setattr__(self, "dist", _coerce_dist(self.dist))
         object.__setattr__(self, "false_pred_dist",
                            _coerce_dist(self.false_pred_dist))
+        object.__setattr__(self, "predictor", _coerce_pred(self.predictor))
         object.__setattr__(self, "extras", _normalize(self.extras))
 
     # -- derived quantities --------------------------------------------------
@@ -154,12 +203,13 @@ class ScenarioSpec:
         return Platform(mu=self.mu, c=self.c, d=self.d, r=self.r)
 
     @property
-    def predictor(self) -> Predictor:
+    def nominal_predictor(self) -> Predictor:
+        """The (recall, precision) pair as the analytic-model Predictor."""
         return Predictor(recall=self.recall, precision=self.precision)
 
     @property
     def pp(self) -> PredictedPlatform:
-        return PredictedPlatform(self.platform, self.predictor,
+        return PredictedPlatform(self.platform, self.nominal_predictor,
                                  cp=self.cp_ratio * self.c)
 
     @property
@@ -183,6 +233,12 @@ class ScenarioSpec:
                  if self.false_pred_dist is not None else None)
         return n_streams, fdist
 
+    def _predictor_model(self):
+        """The built generative predictor model, or None (oracle path)."""
+        if self.predictor is None:
+            return None
+        return self.predictor.build(self.recall, self.precision)
+
     def _shift(self, tr: EventTrace) -> EventTrace:
         # Shift so the job starts ``start`` seconds into the trace (avoids
         # the synchronized-processor-start artifact, paper §5.1).
@@ -200,7 +256,7 @@ class ScenarioSpec:
         tr = make_event_trace(
             self.dist.build(), self.mu, self.recall, self.precision,
             self.horizon, rng, false_pred_dist=fdist, n_processors=n_streams,
-            window=self.window)
+            window=self.window, predictor_model=self._predictor_model())
         return self._shift(tr)
 
     def make_traces(self, n_traces: int | None = None,
@@ -227,7 +283,8 @@ class ScenarioSpec:
         bank = make_event_trace_bank(
             self.dist.build(), self.mu, self.recall, self.precision,
             self.horizon, rng, false_pred_dist=fdist,
-            n_processors=n_streams, n_traces=n, window=self.window)
+            n_processors=n_streams, n_traces=n, window=self.window,
+            predictor_model=self._predictor_model())
         return [self._shift(tr) for tr in bank]
 
     # -- field update (dotted paths; how sweeps and the CLI set fields) ------
@@ -250,7 +307,10 @@ class ScenarioSpec:
         if not rest:
             return dataclasses.replace(self, **{head: value})
         current = getattr(self, head)
-        if isinstance(current, DistributionSpec):
+        if head == "predictor" and current is None:
+            # Descending into an unset predictor starts from the oracle.
+            current = PredictorSpec("oracle")
+        if isinstance(current, (DistributionSpec, PredictorSpec)):
             sub_head, _, sub_rest = rest.partition(".")
             if sub_head == "name" and not sub_rest:
                 new = dataclasses.replace(current, name=value)
@@ -262,7 +322,7 @@ class ScenarioSpec:
                     params = dict(value)
                 new = dataclasses.replace(current, params=params)
             else:
-                raise KeyError(f"unknown distribution field {rest!r}")
+                raise KeyError(f"unknown {head} field {rest!r}")
             return dataclasses.replace(self, **{head: new})
         if isinstance(current, Mapping):
             sub = dict(current)
@@ -289,6 +349,8 @@ class ScenarioSpec:
             kw["dist"] = _coerce_dist(kw["dist"])
         if kw.get("false_pred_dist") is not None:
             kw["false_pred_dist"] = _coerce_dist(kw["false_pred_dist"])
+        if kw.get("predictor") is not None:
+            kw["predictor"] = _coerce_pred(kw["predictor"])
         return cls(**kw)
 
     def key(self) -> str:
@@ -353,8 +415,21 @@ class SweepSpec:
     names: dict = dataclasses.field(default_factory=dict)
 
     def __post_init__(self) -> None:
-        object.__setattr__(self, "axes",
-                           {k: _normalize(v) for k, v in self.axes.items()})
+        # Normalize AND coerce axis values (dist / predictor dicts become
+        # specs), so directly-constructed sweeps compare equal to
+        # ``from_dict`` round-trips.
+        axes: dict[str, tuple] = {}
+        for key, values in self.axes.items():
+            fields = key.split(",")
+            if len(fields) == 1:
+                vals = tuple(self._coerce_axis_value(key, _normalize(v))
+                             for v in values)
+            else:
+                vals = tuple(tuple(self._coerce_axis_value(f, _normalize(c))
+                                   for f, c in zip(fields, v))
+                             for v in values)
+            axes[key] = vals
+        object.__setattr__(self, "axes", axes)
         object.__setattr__(self, "labels",
                            {k: _normalize(v) for k, v in self.labels.items()})
         if self.mode not in ("cartesian", "zip"):
@@ -375,7 +450,7 @@ class SweepSpec:
     def _axis_column(self, key: str, idx: int, value: Any) -> Any:
         if key in self.labels:
             return self.labels[key][idx]
-        if isinstance(value, DistributionSpec):
+        if isinstance(value, (DistributionSpec, PredictorSpec)):
             return value.name
         if isinstance(value, Mapping):
             return json.dumps(_jsonable(value), sort_keys=True)
@@ -426,6 +501,8 @@ class SweepSpec:
     def _coerce_axis_value(field: str, value: Any) -> Any:
         if field in ("dist", "false_pred_dist") and value is not None:
             return _coerce_dist(value)
+        if field == "predictor" and value is not None:
+            return _coerce_pred(value)
         return value
 
     @classmethod

@@ -1,0 +1,46 @@
+"""Generative fault-prediction models, online (r, p) estimation, adaptive
+re-planning.
+
+Instead of stamping a fixed (recall, precision) onto ground-truth fault
+traces, a :class:`PredictorModel` consumes the fault stream and *emits*
+the prediction stream — so "which predictor?" becomes a scenario axis::
+
+    from repro.experiments import PredictorSpec, ScenarioSpec
+
+    sc = ScenarioSpec(predictor=PredictorSpec("drifting",
+                                              {"precision_end": 0.3}))
+    traces = sc.make_traces()          # predictions degrade over the run
+
+Registered models: ``oracle`` (the legacy stamping, bit-for-bit),
+``lead_time`` (sampled per-event prediction windows / lead times),
+``drifting`` (recall/precision drift linearly over the run), ``bursty``
+(correlated false alarms).  On the consumption side,
+:class:`OnlineRPEstimator` tracks (r-hat, p-hat) from observed outcomes
+behind a confidence gate, and :class:`AdaptiveConfig` drives the
+``adaptive`` strategy that re-plans (T*, beta_lim) inside both simulation
+engines as the estimates drift.
+"""
+
+from .base import (PredictionStream, PredictorModel, build_predictor,
+                   list_predictors, register_predictor)
+from .estimator import (AdaptiveConfig, OnlineRPEstimator, estimate_precision,
+                        estimate_recall, maybe_replan)
+from .models import (BurstyPredictor, DriftingPredictor, LeadTimePredictor,
+                     OraclePredictor)
+
+__all__ = [
+    "PredictionStream",
+    "PredictorModel",
+    "register_predictor",
+    "build_predictor",
+    "list_predictors",
+    "OraclePredictor",
+    "LeadTimePredictor",
+    "DriftingPredictor",
+    "BurstyPredictor",
+    "AdaptiveConfig",
+    "OnlineRPEstimator",
+    "estimate_recall",
+    "estimate_precision",
+    "maybe_replan",
+]

@@ -1,0 +1,193 @@
+"""Online (r, p) estimation and adaptive re-planning.
+
+The paper's optimal policy needs the predictor's recall r and precision p
+to pick the period T* and the trust breakpoint beta_lim = C_p/p — but as
+Aupy et al. stress (arXiv:1207.6936 §5), r and p are not oracles: they
+must be *estimated online* from the prediction stream.  This module holds
+the two pieces:
+
+  * :class:`OnlineRPEstimator` — running (r-hat, p-hat) from the observed
+    stream of confirmed / false predictions and predicted / unpredicted
+    faults, with a **confidence gate**: the estimates are not trusted until
+    enough predictions *and* faults have been observed (a handful of
+    events says nothing about a ratio).
+  * :class:`AdaptiveConfig` — the declarative knob set for the ``adaptive``
+    strategy: both simulation engines keep exactly this estimator per
+    lane (scalar locals in ``simulate``, SoA arrays in the lane engine)
+    and re-plan (T*, trust threshold) through :meth:`AdaptiveConfig.plan`
+    whenever the gated estimates drift more than ``tol`` from the values
+    last planned on — the hysteresis that keeps the checkpoint cadence
+    from thrashing (the waste curve is flat near its minimum).
+
+Estimator semantics in the engines: a prediction's outcome is observed at
+announcement (the simulator knows whether it will materialize; a real
+system learns it when the prediction window closes — a lead of at most one
+window that the gate's minimum counts make irrelevant), and every
+unpredicted fault is observed when it strikes.  Counts are plain integers,
+so the two engines produce **bit-for-bit identical** estimates, replan
+points and plans.
+
+The replan math itself is :func:`maybe_replan` — a pure function shared by
+both engines (the lane engine pre-filters lanes vectorized with the same
+integer/float operations, then confirms per lane through this function).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core.prediction import (PredictedPlatform, Predictor, beta_lim,
+                                   optimal_period_with_prediction)
+from repro.core.waste import Platform
+
+__all__ = [
+    "P_HAT_MIN",
+    "AdaptiveConfig",
+    "OnlineRPEstimator",
+    "estimate_recall",
+    "estimate_precision",
+    "maybe_replan",
+]
+
+# Precision estimate floor: p-hat = 0 (no prediction ever confirmed) would
+# put beta_lim at infinity and break the Predictor domain; a tiny positive
+# floor keeps the plan finite ("never worth trusting") instead.
+P_HAT_MIN = 1e-3
+
+
+def estimate_recall(n_true_pred: int, n_unpred_faults: int) -> float:
+    """r-hat = predicted faults / all faults (every true prediction is one
+    predicted fault)."""
+    return n_true_pred / (n_true_pred + n_unpred_faults)
+
+
+def estimate_precision(n_true_pred: int, n_false_pred: int) -> float:
+    """p-hat = confirmed predictions / all predictions, floored at
+    :data:`P_HAT_MIN`."""
+    p = n_true_pred / (n_true_pred + n_false_pred)
+    return p if p >= P_HAT_MIN else P_HAT_MIN
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptiveConfig:
+    """Knobs of the adaptive re-planning strategy (engine-agnostic).
+
+    ``prior_recall`` / ``prior_precision`` are the (possibly stale) values
+    the initial plan was computed from — they seed the hysteresis baseline,
+    so the first replan fires as soon as the gated estimates leave the
+    ``tol``-box around the prior.  ``min_preds`` / ``min_faults`` is the
+    confidence gate; ``tol`` the re-plan hysteresis (absolute, on both
+    estimates).
+    """
+
+    prior_recall: float
+    prior_precision: float
+    min_preds: int = 32
+    min_faults: int = 16
+    tol: float = 0.05
+
+    def __post_init__(self) -> None:
+        if self.min_preds < 1 or self.min_faults < 1:
+            raise ValueError("confidence gate needs min_preds/min_faults >= 1")
+        if self.tol <= 0.0:
+            raise ValueError(f"tol must be positive, got {self.tol}")
+
+    def plan(self, platform: Platform, cp: float, recall: float,
+             precision: float) -> tuple[float, float]:
+        """(period, trust threshold) of the paper-optimal plan at (r, p).
+
+        The threshold is beta_lim = C_p/p when the WASTE2 branch wins
+        (act on predictions past the breakpoint) and +inf when the
+        predictor is analytically not worth using (never trust).
+        """
+        pp = PredictedPlatform(platform, Predictor(recall, precision), cp)
+        t, _, use = optimal_period_with_prediction(pp)
+        return float(t), (beta_lim(pp) if use else math.inf)
+
+    def key(self) -> tuple:
+        """Value-semantics tuple for result-cache candidate keys."""
+        return (self.prior_recall, self.prior_precision, self.min_preds,
+                self.min_faults, self.tol)
+
+
+def maybe_replan(cfg: AdaptiveConfig, platform: Platform, cp: float,
+                 n_true_pred: int, n_false_pred: int, n_unpred_faults: int,
+                 planned_recall: float, planned_precision: float,
+                 ) -> tuple[float, float, float, float] | None:
+    """One estimator observation step, shared by both engines.
+
+    Called after a counter update; returns ``None`` (keep the current
+    plan: gate not passed, or estimates still inside the hysteresis box)
+    or ``(r_hat, p_hat, period, threshold)`` for a re-plan.
+    """
+    if n_true_pred + n_false_pred < cfg.min_preds:
+        return None
+    if n_true_pred + n_unpred_faults < cfg.min_faults:
+        return None
+    r_hat = estimate_recall(n_true_pred, n_unpred_faults)
+    p_hat = estimate_precision(n_true_pred, n_false_pred)
+    if abs(r_hat - planned_recall) <= cfg.tol \
+            and abs(p_hat - planned_precision) <= cfg.tol:
+        return None
+    period, threshold = cfg.plan(platform, cp, r_hat, p_hat)
+    return r_hat, p_hat, period, threshold
+
+
+class OnlineRPEstimator:
+    """Standalone running (r-hat, p-hat) estimator over an event feed.
+
+    The user-facing counterpart of the per-lane counters the engines
+    carry: feed it prediction outcomes and fault observations in event
+    order, read the gated estimates back.  Used by the runtime layer and
+    the examples; the engines inline the same integer counters for
+    bit-for-bit scalar/batch parity.
+    """
+
+    def __init__(self, *, min_preds: int = 32, min_faults: int = 16) -> None:
+        self.min_preds = min_preds
+        self.min_faults = min_faults
+        self.n_true_pred = 0
+        self.n_false_pred = 0
+        self.n_unpred_faults = 0
+
+    def observe_prediction(self, confirmed: bool) -> None:
+        """A prediction whose outcome is known (materialized or not)."""
+        if confirmed:
+            self.n_true_pred += 1
+        else:
+            self.n_false_pred += 1
+
+    def observe_fault(self, predicted: bool) -> None:
+        """An actual fault; ``predicted`` = a prediction announced it.
+
+        Predicted faults are already counted by their confirmed
+        prediction, so only unpredicted ones advance a counter here."""
+        if not predicted:
+            self.n_unpred_faults += 1
+
+    @property
+    def n_predictions(self) -> int:
+        return self.n_true_pred + self.n_false_pred
+
+    @property
+    def n_faults(self) -> int:
+        return self.n_true_pred + self.n_unpred_faults
+
+    @property
+    def ready(self) -> bool:
+        """The confidence gate: enough predictions *and* faults seen."""
+        return self.n_predictions >= self.min_preds \
+            and self.n_faults >= self.min_faults
+
+    @property
+    def recall(self) -> float | None:
+        if self.n_faults == 0:
+            return None
+        return estimate_recall(self.n_true_pred, self.n_unpred_faults)
+
+    @property
+    def precision(self) -> float | None:
+        if self.n_predictions == 0:
+            return None
+        return estimate_precision(self.n_true_pred, self.n_false_pred)
