@@ -66,7 +66,7 @@ def report_roofline(path: str = "roofline_results.json") -> None:
 
 def _import_benchmarks():
     """Import every benchmark module so experiments register themselves."""
-    from . import (beyond, exec_times, log_traces, multilevel,
+    from . import (beyond, exact_sweep, exec_times, log_traces, multilevel,
                    predictor_sweep, recall_precision, roofline, table2,
                    waste_vs_n, window_sweep)
     del roofline  # registers the spec-driven accelerator sweep only
@@ -80,6 +80,7 @@ def _import_benchmarks():
         "multilevel": multilevel.run,
         "window_sweep": window_sweep.run,
         "predictor_sweep": predictor_sweep.run,
+        "exact_sweep": exact_sweep.run,
     }
 
 

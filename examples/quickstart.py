@@ -18,6 +18,7 @@ import numpy as np
 
 from repro.configs import get
 from repro.configs.base import InputShape, PlatformConfig
+from repro.core.exact import optimal_period_exact
 from repro.core.prediction import beta_lim, optimal_period_with_prediction
 from repro.core.traces import Weibull, make_event_trace
 from repro.core.waste import t_rfo, waste
@@ -48,6 +49,14 @@ def main() -> None:
           f"trust predictions past beta_lim = {beta_lim(pp):.0f} s")
     print(f"-> predicted waste reduction: "
           f"{100 * (1 - w_star / waste(t_rfo(plat), plat)):.1f}%")
+
+    # The first-order model drops O((T/mu)^2) terms; the exact-Exponential
+    # renewal analysis (repro.core.exact, sweepable via
+    # ScenarioSpec.model_order="exact") re-plans both knobs.
+    plan = optimal_period_exact(pp)
+    print(f"Exact-Exponential plan: T* = {plan.period:8.0f} s, "
+          f"beta* = {plan.threshold:.0f} s, exact waste {plan.waste:.4f} "
+          f"(first-order T* was {t_star:.0f} s)")
 
     # ---- 2. Measure the plan with the batched runner ----------------------
     print()

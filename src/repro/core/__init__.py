@@ -16,10 +16,17 @@ Layers:
   windows.py     prediction *windows* (arXiv:1302.4558): waste formulas,
                  optimal periods and strategies for the interval [t, t+I]
                  prediction family (ignore / instant / within modes).
+  exact.py       exact-Exponential renewal analysis (arXiv:1207.6936):
+                 exact waste/makespan with and without prediction, the
+                 exact trust threshold and numeric (T*, beta*) optimizers.
 """
 
-from . import batch, policies, prediction, simulator, traces, waste, windows
+from . import (batch, exact, policies, prediction, simulator, traces, waste,
+               windows)
 from .batch import BatchResult, simulate_batch
+from .exact import (ExactPlan, beta_lim_exact, optimal_period_exact,
+                    t_exact_nopred, waste_exact_nopred,
+                    waste_exact_prediction)
 from .prediction import (PredictedPlatform, Predictor, beta_lim,
                          optimal_period_with_prediction, t_pred,
                          t_pred_asymptotic, waste1, waste2,
@@ -31,9 +38,11 @@ from .windows import (WindowPlan, beta_lim_window, optimal_window_plan,
                       t_window_period, waste_window, window_strategy)
 
 __all__ = [
-    "batch", "policies", "prediction", "simulator", "traces", "waste",
-    "windows",
+    "batch", "exact", "policies", "prediction", "simulator", "traces",
+    "waste", "windows",
     "BatchResult", "simulate_batch",
+    "ExactPlan", "beta_lim_exact", "optimal_period_exact", "t_exact_nopred",
+    "waste_exact_nopred", "waste_exact_prediction",
     "Platform", "Predictor", "PredictedPlatform", "EventTrace", "SimResult",
     "Exponential", "Weibull", "UniformDist",
     "platform_mtbf", "t_young", "t_daly", "t_rfo", "beta_lim",

@@ -205,11 +205,14 @@ def t_pred(pp: PredictedPlatform) -> float:
     u, v, _, x = _waste2_coeffs(pp)
     lo = max(pp.platform.c, beta_lim(pp))
     if x <= 0.0:
-        # r == 1: waste2 decreasing in T beyond the hyperbolic part; the
-        # stationary point solves -2u/T^3 - v/T^2 = 0 -> T = -2u/v (v<0).
+        # r == 1: no unpredicted faults, so the linear term vanishes.  The
+        # stationary point solves -2u/T^3 - v/T^2 = 0 -> T = -2u/v (v<0);
+        # with v >= 0 waste2 = u/T^2 + v/T + w decreases monotonically —
+        # periodic checkpoints are pure overhead — so return the paper's
+        # rigor cap alpha*mu rather than the interval's (worst) low end.
         if v < 0.0 and u > 0.0:
             return max(lo, -2.0 * u / v)
-        return lo
+        return max(lo, ALPHA_CAP * pp.platform.mu)
     roots = np.roots([x, 0.0, -v, -2.0 * u])
     candidates = [lo]
     for root in roots:

@@ -10,6 +10,10 @@ Implements:
 All durations share one unit (seconds by convention).  ``mu`` is the platform
 MTBF; for a platform of N components with individual MTBF mu_ind,
 ``mu = mu_ind / N`` (paper Prop. 2, proved in Appendix A).
+
+The first-order formulas here drop every O((T/mu)^2) term; the exact
+renewal analysis (including the prediction-aware generalization of the
+Lambert-W optimum below) lives in :mod:`repro.core.exact`.
 """
 
 from __future__ import annotations

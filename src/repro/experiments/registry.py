@@ -31,8 +31,8 @@ from repro.core.simulator import NeverTrust, ThresholdTrust
 from repro.core.traces import (Distribution, Empirical, Exponential,
                                LogNormalDist, UniformDist, Weibull,
                                lanl_like_log)
-from repro.core.prediction import (PredictedPlatform, Predictor, beta_lim,
-                                   optimal_period_with_prediction)
+from repro.core.exact import optimal_period_exact, t_exact_nopred
+from repro.core.prediction import beta_lim
 from repro.core.waste import t_exact_exponential
 
 from .spec import ExperimentSpec, ScenarioSpec
@@ -197,6 +197,62 @@ def _optimal_prediction(scenario: ScenarioSpec) -> policies.Strategy:
     return policies.optimal_prediction(scenario.pp)
 
 
+# -- exact-Exponential strategies (arXiv:1207.6936; core/exact.py) ----------
+
+@register_strategy("exact_nopred")
+def _exact_nopred(scenario: ScenarioSpec) -> policies.Strategy:
+    """The exact no-prediction optimum (Lambert-W period, never trust) —
+    the renewal-analysis counterpart of ``rfo``."""
+    return policies.Strategy("ExactNoPred", t_exact_nopred(scenario.platform),
+                             NeverTrust())
+
+
+@register_strategy("exact_prediction")
+def _exact_prediction(scenario: ScenarioSpec,
+                      refine_threshold: bool = True) -> policies.Strategy:
+    """The exact threshold-policy optimum: (T*, beta*) jointly minimizing
+    the exact renewal waste — the counterpart of ``optimal_prediction``."""
+    plan = optimal_period_exact(scenario.pp,
+                                refine_threshold=refine_threshold)
+    trust = (ThresholdTrust(plan.threshold) if plan.use_predictions
+             else NeverTrust())
+    return policies.Strategy("ExactPrediction", plan.period, trust)
+
+
+# -- model-order-aware planners (follow ScenarioSpec.model_order) -----------
+
+def _scenario_order(scenario: ScenarioSpec, model_order: str | None) -> str:
+    order = scenario.model_order if model_order is None else model_order
+    if order not in ("first", "exact"):
+        raise ValueError(f"model_order must be 'first' or 'exact', "
+                         f"got {order!r}")
+    return order
+
+
+@register_strategy("nopred")
+def _nopred(scenario: ScenarioSpec,
+            model_order: str | None = None) -> policies.Strategy:
+    """The no-prediction baseline planned at the scenario's model order:
+    RFO (first order) or the Lambert-W exact optimum."""
+    if _scenario_order(scenario, model_order) == "exact":
+        period = t_exact_nopred(scenario.platform)
+    else:
+        period = policies.rfo(scenario.platform).period
+    return policies.Strategy("NoPred", period, NeverTrust())
+
+
+@register_strategy("prediction")
+def _prediction(scenario: ScenarioSpec,
+                model_order: str | None = None) -> policies.Strategy:
+    """The prediction-aware threshold policy planned at the scenario's
+    model order (§4.3 first-order vs the exact renewal optimum)."""
+    if _scenario_order(scenario, model_order) == "exact":
+        inner = _exact_prediction(scenario)
+    else:
+        inner = policies.optimal_prediction(scenario.pp)
+    return dataclasses.replace(inner, name="Prediction")
+
+
 @register_strategy("inexact_prediction")
 def _inexact_prediction(scenario: ScenarioSpec,
                         window: float | None = None) -> policies.Strategy:
@@ -248,25 +304,27 @@ def _window_proactive(scenario: ScenarioSpec, window: float | None = None,
 @register_strategy("adaptive")
 def _adaptive(scenario: ScenarioSpec, prior_recall: float | None = None,
               prior_precision: float | None = None, min_preds: int = 32,
-              min_faults: int = 16, tol: float = 0.05) -> policies.Strategy:
+              min_faults: int = 16, tol: float = 0.05,
+              model_order: str | None = None) -> policies.Strategy:
     """Online (r-hat, p-hat) estimation with adaptive re-planning.
 
-    Starts on the paper-optimal plan for the *prior* (r, p) — the
+    Starts on the model-optimal plan for the *prior* (r, p) — the
     scenario's nominal predictor by default, or an explicitly stale
     ``prior_recall`` / ``prior_precision`` — then re-plans T* and the
     trust threshold from the gated running estimates as they drift
-    (``repro.predictors.estimator``).
+    (``repro.predictors.estimator``).  Both the initial plan and every
+    re-plan solve the scenario's ``model_order`` analysis.
     """
     from repro.predictors.estimator import AdaptiveConfig
     r0 = scenario.recall if prior_recall is None else float(prior_recall)
     p0 = scenario.precision if prior_precision is None \
         else float(prior_precision)
-    pp = PredictedPlatform(scenario.platform, Predictor(r0, p0), scenario.cp)
-    t0, _, use = optimal_period_with_prediction(pp)
-    trust = ThresholdTrust(beta_lim(pp)) if use else ThresholdTrust(math.inf)
     cfg = AdaptiveConfig(prior_recall=r0, prior_precision=p0,
-                         min_preds=min_preds, min_faults=min_faults, tol=tol)
-    return policies.Strategy("Adaptive", float(t0), trust, adaptive=cfg)
+                         min_preds=min_preds, min_faults=min_faults, tol=tol,
+                         model_order=_scenario_order(scenario, model_order))
+    t0, thr0 = cfg.plan(scenario.platform, scenario.cp, r0, p0)
+    return policies.Strategy("Adaptive", float(t0), ThresholdTrust(thr0),
+                             adaptive=cfg)
 
 
 @register_strategy("fixed_period")

@@ -91,7 +91,11 @@ _MIN_PARALLEL_SIMS = 16
 #     predictor field (PR 4); v2 stores hash differently and are ignored,
 #     and a v2-format candidate key inside a store file fails decoding and
 #     degrades the whole store to empty (invalidated, never misread).
-_EVAL_CACHE_VERSION = 3
+# v4: AdaptiveConfig.key() grew the model_order element and scenarios the
+#     model_order field (PR 5); v3 stores hash differently and are ignored
+#     — invalidated, never misread — and a v3 adaptive key inside a store
+#     would decode into a 5-tuple that can never equal a v4 6-tuple.
+_EVAL_CACHE_VERSION = 4
 
 
 def _env_flag(name: str) -> bool:

@@ -162,6 +162,14 @@ class ScenarioSpec:
     the nominal (recall, precision), bit-for-bit the legacy traces.
     Model-emitted per-event windows (e.g. ``lead_time``) take precedence
     over the constant ``window`` stamping.
+
+    ``model_order`` selects the *analysis order* scenario-aware strategies
+    plan with: ``"first"`` (default) is the paper's first-order waste model
+    (Eqs. 12/15), ``"exact"`` the exact-Exponential renewal analysis of
+    :mod:`repro.core.exact` (arXiv:1207.6936).  The order-aware registered
+    strategies (``nopred``, ``prediction``, ``adaptive``) consult it, so a
+    sweep axis ``{"model_order": ["first", "exact"]}`` compares the two
+    analyses cell by cell on identical trace banks.
     """
 
     n: int = 2 ** 16
@@ -171,6 +179,7 @@ class ScenarioSpec:
     precision: float = 0.82
     window: float = 0.0
     predictor: PredictorSpec | None = None
+    model_order: str = "first"
     cp_ratio: float = 1.0
     c: float = 600.0
     r: float = 600.0
@@ -191,6 +200,9 @@ class ScenarioSpec:
                            _coerce_dist(self.false_pred_dist))
         object.__setattr__(self, "predictor", _coerce_pred(self.predictor))
         object.__setattr__(self, "extras", _normalize(self.extras))
+        if self.model_order not in ("first", "exact"):
+            raise ValueError(f"model_order must be 'first' or 'exact', "
+                             f"got {self.model_order!r}")
 
     # -- derived quantities --------------------------------------------------
 

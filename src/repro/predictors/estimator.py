@@ -78,7 +78,9 @@ class AdaptiveConfig:
     so the first replan fires as soon as the gated estimates leave the
     ``tol``-box around the prior.  ``min_preds`` / ``min_faults`` is the
     confidence gate; ``tol`` the re-plan hysteresis (absolute, on both
-    estimates).
+    estimates).  ``model_order`` selects the analysis each re-plan solves:
+    the paper's first-order model (default) or the exact-Exponential
+    renewal analysis of :mod:`repro.core.exact`.
     """
 
     prior_recall: float
@@ -86,29 +88,44 @@ class AdaptiveConfig:
     min_preds: int = 32
     min_faults: int = 16
     tol: float = 0.05
+    model_order: str = "first"
 
     def __post_init__(self) -> None:
         if self.min_preds < 1 or self.min_faults < 1:
             raise ValueError("confidence gate needs min_preds/min_faults >= 1")
         if self.tol <= 0.0:
             raise ValueError(f"tol must be positive, got {self.tol}")
+        if self.model_order not in ("first", "exact"):
+            raise ValueError(f"model_order must be 'first' or 'exact', "
+                             f"got {self.model_order!r}")
 
     def plan(self, platform: Platform, cp: float, recall: float,
              precision: float) -> tuple[float, float]:
-        """(period, trust threshold) of the paper-optimal plan at (r, p).
+        """(period, trust threshold) of the model-optimal plan at (r, p).
 
-        The threshold is beta_lim = C_p/p when the WASTE2 branch wins
-        (act on predictions past the breakpoint) and +inf when the
-        predictor is analytically not worth using (never trust).
+        The threshold is the trust breakpoint when the acting branch wins
+        (beta_lim = C_p/p at first order, its numeric analogue for the
+        exact model) and +inf when the predictor is analytically not worth
+        using (never trust).
         """
         pp = PredictedPlatform(platform, Predictor(recall, precision), cp)
-        t, _, use = optimal_period_with_prediction(pp)
-        return float(t), (beta_lim(pp) if use else math.inf)
+        if self.model_order == "exact":
+            from repro.core.exact import optimal_period_exact
+            ep = optimal_period_exact(pp)
+            t, thr = ep.period, (ep.threshold if ep.use_predictions
+                                 else math.inf)
+        else:
+            t, _, use = optimal_period_with_prediction(pp)
+            thr = beta_lim(pp) if use else math.inf
+        # Degenerate-estimate guard: a plan with T <= C makes no forward
+        # progress (W = T - C <= 0); floor the period so one checkpoint
+        # plus a proactive-checkpoint's worth of work always fits.
+        return max(float(t), platform.c + cp), thr
 
     def key(self) -> tuple:
         """Value-semantics tuple for result-cache candidate keys."""
         return (self.prior_recall, self.prior_precision, self.min_preds,
-                self.min_faults, self.tol)
+                self.min_faults, self.tol, self.model_order)
 
 
 def maybe_replan(cfg: AdaptiveConfig, platform: Platform, cp: float,

@@ -3,5 +3,17 @@
 import pytest
 
 
+def pytest_addoption(parser):
+    parser.addoption(
+        "--update-golden", action="store_true", default=False,
+        help="regenerate the pinned golden files under tests/golden/ "
+             "from the current engines instead of comparing against them")
+
+
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running CPU test")
+
+
+@pytest.fixture
+def update_golden(request) -> bool:
+    return request.config.getoption("--update-golden")

@@ -1,0 +1,269 @@
+"""Exact-Exponential analysis (repro.core.exact, arXiv:1207.6936).
+
+Covers the renewal formulas (no-prediction and threshold-policy branches),
+the numeric optimizers, the exact trust threshold, the first-order limits
+C/mu -> 0, and cross-validation of the exact expected-makespan formulas
+against both the scalar and the lane simulation engines.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import exact
+from repro.core.exact import (ExactPlan, beta_lim_exact,
+                              exact_cycle_prediction,
+                              expected_cycle_nopred,
+                              expected_makespan_exact_nopred,
+                              expected_makespan_exact_prediction,
+                              minimize_scalar, optimal_period_exact,
+                              optimal_period_exact_nopred, repair_time_exact,
+                              t_exact_nopred, waste_exact_nopred,
+                              waste_exact_prediction)
+from repro.core.prediction import (PredictedPlatform, Predictor, beta_lim,
+                                   optimal_period_with_prediction, t_pred,
+                                   waste1, waste2)
+from repro.core.waste import (Platform, expected_makespan_exponential,
+                              t_exact_exponential, t_rfo)
+
+MU_IND = 125.0 * 365.0 * 86400.0
+
+
+def pp(n=2**16, c=600.0, cp=600.0, d=60.0, r=600.0, recall=0.85,
+       precision=0.82) -> PredictedPlatform:
+    plat = Platform(mu=MU_IND / n, c=c, d=d, r=r)
+    return PredictedPlatform(plat, Predictor(recall, precision), cp)
+
+
+# -- repair + no-prediction branch -------------------------------------------
+
+def test_repair_time_first_order():
+    """Exact repair -> D + R as (D+R)/mu -> 0."""
+    plat = Platform(mu=1e7, c=600.0, d=60.0, r=600.0)
+    assert repair_time_exact(plat) == pytest.approx(660.0, rel=1e-4)
+    # Exact value: mu (e^{(D+R)/mu} - 1) > D + R always.
+    harsh = Platform(mu=2000.0, c=600.0, d=60.0, r=600.0)
+    assert repair_time_exact(harsh) > 660.0
+
+
+def test_nopred_formula_matches_bougeret_variant():
+    """The simulator-faithful formula agrees with the Bougeret et al. form
+    of waste.py to O(((D+R)/mu)^2) — they differ only in whether downtime
+    is fault-prone."""
+    plat = Platform(mu=MU_IND / 2**16, c=600.0, d=60.0, r=600.0)
+    t = t_exact_exponential(plat)
+    mine = expected_makespan_exact_nopred(t, 1e6, plat)
+    theirs = expected_makespan_exponential(t, 1e6, plat)
+    assert mine == pytest.approx(theirs, rel=5e-4)
+
+
+def test_t_exact_nopred_is_argmin():
+    """The Lambert-W period minimizes the exact no-prediction waste (the
+    repair prefactor is T-free, so it shares waste.py's closed form)."""
+    for n in (2**10, 2**16, 2**19):
+        plat = Platform(mu=MU_IND / n, c=600.0, d=60.0, r=600.0)
+        t0 = t_exact_nopred(plat)
+        assert t0 == t_exact_exponential(plat)
+        w0 = waste_exact_nopred(t0, plat)
+        for t in np.geomspace(plat.c * 1.001, 30 * t0, 200):
+            assert waste_exact_nopred(float(t), plat) >= w0 - 1e-12
+
+
+def test_nopred_period_rejects_degenerate():
+    plat = Platform(mu=1e5, c=600.0)
+    with pytest.raises(ValueError):
+        waste_exact_nopred(plat.c, plat)
+    with pytest.raises(ValueError):
+        exact_cycle_prediction(plat.c, pp(), beta_lim(pp()))
+
+
+# -- prediction branch --------------------------------------------------------
+
+def test_never_act_reduces_to_nopred():
+    """beta = +inf (or an empty acting region) collapses the prediction
+    cycle to the no-prediction renewal pair."""
+    ppl = pp()
+    t = 2.5 * ppl.platform.c + 4000.0
+    ey, ez = exact_cycle_prediction(t, ppl, math.inf)
+    lam = 1.0 / ppl.platform.mu
+    assert ey == pytest.approx(
+        expected_cycle_nopred(t, ppl.platform) * math.exp(-lam * t), rel=1e-12)
+    assert ez == pytest.approx(
+        (t - ppl.platform.c) * math.exp(-lam * t), rel=1e-12)
+    assert waste_exact_prediction(t, ppl, math.inf) == pytest.approx(
+        waste_exact_nopred(t, ppl.platform), rel=1e-12)
+
+
+def test_zero_recall_reduces_to_nopred():
+    """With no true predictions and no false-prediction rate the acting
+    region is irrelevant: the threshold policy is the plain periodic one."""
+    ppl = pp(recall=1e-15)
+    t = 9000.0
+    assert waste_exact_prediction(t, ppl, beta_lim(ppl)) == pytest.approx(
+        waste_exact_nopred(t, ppl.platform), rel=1e-6)
+    plan = optimal_period_exact(pp(recall=0.0))
+    assert not plan.use_predictions
+    assert plan.period == pytest.approx(t_exact_nopred(ppl.platform))
+
+
+def test_acting_helps_at_paper_scale():
+    """At the paper's synthetic scale the exact acting branch beats the
+    exact no-prediction branch, like the first-order analysis (§5)."""
+    for n in (2**16, 2**19):
+        ppl = pp(n=n)
+        plan = optimal_period_exact(ppl)
+        assert plan.use_predictions
+        assert plan.waste < optimal_period_exact_nopred(ppl.platform).waste
+
+
+def test_optimal_period_exact_beats_grid():
+    """(T*, beta*) from the optimizer beats a dense (T, beta) grid."""
+    ppl = pp()
+    plan = optimal_period_exact(ppl)
+    assert isinstance(plan, ExactPlan)
+    for t in np.geomspace(ppl.platform.c * 1.01, 40 * plan.period, 120):
+        for beta in (ppl.cp, beta_lim(ppl), 2 * beta_lim(ppl), math.inf):
+            assert 1.0 - _ratio(float(t), ppl, beta) >= plan.waste - 1e-9
+
+
+def _ratio(t, ppl, beta):
+    ey, ez = exact_cycle_prediction(t, ppl, beta)
+    return ez / ey
+
+
+def test_beta_lim_exact_is_argmin_and_limits():
+    """beta* minimizes the exact waste at T, and -> C_p/p as C/mu -> 0."""
+    ppl = pp()
+    t = t_pred(ppl)
+    b_star = beta_lim_exact(ppl, t)
+    w_star = waste_exact_prediction(t, ppl, b_star)
+    for b in np.linspace(ppl.cp, t, 80):
+        assert waste_exact_prediction(t, ppl, float(b)) >= w_star - 1e-12
+    rels = []
+    for n in (2**19, 2**16, 2**12):
+        ppl = pp(n=n)
+        rels.append(abs(beta_lim_exact(ppl, t_pred(ppl)) / beta_lim(ppl) - 1))
+    assert rels[0] > rels[1] > rels[2]
+    assert rels[-1] < 0.01
+
+
+@pytest.mark.parametrize("metric", ["waste1", "waste2", "t_pred"])
+def test_first_order_limit(metric):
+    """Exact formulas converge to the first-order model as C/mu -> 0."""
+    rels = []
+    for n in (2**19, 2**16, 2**12, 2**8):
+        ppl = pp(n=n)
+        plat = ppl.platform
+        if metric == "waste1":
+            t = t_rfo(plat)
+            rels.append(abs(waste_exact_nopred(t, plat) / waste1(t, ppl) - 1))
+        elif metric == "waste2":
+            t = t_pred(ppl)
+            rels.append(abs(waste_exact_prediction(t, ppl) / waste2(t, ppl)
+                            - 1))
+        else:
+            rels.append(abs(optimal_period_exact(ppl).period / t_pred(ppl)
+                            - 1))
+    assert all(a >= b for a, b in zip(rels, rels[1:])), rels
+    assert rels[-1] < 0.02, rels
+
+
+def test_exact_waste_above_first_order_never_below_ff():
+    """Exact waste stays in (0, 1) and above the fault-free floor C/T on
+    the whole admissible range."""
+    ppl = pp(n=2**19, c=1800.0, cp=1800.0)
+    for t in np.geomspace(ppl.platform.c * 1.01, 30 * ppl.platform.mu, 60):
+        w = waste_exact_prediction(float(t), ppl)
+        assert ppl.platform.c / t < w < 1.0
+
+
+# -- numeric optimizer --------------------------------------------------------
+
+def test_minimize_scalar_quadratic():
+    x = minimize_scalar(lambda v: (v - 3.25) ** 2, 0.1, 100.0)
+    assert x == pytest.approx(3.25, abs=1e-6)
+    # Degenerate bracket returns the lower bound.
+    assert minimize_scalar(lambda v: v, 5.0, 5.0) == 5.0
+
+
+def test_minimize_scalar_piecewise_kink():
+    """Golden section after a grid scan handles a kinked unimodal f."""
+    f = lambda v: abs(v - 7.0) + 0.01 * v
+    assert minimize_scalar(f, 0.5, 400.0) == pytest.approx(7.0, abs=1e-4)
+
+
+# -- engine cross-validation --------------------------------------------------
+
+def test_exact_makespan_matches_both_engines():
+    """The exact expected-makespan formulas predict the simulated mean of
+    the scalar AND the lane engine within a few percent (both engines
+    bit-for-bit equal, so one tolerance covers both)."""
+    from repro.core.policies import Strategy
+    from repro.core.simulator import NeverTrust, ThresholdTrust
+    from repro.experiments import ScenarioSpec, evaluate_strategies
+
+    sc = ScenarioSpec(n_traces=4)
+    traces = sc.make_traces()
+    plan = optimal_period_exact(sc.pp)
+    strategies = [
+        Strategy("exact_pred", plan.period, ThresholdTrust(plan.threshold)),
+        Strategy("exact_nopred", t_exact_nopred(sc.platform), NeverTrust()),
+    ]
+    kw = dict(seed=sc.seed, workers=0)
+    lane = evaluate_strategies(traces, sc.platform, sc.time_base, sc.cp,
+                               strategies, engine="batch", **kw)
+    scalar = evaluate_strategies(traces, sc.platform, sc.time_base, sc.cp,
+                                 strategies, engine="scalar", **kw)
+    assert lane == scalar  # bit-for-bit engine parity
+    em_pred = expected_makespan_exact_prediction(
+        plan.period, sc.time_base, sc.pp, plan.threshold)
+    em_np = expected_makespan_exact_nopred(
+        t_exact_nopred(sc.platform), sc.time_base, sc.platform)
+    assert em_pred == pytest.approx(lane[0], rel=0.05)
+    assert em_np == pytest.approx(lane[1], rel=0.05)
+
+
+# -- registry / axis integration ---------------------------------------------
+
+def test_model_order_axis_and_strategies():
+    from repro.experiments import ScenarioSpec, build_strategy
+
+    sc = ScenarioSpec()
+    sce = sc.replace(model_order="exact")
+    assert build_strategy("nopred", sc).period == \
+        pytest.approx(t_rfo(sc.platform))
+    assert build_strategy("nopred", sce).period == \
+        pytest.approx(t_exact_nopred(sc.platform))
+    t_first, _, _ = optimal_period_with_prediction(sc.pp)
+    assert build_strategy("prediction", sc).period == pytest.approx(t_first)
+    plan = optimal_period_exact(sc.pp)
+    s_exact = build_strategy("prediction", sce)
+    assert s_exact.period == pytest.approx(plan.period)
+    assert s_exact.trust.threshold == pytest.approx(plan.threshold)
+    # Explicit param overrides the scenario axis.
+    assert build_strategy("prediction", sc, model_order="exact").period == \
+        pytest.approx(plan.period)
+    with pytest.raises(ValueError):
+        build_strategy("prediction", sc, model_order="bogus")
+    with pytest.raises(ValueError):
+        ScenarioSpec(model_order="nope")
+
+
+def test_adaptive_model_order_in_candidate_key():
+    """The adaptive planner's model order is part of the result-cache
+    candidate key — first and exact adaptive candidates must never alias."""
+    from repro.experiments import ScenarioSpec, build_strategy
+    from repro.experiments.runner import _candidate_key, _persistable_key
+
+    sc = ScenarioSpec()
+    a_first = build_strategy("adaptive", sc)
+    a_exact = build_strategy("adaptive", sc.replace(model_order="exact"))
+    k1, k2 = _candidate_key(a_first), _candidate_key(a_exact)
+    assert k1 != k2
+    assert a_first.adaptive.key()[-1] == "first"
+    assert a_exact.adaptive.key()[-1] == "exact"
+    # Both candidate keys stay persistable (JSON value semantics).
+    assert _persistable_key(k1) is not None
+    assert _persistable_key(k2) is not None
+    assert _persistable_key(k1) != _persistable_key(k2)

@@ -1,0 +1,200 @@
+"""Cross-engine golden parity net (tests/golden/parity_v1.json).
+
+A small scenario matrix — baseline / prediction / exact-model / window /
+predictor-model / adaptive / stochastic-trust cells — runs through BOTH
+simulation engines:
+
+  * per cell, the scalar engine (``repro.core.simulator.simulate``) and the
+    lane engine (``repro.core.batch.simulate_lanes``) must agree
+    **bit-for-bit** on every per-trace makespan (the engines' equivalence
+    contract, exercised across every strategy family at once);
+  * the makespans (and each planner's period) must equal the committed
+    golden values **exactly** — full-precision floats survive the JSON
+    round-trip via repr, so any drift in trace generation, planning or
+    either engine fails loudly here before it can silently skew sweeps.
+
+Updating intentionally changed behaviour::
+
+    python -m pytest tests/test_golden_parity.py --update-golden
+    git diff tests/golden/parity_v1.json   # review, then commit
+
+(see tests/README.md).  The jax backend is compared in a subprocess (it
+needs x64 without disturbing this process's jax) on the cells it supports.
+"""
+
+import json
+import math
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core.batch import simulate_lanes
+from repro.core.simulator import simulate
+from repro.experiments import ScenarioSpec, StrategySpec
+
+GOLDEN_PATH = Path(__file__).parent / "golden" / "parity_v1.json"
+
+# One tiny, fast base scenario (~110 periods per trace); every cell keeps
+# the full paper mechanics, just less of it.
+_BASE = dict(n=2 ** 16, c=600.0, d=60.0, r=600.0, n_traces=2,
+             time_base_years_total=2000.0, seed=5)
+
+# name -> (scenario, strategy): the pinned matrix.  Keep entries stable;
+# *add* cells for new strategy families rather than mutating existing ones.
+_CELLS: dict[str, tuple[ScenarioSpec, StrategySpec]] = {
+    "baseline_rfo": (ScenarioSpec(**_BASE), StrategySpec("rfo")),
+    "prediction_optimal": (ScenarioSpec(**_BASE),
+                           StrategySpec("optimal_prediction")),
+    "prediction_exact_model": (ScenarioSpec(**_BASE, model_order="exact"),
+                               StrategySpec("prediction")),
+    "window_within": (ScenarioSpec(**_BASE, window=9000.0),
+                      StrategySpec("window_proactive")),
+    "predictor_lead_time": (
+        ScenarioSpec(**_BASE,
+                     predictor={"name": "lead_time",
+                                "params": {"lead_mean": 3600.0,
+                                           "min_lead": 600.0}}),
+        StrategySpec("optimal_prediction")),
+    "adaptive_stale_prior": (
+        ScenarioSpec(**_BASE),
+        StrategySpec("adaptive", {"prior_recall": 0.4,
+                                  "prior_precision": 0.95,
+                                  "min_preds": 8, "min_faults": 4,
+                                  "tol": 0.03})),
+    "stochastic_trust_q": (ScenarioSpec(**_BASE),
+                           StrategySpec("simple_policy", {"q": 0.5})),
+}
+
+_JAX_CELLS = ("baseline_rfo", "prediction_optimal")  # exact dates, static
+
+
+def _simulate_cell(name: str) -> dict:
+    """Run one cell through both engines; assert bit-for-bit parity."""
+    scenario, sspec = _CELLS[name]
+    strat = sspec.build(scenario)
+    traces = scenario.make_traces()
+    seeds = [scenario.seed + 7919 * i for i in range(len(traces))]
+    scalar = [
+        simulate(tr, scenario.platform, scenario.time_base, strat.period,
+                 cp=scenario.cp, trust=strat.trust,
+                 inexact_window=strat.inexact_window,
+                 window_mode=strat.window_mode,
+                 window_period=strat.window_period,
+                 adaptive=strat.adaptive,
+                 rng=np.random.default_rng(seeds[i])).makespan
+        for i, tr in enumerate(traces)
+    ]
+    lane = simulate_lanes(
+        traces, scenario.platform, scenario.time_base, cp=scenario.cp,
+        trace_indices=np.arange(len(traces)),
+        periods=[float(strat.period)] * len(traces),
+        trusts=[strat.trust] * len(traces),
+        windows=[strat.inexact_window] * len(traces),
+        window_modes=[strat.window_mode] * len(traces),
+        window_periods=[strat.window_period] * len(traces),
+        adaptives=[strat.adaptive] * len(traces),
+        seeds=seeds)
+    assert list(lane) == scalar, \
+        f"{name}: lane engine diverged from the scalar engine"
+    return {
+        "scenario": scenario.to_dict(),
+        "strategy": sspec.to_dict(),
+        "period": float(strat.period),
+        "makespans": scalar,
+    }
+
+
+def _read_golden() -> dict:
+    if not GOLDEN_PATH.exists():
+        return {"version": 1, "cells": {}}
+    return json.loads(GOLDEN_PATH.read_text())
+
+
+@pytest.mark.parametrize("name", sorted(_CELLS))
+def test_golden_parity(name, update_golden):
+    got = _simulate_cell(name)
+    if update_golden:
+        golden = _read_golden()
+        golden["cells"][name] = got
+        GOLDEN_PATH.parent.mkdir(parents=True, exist_ok=True)
+        GOLDEN_PATH.write_text(json.dumps(golden, indent=1, sort_keys=True)
+                               + "\n")
+        return
+    golden = _read_golden()
+    assert name in golden["cells"], \
+        f"no golden entry for {name!r}: run " \
+        f"`python -m pytest {Path(__file__).name} --update-golden` and " \
+        f"commit tests/golden/parity_v1.json"
+    want = golden["cells"][name]
+    assert got["period"] == want["period"], \
+        f"{name}: planned period drifted " \
+        f"({got['period']!r} != {want['period']!r})"
+    assert got["makespans"] == want["makespans"], \
+        f"{name}: makespans drifted from the golden file " \
+        f"({got['makespans']} != {want['makespans']}); if intentional, " \
+        f"re-pin with --update-golden and commit the diff"
+
+
+def test_golden_file_has_no_orphan_cells(update_golden):
+    """Every committed golden cell still has a live definition; in update
+    mode orphans are pruned instead, so a cell rename/removal heals with
+    the same --update-golden run that re-pins the live cells."""
+    golden = _read_golden()
+    orphans = set(golden["cells"]) - set(_CELLS)
+    if update_golden and orphans:
+        for name in orphans:
+            del golden["cells"][name]
+        GOLDEN_PATH.write_text(json.dumps(golden, indent=1, sort_keys=True)
+                               + "\n")
+        return
+    assert not orphans, f"golden cells without definitions: {sorted(orphans)}"
+
+
+# ---------------------------------------------------------------------------
+# JAX backend cells (subprocess: needs x64 without disturbing this process)
+# ---------------------------------------------------------------------------
+
+_JAX_GOLDEN_CHECK = """
+import json, sys
+import numpy as np
+from repro.core.batch import simulate_batch
+from repro.experiments import ScenarioSpec, StrategySpec
+
+golden = json.loads(open(sys.argv[1]).read())
+for name in sys.argv[2:]:
+    want = golden["cells"][name]
+    scenario = ScenarioSpec.from_dict(want["scenario"])
+    strat = StrategySpec.from_dict(want["strategy"]).build(scenario)
+    traces = scenario.make_traces()
+    batch = simulate_batch(
+        traces, scenario.platform, scenario.time_base, [float(strat.period)],
+        cp=scenario.cp, trust=strat.trust,
+        inexact_window=strat.inexact_window,
+        trace_seeds=[scenario.seed + 7919 * i for i in range(len(traces))],
+        backend="jax")
+    got = [float(m) for m in batch.makespan[0]]
+    assert got == want["makespans"], (name, got, want["makespans"])
+print("JAX-GOLDEN-OK")
+"""
+
+
+@pytest.mark.slow
+def test_jax_backend_matches_golden_subprocess():
+    jax = pytest.importorskip("jax")
+    del jax
+    if not GOLDEN_PATH.exists():
+        pytest.skip("golden file not generated yet")
+    env = dict(os.environ, JAX_ENABLE_X64="1",
+               PYTHONPATH=os.pathsep.join(
+                   [os.path.join(os.path.dirname(__file__), "..", "src")]
+                   + sys.path))
+    proc = subprocess.run(
+        [sys.executable, "-c", _JAX_GOLDEN_CHECK, str(GOLDEN_PATH)]
+        + list(_JAX_CELLS),
+        env=env, capture_output=True, text=True, timeout=570)
+    assert proc.returncode == 0, proc.stderr
+    assert "JAX-GOLDEN-OK" in proc.stdout

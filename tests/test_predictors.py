@@ -15,8 +15,8 @@ from repro.core.batch import simulate_batch
 from repro.core.simulator import (NeverTrust, SimResult, ThresholdTrust,
                                   simulate)
 from repro.core.traces import (FALSE_PRED, FAULT_PRED, FAULT_UNPRED,
-                               Exponential, Weibull, make_event_trace,
-                               make_event_trace_bank)
+                               EventTrace, Exponential, Weibull,
+                               make_event_trace, make_event_trace_bank)
 from repro.core.waste import Platform
 from repro.experiments import (DistributionSpec, EvalCache, ExperimentSpec,
                                PredictorSpec, ScenarioSpec, StrategySpec,
@@ -439,6 +439,104 @@ def test_v3_store_round_trips_adaptive_candidates(tmp_path):
                                 SMALL.cp, [ad], seed=7, cache=warm)
     assert again == first
     assert warm.misses == 0 and warm.hits == len(traces)
+
+
+def test_v3_format_adaptive_key_never_aliases_v4(tmp_path):
+    """A v3-format adaptive candidate key (5-element AdaptiveConfig tuple,
+    no model_order) decodes cleanly but can never equal a v4 candidate —
+    stale pre-model-order results are recomputed, never misread."""
+    ad = build_strategy("adaptive", SMALL)
+    v4_key = json.loads(_persistable_key(_candidate_key(ad)))
+    v3_key = list(v4_key)
+    v3_key[5] = v4_key[5][:5]  # drop the model_order element
+    (tmp_path / "ctx.json").write_text(json.dumps(
+        {"makespans": {json.dumps(v3_key): {"0": 12345.0}}}))
+    cache = EvalCache(persist_key="ctx", cache_dir=tmp_path)
+    assert len(cache) == 1           # the entry loads (it is well-formed)...
+    assert cache.get(ad, 0) is None  # ...but never serves a v4 candidate
+
+
+# ---------------------------------------------------------------------------
+# Estimator edge cases: empty streams, closed gates, final-event replans
+# ---------------------------------------------------------------------------
+
+_EDGE_PLATFORM = Platform(mu=1000.0, c=10.0, d=5.0, r=5.0)
+
+
+def _edge_trace(times, kinds, horizon=1e7) -> EventTrace:
+    return EventTrace(np.asarray(times, dtype=np.float64),
+                      np.asarray(kinds, dtype=np.int8), horizon)
+
+
+def _edge_cfg(**kw) -> AdaptiveConfig:
+    base = dict(prior_recall=0.5, prior_precision=0.5, min_preds=1,
+                min_faults=1, tol=0.05)
+    base.update(kw)
+    return AdaptiveConfig(**base)
+
+
+def _run_edge(trace, cfg, period=50.0, threshold=20.0, time_base=200.0):
+    scalar = simulate(trace, _EDGE_PLATFORM, time_base, period, cp=10.0,
+                      trust=ThresholdTrust(threshold), adaptive=cfg,
+                      rng=np.random.default_rng(0))
+    batch = simulate_batch([trace], _EDGE_PLATFORM, time_base, [period],
+                           cp=10.0, trust=ThresholdTrust(threshold),
+                           adaptive=cfg, trace_seeds=[0])
+    assert_same(batch.result(0, 0), scalar, "estimator edge lane")
+    return scalar
+
+
+def test_estimator_zero_prediction_trace():
+    """A trace with no predictions at all: the gate never opens, nothing
+    divides by zero, and the recall estimate (faults only) is 0."""
+    res = _run_edge(_edge_trace([60.0, 130.0],
+                                [FAULT_UNPRED, FAULT_UNPRED]), _edge_cfg())
+    assert res.n_predictions == 0 and res.n_faults == 2
+    assert res.n_replans == 0
+    assert res.est_recall == 0.0       # 0 predicted / 2 observed faults
+    assert res.est_precision == -1.0   # no predictions: sentinel
+    est = OnlineRPEstimator(min_preds=1, min_faults=1)
+    est.observe_fault(predicted=False)
+    assert not est.ready and est.precision is None
+    assert est.recall == 0.0
+
+
+def test_estimator_gate_never_opens():
+    """A confidence gate that can never be satisfied keeps the initial
+    plan verbatim (period, threshold) and replans exactly zero times."""
+    trace = _edge_trace([30.0, 60.0, 90.0, 130.0],
+                        [FAULT_PRED, FALSE_PRED, FAULT_PRED, FAULT_UNPRED])
+    res = _run_edge(trace, _edge_cfg(min_preds=10**9))
+    assert res.n_replans == 0
+    assert res.final_period == 50.0
+    assert res.final_threshold == 20.0
+    # Both outcome kinds were observed, so the estimates are still reported.
+    assert res.est_recall == pytest.approx(2 / 3)
+    assert res.est_precision == pytest.approx(2 / 3)
+
+
+def test_estimator_replan_at_final_event():
+    """The gate crossing on the very last trace event must replan exactly
+    once (estimates r-hat = p-hat = 1 are legal plan inputs)."""
+    res = _run_edge(_edge_trace([120.0], [FAULT_PRED]), _edge_cfg())
+    assert res.n_replans == 1
+    assert res.est_recall == 1.0 and res.est_precision == 1.0
+    assert res.final_period >= _EDGE_PLATFORM.c
+    assert math.isfinite(res.final_period)
+
+
+def test_estimator_event_after_completion_never_replans():
+    """A prediction dated past job completion is announced (counted) but
+    the machine finishes during the pre-checkpoint advance: the fault gate
+    stays closed and no replan fires."""
+    res = _run_edge(_edge_trace([1e6], [FALSE_PRED]), _edge_cfg())
+    assert res.n_predictions == 1 and res.n_faults == 0
+    assert res.n_replans == 0
+    assert res.est_precision == 0.0    # one prediction, never confirmed
+    assert res.est_recall == -1.0      # no faults observed: sentinel
+    # estimate_precision floors at P_HAT_MIN instead of dividing to 0.
+    from repro.predictors.estimator import P_HAT_MIN, estimate_precision
+    assert estimate_precision(0, 5) == P_HAT_MIN
 
 
 # ---------------------------------------------------------------------------

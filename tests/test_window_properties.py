@@ -1,0 +1,142 @@
+"""Hypothesis property tests for the window analytics (core/windows.py).
+
+Mirrors tests/test_prediction.py's style for the prediction-window family
+(arXiv:1302.4558): the closed-form in-window period T_p* is the argmin of
+the window waste on its validity branch, the window trust breakpoint is
+continuous across its branches, and every window formula collapses to the
+exact-date (window = 0) results of core/prediction.py.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional test dep: degrade to skip
+from hypothesis import assume, given, settings, strategies as st
+
+from repro.core.prediction import (PredictedPlatform, Predictor, beta_lim,
+                                   t_pred, waste2)
+from repro.core.waste import Platform
+from repro.core.windows import (WindowPlan, beta_lim_window,
+                                optimal_window_plan, t_window_period,
+                                waste_window, waste_window_ignore,
+                                waste_window_instant, waste_window_within,
+                                window_strategy)
+
+MU_IND = 125.0 * 365.0 * 86400.0
+
+
+def pp(n=2**16, c=600.0, cp=600.0, d=60.0, r=600.0, recall=0.85,
+       precision=0.82) -> PredictedPlatform:
+    plat = Platform(mu=MU_IND / n, c=c, d=d, r=r)
+    return PredictedPlatform(plat, Predictor(recall, precision), cp)
+
+
+# -- T_p* = sqrt(I C_p (2-p)/p) is the argmin on its branch -------------------
+
+@given(st.floats(0.1, 0.95), st.floats(0.1, 0.95),
+       st.sampled_from([0.25, 1.0, 2.0]), st.floats(2.0, 60.0),
+       st.integers(2**12, 2**19))
+@settings(max_examples=60, deadline=None)
+def test_t_window_period_is_argmin(r, p, cp_ratio, window_mult, n):
+    """On the valid branch (C_p < T_p <= C_p + I, so in-window checkpoints
+    actually fire), T_p* minimizes the within-mode waste."""
+    ppl = pp(n=n, recall=r, precision=p, cp=600.0 * cp_ratio)
+    window = window_mult * ppl.cp
+    tp_star = t_window_period(ppl, window)
+    # Skip degenerate windows where no in-window checkpoint pays off (the
+    # planner falls back to the instant plan there).
+    assume(tp_star > ppl.cp * 1.01 and tp_star - ppl.cp < window * 0.99)
+    t = t_pred(ppl)
+    w_star = waste_window_within(t, ppl, window, tp_star)
+    for tp in np.linspace(ppl.cp * 1.001, ppl.cp + window, 60):
+        assert waste_window_within(t, ppl, window, float(tp)) \
+            >= w_star - 1e-12
+
+
+@given(st.floats(0.1, 0.95), st.sampled_from([0.25, 1.0, 2.0]))
+@settings(max_examples=40, deadline=None)
+def test_t_window_period_closed_form(p, cp_ratio):
+    """T_p*^2 = I C_p (2-p)/p — the sqrt trade-off, and scaling in I."""
+    ppl = pp(precision=p, cp=600.0 * cp_ratio)
+    window = 4.0 * ppl.cp
+    tp = t_window_period(ppl, window)
+    assert tp ** 2 == pytest.approx(window * ppl.cp * (2.0 - p) / p,
+                                    rel=1e-9)
+    assert t_window_period(ppl, 4.0 * window) == pytest.approx(2.0 * tp,
+                                                               rel=1e-9)
+    assert t_window_period(ppl, 0.0) == math.inf
+
+
+# -- beta_lim_window branch continuity ----------------------------------------
+
+@given(st.floats(0.1, 0.95), st.floats(0.1, 0.95),
+       st.floats(1.2, 8.0), st.floats(100.0, 40000.0))
+@settings(max_examples=60, deadline=None)
+def test_beta_lim_window_continuous_in_window(r, p, tp_mult, window):
+    """The breakpoint is Lipschitz in I across the min(W_p, I) kink and
+    the max(0, .) clamp (derivative bounded by C_p kappa / T_p + 1)."""
+    ppl = pp(recall=r, precision=p)
+    tp = tp_mult * ppl.cp
+    lipschitz = ppl.cp * (2.0 - p) / (2.0 * p) / tp + 1.0
+    delta = 1e-3 * max(1.0, window)
+    f0 = beta_lim_window(ppl, window, tp)
+    f1 = beta_lim_window(ppl, window + delta, tp)
+    assert abs(f1 - f0) <= lipschitz * delta + 1e-9
+    assert f0 >= 0.0
+    # Exactly at the kink I = W_p the two branches agree.
+    wp = tp - ppl.cp
+    lo = beta_lim_window(ppl, wp * (1.0 - 1e-9), tp)
+    hi = beta_lim_window(ppl, wp * (1.0 + 1e-9), tp)
+    assert lo == pytest.approx(hi, abs=1e-3)
+
+
+@given(st.floats(0.1, 0.95), st.floats(1.2, 8.0))
+@settings(max_examples=40, deadline=None)
+def test_beta_lim_window_reaches_base_at_zero(p, tp_mult):
+    """I -> 0 recovers the exact-date Theorem-1 breakpoint, from either
+    the instant form (no T_p) or the within form (any T_p)."""
+    ppl = pp(precision=p)
+    base = beta_lim(ppl)
+    assert beta_lim_window(ppl, 0.0, None) == base
+    tp = tp_mult * ppl.cp
+    assert beta_lim_window(ppl, 0.0, tp) == base
+    # The I -> 0 slope is bounded by C_p kappa / T_p (< 10 on this grid).
+    assert beta_lim_window(ppl, 1e-6, tp) == pytest.approx(base, abs=1e-4)
+
+
+# -- window = 0 collapses to the exact-date formulas --------------------------
+
+@given(st.floats(0.1, 0.95), st.floats(0.1, 0.95),
+       st.sampled_from([0.5, 1.0, 2.0]), st.integers(2**12, 2**19))
+@settings(max_examples=60, deadline=None)
+def test_window_zero_collapses_to_exact_dates(r, p, cp_ratio, n):
+    ppl = pp(n=n, recall=r, precision=p, cp=600.0 * cp_ratio)
+    t = max(t_pred(ppl), ppl.platform.c * 1.5)
+    tp = 2.0 * ppl.cp
+    w2 = waste2(t, ppl)
+    assert waste_window_instant(t, ppl, 0.0) == pytest.approx(w2, rel=1e-12)
+    assert waste_window_within(t, ppl, 0.0, tp) == pytest.approx(w2,
+                                                                 rel=1e-12)
+    assert waste_window(t, ppl, 0.0, "instant") == \
+        waste_window_instant(t, ppl, 0.0)
+    # The ignore mode never depends on I at all.
+    assert waste_window_ignore(t, ppl, 0.0) == \
+        waste_window_ignore(t, ppl, 18000.0)
+
+
+@given(st.floats(0.3, 0.95), st.floats(0.3, 0.95))
+@settings(max_examples=30, deadline=None)
+def test_window_zero_plan_is_the_exact_date_plan(r, p):
+    """optimal_window_plan(I=0) degenerates to the instant plan at T_pred,
+    and the built strategy carries the exact-date trust threshold."""
+    ppl = pp(recall=r, precision=p)
+    plan = optimal_window_plan(ppl, 0.0, mode="within")
+    assert isinstance(plan, WindowPlan)
+    assert plan.mode == "instant" and plan.window_period == math.inf
+    assert plan.period == pytest.approx(t_pred(ppl))
+    assert plan.waste == pytest.approx(waste2(plan.period, ppl), rel=1e-12)
+    strat = window_strategy(ppl, 0.0, "instant")
+    assert strat.period == pytest.approx(t_pred(ppl))
+    assert strat.trust.threshold == pytest.approx(beta_lim(ppl))
