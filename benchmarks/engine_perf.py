@@ -62,6 +62,50 @@ def _engine_cell(traces, platform, time_base, cp, trust, periods, seeds,
     }
 
 
+def _fleet_cell(traces, platform, time_base, cp, trust, period,
+                seeds, n_jobs: int) -> dict:
+    """Time the fleet engine's degeneracy path (1-job fleets vs the scalar
+    loop, must agree bit-for-bit) and one contended N-job fleet."""
+    from repro.core.simulator import simulate
+    from repro.fleet.sim import FleetJobInput, simulate_fleet
+
+    n = min(n_jobs, len(traces))
+
+    def inp(i):
+        return FleetJobInput(trace=traces[i], platform=platform,
+                             time_base=time_base, period=period, cp=cp,
+                             trust=trust,
+                             rng=np.random.default_rng(int(seeds[i])))
+
+    t0 = time.perf_counter()
+    scalar = [simulate(traces[i], platform, time_base, period, cp=cp,
+                       trust=trust,
+                       rng=np.random.default_rng(int(seeds[i]))).makespan
+              for i in range(n)]
+    t_scalar = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    solo = [simulate_fleet([inp(i)]).jobs[0].sim.makespan for i in range(n)]
+    t_solo = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    coupled = simulate_fleet([inp(i) for i in range(n)], storage_streams=1)
+    t_coupled = time.perf_counter() - t0
+
+    return {
+        "n_jobs": n,
+        "scalar_s": round(t_scalar, 3),
+        "fleet_1job_s": round(t_solo, 3),
+        "coordination_overhead": round(t_solo / max(t_scalar, 1e-9), 2),
+        "fleet_coupled_s": round(t_coupled, 3),
+        "contention_s": round(sum(j.time_contention_ckpt
+                                  + j.time_contention_prockpt
+                                  for j in coupled.jobs), 2),
+        "max_abs_makespan_diff": max(abs(a - b)
+                                     for a, b in zip(solo, scalar)),
+    }
+
+
 def run(n_traces: int, n_periods: int, scalar_periods: int,
         batched_traces: bool) -> dict:
     from repro.core.prediction import beta_lim
@@ -122,6 +166,13 @@ def run(n_traces: int, n_periods: int, scalar_periods: int,
                      scalar_periods),
         lanes=n_periods * n_traces)
 
+    # -- fleet coordinator (PR 6): degeneracy overhead + contended run -----
+    # 1-job fleets must reproduce the scalar loop bit-for-bit; the cell
+    # records what the cooperative-coroutine coordinator costs on top.
+    out["fleet"] = _fleet_cell(traces, platform, time_base, cp, trust,
+                               float(periods[n_periods // 2]), seeds,
+                               n_jobs=8)
+
     # -- window-strategy lanes (arXiv:1302.4558 "within" mode) -------------
     # Same grid on a window-bearing bank with in-window proactive
     # checkpointing: the heaviest per-lane state the engine carries.
@@ -177,11 +228,20 @@ def main() -> None:
           f"batch {weng['batch_s']}s, scalar "
           f"~{weng['scalar_s_est_full_grid']}s -> {weng['speedup']}x "
           f"(max |diff| = {weng['max_abs_makespan_diff']})")
+    fl = result["fleet"]
+    print(f"fleet ({fl['n_jobs']} jobs): scalar {fl['scalar_s']}s, 1-job "
+          f"fleets {fl['fleet_1job_s']}s "
+          f"({fl['coordination_overhead']}x overhead), coupled "
+          f"{fl['fleet_coupled_s']}s with {fl['contention_s']}s contention "
+          f"(max |diff| = {fl['max_abs_makespan_diff']})")
     if eng["max_abs_makespan_diff"] > 1e-9:
         raise AssertionError("engines disagree beyond the 1e-9 contract")
     if weng["max_abs_makespan_diff"] > 1e-9:
         raise AssertionError("window-mode engines disagree beyond the "
                              "1e-9 contract")
+    if fl["max_abs_makespan_diff"] != 0.0:
+        raise AssertionError("1-job fleet broke the bit-for-bit degeneracy "
+                             "contract vs the scalar loop")
 
     with open(args.out, "w") as fh:
         json.dump(result, fh, indent=1)

@@ -1,0 +1,135 @@
+"""Fleet availability sweep: heterogeneous tenants, shared limits.
+
+A pinned two-tenant fleet from the model zoo — a 1B model on 256 devices
+next to a 405B model on 8192 (per-job C/C_p from the checkpoint manager's
+bytes/bandwidth model, mu from the shared per-chip MTBF) — planned under
+the paper's waste objective and under the availability objective of
+``repro.fleet.availability`` with mostly-concurrent checkpoints
+(phi_c = phi_p = 0.25, rho = 1), then simulated by the fleet engine.
+
+Claims asserted (quick and full mode):
+
+  * **objective divergence** (acceptance criterion): on every tenant the
+    availability-optimal period is sqrt(phi_c/rho) = 0.5x the
+    waste-optimal one — the two objectives provably plan differently on
+    the same hardware;
+  * **the divergence pays**: the availability plan *measures* a lower
+    weighted-outage fraction than the waste plan on both tenants (same
+    trace banks, paired comparison);
+  * **model-vs-simulator** (acceptance criterion): on the pinned
+    fault-rich 405B tenant the analytic unavailability tracks the fleet
+    simulator within a few percent (the 1B tenant sees ~3 faults per run
+    — quoted, not asserted: Monte-Carlo noise dominates);
+  * **staggering works**: on a twin-tenant contended cell (one storage
+    stream), bandwidth-aware staggering cuts checkpoint contention by an
+    order of magnitude.
+
+    PYTHONPATH=src python -m benchmarks.run --only fleet_sweep
+    PYTHONPATH=src python -m benchmarks.fleet_sweep
+"""
+
+from __future__ import annotations
+
+from repro.fleet import (FleetSpec, OutageWeights, evaluate_fleet,
+                         job_from_model)
+
+# Mostly-concurrent checkpoints, full-outage replay: the regime where the
+# availability objective diverges hardest from waste (sqrt(0.25) = 0.5).
+WEIGHTS = OutageWeights(ckpt=0.25, prockpt=0.25, replay=1.0)
+
+# Shared per-chip MTBF: 10 years (mu = mu_ind / n_devices, Prop. 2).
+MU_IND = 3650.0 * 86400.0
+
+# Simulator-vs-model tolerance on the pinned fault-rich tenant.
+TRACK_TOL = 0.10
+
+
+def _jobs(n_traces: int):
+    return (job_from_model("llama3.2-1b", n_devices=256, n_traces=n_traces,
+                           seed=0, mu_ind=MU_IND, time_base_days=20.0),
+            job_from_model("llama3-405b", n_devices=8192, n_traces=n_traces,
+                           seed=1, mu_ind=MU_IND, time_base_days=20.0))
+
+
+def _twins(n_traces: int):
+    return tuple(job_from_model("llama3-405b", n_devices=8192,
+                                n_traces=n_traces, seed=s, mu_ind=MU_IND,
+                                time_base_days=20.0, name=f"tenant{s}")
+                 for s in (1, 2))
+
+
+def run(quick: bool = True) -> dict:
+    n_traces = 5 if quick else 25
+    jobs = _jobs(n_traces)
+    out: dict = {}
+
+    # -- objective divergence on the heterogeneous fleet -------------------
+    tables = {}
+    for obj in ("waste", "availability"):
+        tables[obj] = evaluate_fleet(FleetSpec(
+            jobs=jobs, objective=obj, outage=WEIGHTS,
+            name=f"hetero-{obj}"))
+        print(tables[obj].format())
+    rows = {obj: {r["job"]: r for r in t.rows} for obj, t in tables.items()}
+    out["rows"] = {obj: t.rows for obj, t in tables.items()}
+
+    for job in ("llama3.2-1b", "llama3-405b"):
+        t_w = rows["waste"][job]["period"]
+        t_a = rows["availability"][job]["period"]
+        ratio = t_a / t_w
+        # sqrt(phi_c/rho) = 0.5 up to the O(beta^2/mu) prediction-term
+        # correction both optima carry (well under 0.1% here).
+        assert abs(ratio - 0.5) < 5e-4, \
+            f"{job}: availability period should be sqrt(phi_c/rho) = 0.5x " \
+            f"the waste period, got {ratio:.6f} ({t_a:.1f} vs {t_w:.1f})"
+        u_w = rows["waste"][job]["unavailability"]
+        u_a = rows["availability"][job]["unavailability"]
+        assert u_a < u_w, \
+            f"{job}: the availability plan must measure a lower weighted " \
+            f"outage ({u_a:.6f} vs {u_w:.6f})"
+        print(f"[fleet_sweep] {job}: T {t_w:.0f}s -> {t_a:.0f}s, "
+              f"measured U {u_w:.6f} -> {u_a:.6f}")
+
+    # -- analytic model vs fleet simulator (pinned fault-rich tenant) ------
+    big = rows["availability"]["llama3-405b"]
+    rel = big["expected_objective"] / big["unavailability"] - 1.0
+    assert abs(rel) < TRACK_TOL, \
+        f"analytic availability model off by {100 * rel:.1f}% vs the " \
+        f"fleet simulator on the 405B tenant (tol {100 * TRACK_TOL:.0f}%)"
+    small = rows["availability"]["llama3.2-1b"]
+    out["model_vs_sim"] = {
+        "llama3-405b": 1.0 + rel,
+        "llama3.2-1b_unasserted":
+            small["expected_objective"] / small["unavailability"],
+    }
+    print(f"[fleet_sweep] 405B model/sim = {1 + rel:.3f} "
+          f"(1B quoted: {out['model_vs_sim']['llama3.2-1b_unasserted']:.3f})")
+
+    # -- staggering under storage contention (twin tenants, one stream) ----
+    twins = _twins(n_traces)
+    cont = {}
+    for stagger in (False, True):
+        t = evaluate_fleet(FleetSpec(
+            jobs=twins, objective="availability", outage=WEIGHTS,
+            storage_streams=1, stagger=stagger,
+            name=f"twins-stagger={stagger}"))
+        cont[stagger] = sum(r["contention_ckpt_s"] + r["contention_prockpt_s"]
+                            for r in t.rows)
+    assert cont[True] < 0.1 * cont[False], \
+        f"staggering should cut twin-tenant contention by >10x " \
+        f"({cont[True]:.2f}s vs {cont[False]:.2f}s)"
+    out["contention_s"] = {"synchronized": cont[False],
+                           "staggered": cont[True]}
+    print(f"[fleet_sweep] twin-tenant contention: {cont[False]:.2f}s "
+          f"synchronized -> {cont[True]:.2f}s staggered")
+
+    print("[fleet_sweep] claims OK: periods diverge by sqrt(phi_c/rho), the "
+          "availability plan measures a lower weighted outage on every "
+          "tenant, the analytic model tracks the simulator, and "
+          "staggering removes contention")
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+    run(quick="--full" not in sys.argv)

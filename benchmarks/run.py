@@ -66,9 +66,9 @@ def report_roofline(path: str = "roofline_results.json") -> None:
 
 def _import_benchmarks():
     """Import every benchmark module so experiments register themselves."""
-    from . import (beyond, exact_sweep, exec_times, log_traces, multilevel,
-                   predictor_sweep, recall_precision, roofline, table2,
-                   waste_vs_n, window_sweep)
+    from . import (beyond, exact_sweep, exec_times, fleet_sweep, log_traces,
+                   multilevel, predictor_sweep, recall_precision, roofline,
+                   table2, waste_vs_n, window_sweep)
     del roofline  # registers the spec-driven accelerator sweep only
     return {
         "table2": table2.run,
@@ -81,6 +81,7 @@ def _import_benchmarks():
         "window_sweep": window_sweep.run,
         "predictor_sweep": predictor_sweep.run,
         "exact_sweep": exact_sweep.run,
+        "fleet_sweep": fleet_sweep.run,
     }
 
 

@@ -41,7 +41,26 @@ import numpy as np
 
 from ..kernels import ckpt_delta as _delta
 
-__all__ = ["SaveInfo", "CheckpointManager", "state_bytes"]
+__all__ = ["DELTA_RATIO_PRIOR", "SaveInfo", "CheckpointManager",
+           "state_bytes", "modeled_costs_from_bytes"]
+
+# Prior payload ratio of proactive (int8 delta + per-block scales) vs full
+# (bf16/fp32) checkpoints, used until a manager has measured its own saves.
+DELTA_RATIO_PRIOR = 0.27
+
+
+def modeled_costs_from_bytes(nbytes: float, *, bandwidth: float,
+                             n_shards: int = 1,
+                             delta_ratio: float = DELTA_RATIO_PRIOR,
+                             ) -> tuple[float, float]:
+    """(C, C_p) in seconds from a state size in bytes (no state needed).
+
+    The pure form of :meth:`CheckpointManager.modeled_costs`, for planners
+    that know the state size analytically (e.g. fleet jobs sized from
+    ``ModelConfig.param_count``) without instantiating any state.
+    """
+    b = nbytes / max(1, n_shards)
+    return b / bandwidth, delta_ratio * b / bandwidth
 
 
 def state_bytes(state: Any) -> int:
@@ -91,6 +110,8 @@ class CheckpointManager:
         os.makedirs(directory, exist_ok=True)
         self._last_full_state: Any = None   # host copy backing deltas
         self._last_full_step: int = -1
+        self._last_full_bytes: int = -1     # measured full payload size
+        self._delta_ratios: list[float] = []  # measured delta/full ratios
 
     # -- paths ---------------------------------------------------------------
 
@@ -133,6 +154,7 @@ class CheckpointManager:
         self._last_full_step = step
         self._gc()
         nbytes = os.path.getsize(path)
+        self._last_full_bytes = nbytes
         return SaveInfo(step, "full", nbytes, secs, path)
 
     # -- proactive (delta) checkpoints ----------------------------------------
@@ -165,6 +187,8 @@ class CheckpointManager:
         os.replace(tmp, path)
         secs = time.perf_counter() - t0
         nbytes = os.path.getsize(path)
+        if self._last_full_bytes > 0:
+            self._delta_ratios.append(nbytes / self._last_full_bytes)
         return SaveInfo(step, "proactive", nbytes, secs, path)
 
     # -- restore ----------------------------------------------------------------
@@ -210,15 +234,30 @@ class CheckpointManager:
 
     # -- cost model ---------------------------------------------------------------
 
+    @property
+    def measured_delta_ratio(self) -> float | None:
+        """Mean measured proactive/full payload ratio, or None if this
+        manager has not yet written a delta against a measured full."""
+        if not self._delta_ratios:
+            return None
+        return sum(self._delta_ratios) / len(self._delta_ratios)
+
     def modeled_costs(self, state: Any, n_shards: int = 1,
-                      delta_ratio: float = 0.27) -> tuple[float, float]:
+                      delta_ratio: float | None = None) -> tuple[float, float]:
         """(C, C_p) in seconds from bytes/bandwidth.
 
-        ``delta_ratio`` is the measured payload ratio of proactive vs full
-        checkpoints (int8 + per-block scales over bf16/fp32 state).
+        ``delta_ratio`` is the payload ratio of proactive vs full
+        checkpoints (int8 + per-block scales over bf16/fp32 state).  When
+        None (default) the ratio *measured from this manager's own saves*
+        is used, so C_p tracks the actual ``ckpt_delta`` sparsity; before
+        any delta has been written the ``DELTA_RATIO_PRIOR`` applies.
         """
-        b = state_bytes(state) / max(1, n_shards)
-        return b / self.bandwidth, delta_ratio * b / self.bandwidth
+        if delta_ratio is None:
+            measured = self.measured_delta_ratio
+            delta_ratio = DELTA_RATIO_PRIOR if measured is None else measured
+        return modeled_costs_from_bytes(
+            state_bytes(state), bandwidth=self.bandwidth, n_shards=n_shards,
+            delta_ratio=delta_ratio)
 
     # -- gc -------------------------------------------------------------------
 

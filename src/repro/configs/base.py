@@ -247,3 +247,8 @@ class PlatformConfig:
     recall: float = 0.85
     precision: float = 0.82
     ckpt_bandwidth: float = 2e9  # bytes/s per chip to stable storage
+    # Outage fractions for the availability objective (repro.fleet): how
+    # much of each cost is service downtime.  Unit weights = waste model.
+    ckpt_outage: float = 1.0     # stop-the-world fraction of a periodic C
+    prockpt_outage: float = 1.0  # ... of a proactive C_p
+    replay_outage: float = 1.0   # outage fraction of re-executed work

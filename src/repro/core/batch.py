@@ -253,11 +253,13 @@ class _LaneState:
         self.def_seq = np.full((L, 4), _BIG_SEQ, np.int64)
         self.next_seq = np.zeros(L, np.int64)
         # Per-lane online-estimator state (adaptive lanes only; SoA form of
-        # the scalar engine's integer counters + the (r, p) last planned on).
+        # the scalar engine's counters + the (r, p) last planned on).
+        # float64: EW (halflife) lanes decay the counts; integral values
+        # divide bit-for-bit like the legacy integers.
         i8 = np.int64
-        self.ad_ntp = np.zeros(L, i8)    # confirmed (true) predictions
-        self.ad_nfp = np.zeros(L, i8)    # false predictions
-        self.ad_nuf = np.zeros(L, i8)    # unpredicted faults
+        self.ad_ntp = np.zeros(L, f8)    # confirmed (true) predictions
+        self.ad_nfp = np.zeros(L, f8)    # false predictions
+        self.ad_nuf = np.zeros(L, f8)    # unpredicted faults
         self.ad_pr = np.zeros(L, f8)     # recall last planned on
         self.ad_pp = np.zeros(L, f8)     # precision last planned on
         # Counters.
@@ -431,6 +433,10 @@ def _run_lanes(
                             for a in lane_adaptive], dtype=np.int64)
         ad_tol = np.array([(a.tol if a else 0.0)
                            for a in lane_adaptive], dtype=np.float64)
+        # Windowed (EW) estimator decay per lane; 1.0 (legacy cumulative)
+        # multiplies the integral float counters exactly.
+        ad_dec = np.array([(a.decay if a else 1.0)
+                           for a in lane_adaptive], dtype=np.float64)
     within = lane_wmode == _WMODE_WITHIN
     if np.any(within & (lane_wperiod <= cp)):
         bad = float(lane_wperiod[within & (lane_wperiod <= cp)][0])
@@ -468,8 +474,9 @@ def _run_lanes(
             | (np.abs(p_hat - st.ad_pp[sub]) > ad_tol[sub])
         for lane in sub[moved]:
             out = maybe_replan(lane_adaptive[lane], platform, cp,
-                               int(st.ad_ntp[lane]), int(st.ad_nfp[lane]),
-                               int(st.ad_nuf[lane]),
+                               float(st.ad_ntp[lane]),
+                               float(st.ad_nfp[lane]),
+                               float(st.ad_nuf[lane]),
                                float(st.ad_pr[lane]), float(st.ad_pp[lane]))
             if out is None:      # pragma: no cover - the prefilter is exact
                 continue
@@ -540,9 +547,14 @@ def _run_lanes(
                 st.target[f_idx] = np.where(take_def[is_fault],
                                             df_t[is_fault], t_tr[is_fault])
                 st.pc[f_idx] = _PC_FAULT
-                # Unpredicted faults are recall observations.
+                # Unpredicted faults are recall observations (EW lanes
+                # age all three counters before the increment, matching
+                # the scalar engine's decay-then-increment sites).
                 upd = uf_idx[ad_active[uf_idx]]
                 if upd.size:
+                    st.ad_ntp[upd] *= ad_dec[upd]
+                    st.ad_nfp[upd] *= ad_dec[upd]
+                    st.ad_nuf[upd] *= ad_dec[upd]
                     st.ad_nuf[upd] += 1
                     _adaptive_replan(upd)
 
@@ -559,6 +571,9 @@ def _run_lanes(
                 # scalar engine updates at the same point).
                 upd = p_idx[ad_active[p_idx]]
                 if upd.size:
+                    st.ad_ntp[upd] *= ad_dec[upd]
+                    st.ad_nfp[upd] *= ad_dec[upd]
+                    st.ad_nuf[upd] *= ad_dec[upd]
                     st.ad_ntp[p_idx[is_true & ad_active[p_idx]]] += 1
                     st.ad_nfp[p_idx[~is_true & ad_active[p_idx]]] += 1
                     _adaptive_replan(upd)

@@ -397,6 +397,10 @@ def simulate(
         ad_planned_r = adaptive.prior_recall
         ad_planned_p = adaptive.prior_precision
         ad_period = float(period)
+        # Windowed (EW) estimator: decay all counters before each
+        # observation.  ad_dec == 1.0 keeps the legacy integer counters
+        # (and their arithmetic) bit-for-bit.
+        ad_dec = adaptive.decay
 
     res = SimResult(makespan=0.0, time_base=time_base)
     m = _Machine(platform, cp, period, time_base, res)
@@ -441,6 +445,10 @@ def simulate(
                 res.n_faults += 1
                 if adaptive is not None:
                     # An unpredicted fault: a recall observation.
+                    if ad_dec != 1.0:
+                        ad_ntp *= ad_dec
+                        ad_nfp *= ad_dec
+                        ad_nuf *= ad_dec
                     ad_nuf += 1
                     _ad_replan()
             m.advance_to(t)
@@ -456,6 +464,10 @@ def simulate(
             # The prediction's outcome is observed at announcement (see
             # repro.predictors.estimator); the re-planned threshold takes
             # effect from this very decision on.
+            if ad_dec != 1.0:
+                ad_ntp *= ad_dec
+                ad_nfp *= ad_dec
+                ad_nuf *= ad_dec
             if is_true:
                 ad_ntp += 1
             else:

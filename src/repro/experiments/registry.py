@@ -305,7 +305,8 @@ def _window_proactive(scenario: ScenarioSpec, window: float | None = None,
 def _adaptive(scenario: ScenarioSpec, prior_recall: float | None = None,
               prior_precision: float | None = None, min_preds: int = 32,
               min_faults: int = 16, tol: float = 0.05,
-              model_order: str | None = None) -> policies.Strategy:
+              model_order: str | None = None,
+              halflife: float | None = None) -> policies.Strategy:
     """Online (r-hat, p-hat) estimation with adaptive re-planning.
 
     Starts on the model-optimal plan for the *prior* (r, p) — the
@@ -313,7 +314,9 @@ def _adaptive(scenario: ScenarioSpec, prior_recall: float | None = None,
     ``prior_recall`` / ``prior_precision`` — then re-plans T* and the
     trust threshold from the gated running estimates as they drift
     (``repro.predictors.estimator``).  Both the initial plan and every
-    re-plan solve the scenario's ``model_order`` analysis.
+    re-plan solve the scenario's ``model_order`` analysis.  ``halflife``
+    (observations) switches the estimator to its windowed (EW) variant so
+    the plan tracks a drifting predictor instead of the all-time average.
     """
     from repro.predictors.estimator import AdaptiveConfig
     r0 = scenario.recall if prior_recall is None else float(prior_recall)
@@ -321,7 +324,8 @@ def _adaptive(scenario: ScenarioSpec, prior_recall: float | None = None,
         else float(prior_precision)
     cfg = AdaptiveConfig(prior_recall=r0, prior_precision=p0,
                          min_preds=min_preds, min_faults=min_faults, tol=tol,
-                         model_order=_scenario_order(scenario, model_order))
+                         model_order=_scenario_order(scenario, model_order),
+                         halflife=halflife)
     t0, thr0 = cfg.plan(scenario.platform, scenario.cp, r0, p0)
     return policies.Strategy("Adaptive", float(t0), ThresholdTrust(thr0),
                              adaptive=cfg)

@@ -95,7 +95,9 @@ _MIN_PARALLEL_SIMS = 16
 #     model_order field (PR 5); v3 stores hash differently and are ignored
 #     — invalidated, never misread — and a v3 adaptive key inside a store
 #     would decode into a 5-tuple that can never equal a v4 6-tuple.
-_EVAL_CACHE_VERSION = 4
+# v5: AdaptiveConfig.key() grew the halflife element (windowed/EW online
+#     estimator, PR 6); same invalidation story as v4 (6-tuple vs 7-tuple).
+_EVAL_CACHE_VERSION = 5
 
 
 def _env_flag(name: str) -> bool:

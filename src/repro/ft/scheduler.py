@@ -33,18 +33,31 @@ __all__ = ["ScheduleDecision", "CheckpointScheduler"]
 class ScheduleDecision:
     period: float          # chosen checkpointing period T*
     use_predictions: bool  # whether the WASTE2 branch won
-    beta_lim: float        # trust threshold C_p / p
-    expected_waste: float  # analytic waste at T*
+    beta_lim: float        # trust threshold (C_p/p; availability: beta_A)
+    expected_waste: float  # analytic objective value at T* (waste or U)
 
 
 class CheckpointScheduler:
-    """Plans checkpoint cadence and trust decisions for a live job."""
+    """Plans checkpoint cadence and trust decisions for a live job.
+
+    ``objective`` selects the analytic model the plan minimizes:
+    ``"waste"`` (default) is the paper's makespan overhead,
+    ``"availability"`` the weighted outage fraction of
+    :mod:`repro.fleet.availability`, using the platform's
+    ``ckpt_outage`` / ``prockpt_outage`` / ``replay_outage`` fractions
+    (unit weights plan identically to ``"waste"``).
+    """
 
     def __init__(self, platform: PlatformConfig, n_devices: int, *,
                  c: float | None = None, cp: float | None = None,
-                 use_predictor: bool = True) -> None:
+                 use_predictor: bool = True,
+                 objective: str = "waste") -> None:
+        if objective not in ("waste", "availability"):
+            raise ValueError(f"objective must be 'waste' or 'availability', "
+                             f"got {objective!r}")
         self.cfg = platform
         self.n_devices = n_devices
+        self.objective = objective
         self.c = float(c if c is not None else platform.c)
         self.cp = float(cp if cp is not None else platform.cp)
         if self.c <= 0 or self.cp <= 0:
@@ -54,7 +67,26 @@ class CheckpointScheduler:
         self.mu = platform.mu_ind / n_devices
         self.plat = Platform(mu=self.mu, c=self.c, d=platform.d, r=platform.r)
         self.use_predictor = use_predictor and platform.recall > 0
-        if self.use_predictor:
+        if objective == "availability":
+            from ..fleet.availability import (OutageWeights, beta_avail,
+                                              optimal_period_availability,
+                                              t_avail_nopred,
+                                              unavailability_nopred)
+            w = OutageWeights(ckpt=platform.ckpt_outage,
+                              prockpt=platform.prockpt_outage,
+                              replay=platform.replay_outage)
+            if self.use_predictor:
+                pred = Predictor(recall=platform.recall,
+                                 precision=platform.precision)
+                self.pp = PredictedPlatform(self.plat, pred, cp=self.cp)
+                t, u, use = optimal_period_availability(self.pp, w)
+                self.decision = ScheduleDecision(
+                    t, use, beta_avail(self.pp, w), u)
+            else:
+                t = t_avail_nopred(self.plat, w)
+                self.decision = ScheduleDecision(
+                    t, False, math.inf, unavailability_nopred(t, self.plat, w))
+        elif self.use_predictor:
             pred = Predictor(recall=platform.recall,
                              precision=platform.precision)
             self.pp = PredictedPlatform(self.plat, pred, cp=self.cp)

@@ -56,13 +56,23 @@ __all__ = [
 P_HAT_MIN = 1e-3
 
 
-def estimate_recall(n_true_pred: int, n_unpred_faults: int) -> float:
+def decay_factor(halflife: float | None) -> float:
+    """Per-observation decay of the windowed (EW) estimator counters.
+
+    ``halflife`` is measured in observations: after that many further
+    events an old observation's weight has halved.  ``None`` (the legacy
+    cumulative estimator) decays nothing.
+    """
+    return 1.0 if halflife is None else 0.5 ** (1.0 / halflife)
+
+
+def estimate_recall(n_true_pred: float, n_unpred_faults: float) -> float:
     """r-hat = predicted faults / all faults (every true prediction is one
     predicted fault)."""
     return n_true_pred / (n_true_pred + n_unpred_faults)
 
 
-def estimate_precision(n_true_pred: int, n_false_pred: int) -> float:
+def estimate_precision(n_true_pred: float, n_false_pred: float) -> float:
     """p-hat = confirmed predictions / all predictions, floored at
     :data:`P_HAT_MIN`."""
     p = n_true_pred / (n_true_pred + n_false_pred)
@@ -89,6 +99,7 @@ class AdaptiveConfig:
     min_faults: int = 16
     tol: float = 0.05
     model_order: str = "first"
+    halflife: float | None = None
 
     def __post_init__(self) -> None:
         if self.min_preds < 1 or self.min_faults < 1:
@@ -98,6 +109,18 @@ class AdaptiveConfig:
         if self.model_order not in ("first", "exact"):
             raise ValueError(f"model_order must be 'first' or 'exact', "
                              f"got {self.model_order!r}")
+        if self.halflife is not None:
+            if self.halflife <= 0.0:
+                raise ValueError(f"halflife must be positive, "
+                                 f"got {self.halflife}")
+            # The decayed counters converge to sum(decay^k) = 1/(1 - decay)
+            # ~= 1.44 * halflife: a gate above that ceiling never opens.
+            ceiling = 1.0 / (1.0 - decay_factor(self.halflife))
+            if min(self.min_preds, self.min_faults) > ceiling:
+                raise ValueError(
+                    f"halflife {self.halflife} caps the effective counts at "
+                    f"~{ceiling:.1f}; the gate (min_preds={self.min_preds}, "
+                    f"min_faults={self.min_faults}) would never open")
 
     def plan(self, platform: Platform, cp: float, recall: float,
              precision: float) -> tuple[float, float]:
@@ -125,11 +148,17 @@ class AdaptiveConfig:
     def key(self) -> tuple:
         """Value-semantics tuple for result-cache candidate keys."""
         return (self.prior_recall, self.prior_precision, self.min_preds,
-                self.min_faults, self.tol, self.model_order)
+                self.min_faults, self.tol, self.halflife, self.model_order)
+
+    @property
+    def decay(self) -> float:
+        """Per-observation counter decay factor (1.0 = cumulative)."""
+        return decay_factor(self.halflife)
 
 
 def maybe_replan(cfg: AdaptiveConfig, platform: Platform, cp: float,
-                 n_true_pred: int, n_false_pred: int, n_unpred_faults: int,
+                 n_true_pred: float, n_false_pred: float,
+                 n_unpred_faults: float,
                  planned_recall: float, planned_precision: float,
                  ) -> tuple[float, float, float, float] | None:
     """One estimator observation step, shared by both engines.
@@ -159,17 +188,33 @@ class OnlineRPEstimator:
     order, read the gated estimates back.  Used by the runtime layer and
     the examples; the engines inline the same integer counters for
     bit-for-bit scalar/batch parity.
+
+    ``halflife`` turns the cumulative counters into exponentially-weighted
+    ones (decayed by :func:`decay_factor` before every observation), so the
+    estimates track a *drifting* predictor instead of converging to the
+    stale all-time average — at the cost of capping the effective counts at
+    ~1.44 * halflife (size the gate below that).
     """
 
-    def __init__(self, *, min_preds: int = 32, min_faults: int = 16) -> None:
+    def __init__(self, *, min_preds: int = 32, min_faults: int = 16,
+                 halflife: float | None = None) -> None:
         self.min_preds = min_preds
         self.min_faults = min_faults
-        self.n_true_pred = 0
-        self.n_false_pred = 0
-        self.n_unpred_faults = 0
+        self.halflife = halflife
+        self._decay = decay_factor(halflife)
+        self.n_true_pred: float = 0
+        self.n_false_pred: float = 0
+        self.n_unpred_faults: float = 0
+
+    def _age(self) -> None:
+        if self._decay != 1.0:
+            self.n_true_pred *= self._decay
+            self.n_false_pred *= self._decay
+            self.n_unpred_faults *= self._decay
 
     def observe_prediction(self, confirmed: bool) -> None:
         """A prediction whose outcome is known (materialized or not)."""
+        self._age()
         if confirmed:
             self.n_true_pred += 1
         else:
@@ -181,14 +226,15 @@ class OnlineRPEstimator:
         Predicted faults are already counted by their confirmed
         prediction, so only unpredicted ones advance a counter here."""
         if not predicted:
+            self._age()
             self.n_unpred_faults += 1
 
     @property
-    def n_predictions(self) -> int:
+    def n_predictions(self) -> float:
         return self.n_true_pred + self.n_false_pred
 
     @property
-    def n_faults(self) -> int:
+    def n_faults(self) -> float:
         return self.n_true_pred + self.n_unpred_faults
 
     @property

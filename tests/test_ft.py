@@ -117,6 +117,56 @@ def test_steps_per_checkpoint():
     assert n == int((sched.period - sched.c) / 10.0)
 
 
+# A platform roomy enough that the availability optimum is not clamped
+# (period caps at ALPHA_CAP * mu otherwise).
+_AVAIL_PLAT = dataclasses.replace(PLAT, mu_ind=3e5)
+
+
+def test_scheduler_availability_objective_scales_period():
+    """phi_c=0.25, rho=1: cheap (mostly concurrent) checkpoints halve the
+    availability-optimal period vs the waste-optimal one."""
+    cheap = dataclasses.replace(_AVAIL_PLAT, ckpt_outage=0.25,
+                                prockpt_outage=0.25, replay_outage=1.0)
+    a = CheckpointScheduler(cheap, n_devices=1, use_predictor=False,
+                            objective="availability")
+    w = CheckpointScheduler(cheap, n_devices=1, use_predictor=False,
+                            objective="waste")
+    assert a.period == pytest.approx(0.5 * w.period, rel=1e-12)
+    assert a.decision.expected_waste < 1.0   # it's a U value, well-defined
+
+
+def test_scheduler_availability_unit_weights_degenerate():
+    """Unit outage weights: availability plans the waste-optimal period and
+    the Theorem-1 threshold exactly."""
+    a = CheckpointScheduler(_AVAIL_PLAT, n_devices=1,
+                            objective="availability")
+    w = CheckpointScheduler(_AVAIL_PLAT, n_devices=1, objective="waste")
+    assert a.decision.use_predictions == w.decision.use_predictions
+    if a.decision.use_predictions:
+        assert a.decision.beta_lim == pytest.approx(w.decision.beta_lim)
+
+
+def test_scheduler_availability_trust_threshold_is_beta_a():
+    """beta_A = phi_p C_p / (rho p) < beta_lim: the scheduler acts on
+    predictions closer to the last save when proactive outage is cheap."""
+    cheap = dataclasses.replace(_AVAIL_PLAT, ckpt_outage=0.25,
+                                prockpt_outage=0.25, replay_outage=1.0)
+    a = CheckpointScheduler(cheap, n_devices=1, objective="availability")
+    w = CheckpointScheduler(cheap, n_devices=1, objective="waste")
+    if a.decision.use_predictions and w.decision.use_predictions:
+        assert a.decision.beta_lim == pytest.approx(
+            0.25 * w.decision.beta_lim)
+        a.notify_save_completed(0.0)
+        w.notify_save_completed(0.0)
+        mid = 0.5 * (a.decision.beta_lim + w.decision.beta_lim)
+        assert a.trust(mid) and not w.trust(mid)
+
+
+def test_scheduler_rejects_unknown_objective():
+    with pytest.raises(ValueError, match="objective"):
+        CheckpointScheduler(PLAT, n_devices=1, objective="throughput")
+
+
 # -- end-to-end trainer --------------------------------------------------------------
 
 @pytest.fixture(scope="module")

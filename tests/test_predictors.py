@@ -277,6 +277,99 @@ def test_adaptive_config_validation():
         AdaptiveConfig(0.5, 0.5, min_preds=0)
     with pytest.raises(ValueError):
         AdaptiveConfig(0.5, 0.5, tol=0.0)
+    with pytest.raises(ValueError):
+        AdaptiveConfig(0.5, 0.5, halflife=0.0)
+    # A gate above the EW effective-count ceiling (~1.44 * halflife) can
+    # never open — rejected at construction, not silently dead.
+    with pytest.raises(ValueError, match="never open"):
+        AdaptiveConfig(0.5, 0.5, min_preds=32, min_faults=16, halflife=8.0)
+    cfg = AdaptiveConfig(0.5, 0.5, min_preds=8, min_faults=4, halflife=24.0)
+    assert 0.0 < cfg.decay < 1.0
+    assert AdaptiveConfig(0.5, 0.5).decay == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Windowed (EW) estimator: drift tracking
+# ---------------------------------------------------------------------------
+
+def _feed_trace(est: OnlineRPEstimator, trace: EventTrace) -> None:
+    for kind in trace.kinds:
+        if kind == FALSE_PRED:
+            est.observe_prediction(False)
+        elif kind == FAULT_PRED:
+            est.observe_prediction(True)
+        else:
+            est.observe_fault(predicted=False)
+
+
+def test_ew_estimator_tracks_drifting_predictor():
+    """Cumulative counters converge to the all-time average; the EW
+    variant follows the drifting model down to its end-of-run recall."""
+    model = DriftingPredictor(0.9, 0.8, recall_end=0.2,
+                              drift_start=0.0, drift_span=200_000.0)
+    tr = make_event_trace(Exponential(1.0), 100.0, 0.9, 0.8, 400_000.0,
+                          np.random.default_rng(11), predictor_model=model)
+    cum = OnlineRPEstimator(min_preds=8, min_faults=8)
+    ew = OnlineRPEstimator(min_preds=8, min_faults=8, halflife=64.0)
+    _feed_trace(cum, tr)
+    _feed_trace(ew, tr)
+    assert cum.ready and ew.ready
+    # The trace's second half sits flat at the end recall.
+    assert abs(ew.recall - 0.2) < abs(cum.recall - 0.2)
+    assert ew.recall < cum.recall - 0.1
+    # Effective counts saturate at 1/(1 - decay), never beyond.
+    assert ew.n_predictions <= 1.0 / (1.0 - ew._decay) + 1e-9
+    # Precision did not drift; both estimators should agree roughly.
+    assert ew.precision == pytest.approx(cum.precision, abs=0.15)
+
+
+def test_ew_estimator_none_halflife_is_cumulative():
+    a = OnlineRPEstimator(min_preds=2, min_faults=2)
+    b = OnlineRPEstimator(min_preds=2, min_faults=2, halflife=None)
+    for est in (a, b):
+        for confirmed in (True, False, True, True):
+            est.observe_prediction(confirmed)
+        est.observe_fault(predicted=False)
+    assert a.n_true_pred == b.n_true_pred == 3
+    assert a.recall == b.recall and a.precision == b.precision
+
+
+def test_adaptive_halflife_batch_matches_scalar_bit_for_bit():
+    p, tb, cp, _, _, _, traces = _parity_case()
+    cfg = AdaptiveConfig(prior_recall=0.3, prior_precision=0.95,
+                         min_preds=8, min_faults=4, tol=0.03, halflife=24.0)
+    t0, thr0 = cfg.plan(p, cp, cfg.prior_recall, cfg.prior_precision)
+    trust = ThresholdTrust(thr0)
+    batch = simulate_batch(traces, p, tb, [t0], cp=cp, trust=trust,
+                           adaptive=cfg, trace_seeds=13)
+    for ti, tr in enumerate(traces):
+        want = simulate(tr, p, tb, t0, cp=cp, trust=trust, adaptive=cfg,
+                        rng=np.random.default_rng(13))
+        assert_same(batch.result(0, ti), want, f"EW trace {ti}")
+
+
+def test_adaptive_halflife_simulation_tracks_drift():
+    """End-of-run (r-hat) of the EW adaptive run sits near the drifted
+    recall; the cumulative run is pulled up by the stale early phase."""
+    p = Platform(mu=2000.0, c=60.0, d=6.0, r=60.0)
+    tb = 400_000.0
+    model = DriftingPredictor(0.9, 0.8, recall_end=0.2,
+                              drift_start=0.0, drift_span=200_000.0)
+    tr = make_event_trace(Exponential(1.0), p.mu, 0.9, 0.8, 1_200_000.0,
+                          np.random.default_rng(17), predictor_model=model)
+    kw = dict(prior_recall=0.9, prior_precision=0.8,
+              min_preds=8, min_faults=8, tol=0.03)
+    runs = {}
+    for name, halflife in (("cum", None), ("ew", 64.0)):
+        cfg = AdaptiveConfig(halflife=halflife, **kw)
+        t0, thr0 = cfg.plan(p, 60.0, 0.9, 0.8)
+        runs[name] = simulate(tr, p, tb, t0, cp=60.0,
+                              trust=ThresholdTrust(thr0), adaptive=cfg,
+                              rng=np.random.default_rng(23))
+    assert runs["ew"].n_replans >= 1
+    assert runs["cum"].est_recall > -1.0 and runs["ew"].est_recall > -1.0
+    assert abs(runs["ew"].est_recall - 0.2) \
+        < abs(runs["cum"].est_recall - 0.2)
 
 
 # ---------------------------------------------------------------------------
