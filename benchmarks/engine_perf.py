@@ -62,6 +62,63 @@ def _engine_cell(traces, platform, time_base, cp, trust, periods, seeds,
     }
 
 
+def _jax_cell(traces, platform, time_base, cp, trust, periods, seeds,
+              big_lanes: int, **sim_kwargs) -> dict | None:
+    """Flagship jax engine: the numpy candidate grid re-run on
+    ``backend="jax"`` (must agree **bit-for-bit**, compared with ``==``)
+    plus a large replicated lane sweep on a light scenario, timed in
+    lanes/sec through the chunked execution path."""
+    try:
+        import jax
+    except ImportError:
+        return None
+    # The engines' bitwise contract needs float64 lane state; the update
+    # must land before the first jax operation of the process.
+    jax.config.update("jax_enable_x64", True)
+    os.environ.setdefault("REPRO_JAX_CHUNK", str(2 ** 16))
+    from repro.core.batch import simulate_batch, simulate_lanes
+    from repro.core.simulator import ThresholdTrust
+    from repro.core.traces import Exponential, make_event_trace
+    from repro.core.waste import Platform
+
+    t0 = time.perf_counter()
+    ref = simulate_batch(traces, platform, time_base, periods, cp=cp,
+                         trust=trust, trace_seeds=seeds, **sim_kwargs)
+    t_numpy = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    jbatch = simulate_batch(traces, platform, time_base, periods, cp=cp,
+                            trust=trust, trace_seeds=seeds, backend="jax",
+                            **sim_kwargs)
+    t_jax = time.perf_counter() - t0
+    bitwise = bool((jbatch.makespan == ref.makespan).all())
+
+    # Large-lane sweep: a light scenario (short job, ~120 events/trace) so
+    # the cell measures lane throughput, not one giant paper run.
+    lp = Platform(mu=2500.0, c=60.0, d=10.0, r=30.0)
+    bank = [make_event_trace(Exponential(1.0), lp.mu, 0.7, 0.6, 200000.0,
+                             np.random.default_rng(s)) for s in range(64)]
+    idx = np.arange(big_lanes) % len(bank)
+    t0 = time.perf_counter()
+    simulate_lanes(bank, lp, 50000.0, cp=30.0, trace_indices=idx,
+                   periods=np.full(big_lanes, 1200.0),
+                   trusts=[ThresholdTrust(100.0)] * big_lanes,
+                   windows=np.full(big_lanes, 300.0),
+                   seeds=np.arange(big_lanes) + 7, backend="jax")
+    t_big = time.perf_counter() - t0
+    return {
+        "grid": f"{len(periods)} periods x {len(traces)} traces",
+        "batch_jax_s": round(t_jax, 3),
+        "batch_numpy_s": round(t_numpy, 3),
+        "bitwise_equal": bitwise,
+        "device": f"{jax.devices()[0].platform}"
+                  f"-{jax.devices()[0].device_kind}",
+        "big_lanes": int(big_lanes),
+        "big_lanes_s": round(t_big, 3),
+        "lanes_per_s": round(big_lanes / max(t_big, 1e-9), 1),
+        "chunk": int(os.environ["REPRO_JAX_CHUNK"]),
+    }
+
+
 def _fleet_cell(traces, platform, time_base, cp, trust, period,
                 seeds, n_jobs: int) -> dict:
     """Time the fleet engine's degeneracy path (1-job fleets vs the scalar
@@ -107,7 +164,7 @@ def _fleet_cell(traces, platform, time_base, cp, trust, period,
 
 
 def run(n_traces: int, n_periods: int, scalar_periods: int,
-        batched_traces: bool) -> dict:
+        batched_traces: bool, big_lanes: int) -> dict:
     from repro.core.prediction import beta_lim
     from repro.core.simulator import ThresholdTrust
     from repro.experiments.spec import ScenarioSpec
@@ -166,6 +223,12 @@ def run(n_traces: int, n_periods: int, scalar_periods: int,
                      scalar_periods),
         lanes=n_periods * n_traces)
 
+    # -- flagship jax engine (PR 7): same grid bit-for-bit + lane scale ----
+    jcell = _jax_cell(traces, platform, time_base, cp, trust, periods,
+                      seeds, big_lanes)
+    if jcell is not None:
+        out["engine_jax"] = jcell
+
     # -- fleet coordinator (PR 6): degeneracy overhead + contended run -----
     # 1-job fleets must reproduce the scalar loop bit-for-bit; the cell
     # records what the cooperative-coroutine coordinator costs on top.
@@ -204,6 +267,9 @@ def main() -> None:
     ap.add_argument("--batched-traces", action="store_true",
                     help="benchmark the engines on a bank sampled in "
                          "shared RNG waves")
+    ap.add_argument("--big-lanes", type=int, default=None,
+                    help="jax large-lane sweep size (default 2^20; "
+                         "2^14 with --quick)")
     ap.add_argument("--out", default="BENCH_simulator.json")
     args = ap.parse_args()
 
@@ -211,8 +277,10 @@ def main() -> None:
     n_periods = args.periods or (6 if args.quick else 24)
     scalar_periods = args.scalar_periods or (1 if args.quick else 3)
     scalar_periods = min(scalar_periods, n_periods)
+    big_lanes = args.big_lanes or (2 ** 14 if args.quick else 2 ** 20)
 
-    result = run(n_traces, n_periods, scalar_periods, args.batched_traces)
+    result = run(n_traces, n_periods, scalar_periods, args.batched_traces,
+                 big_lanes)
     gen, eng = result["bank_gen"], result["engine"]
     weng = result["engine_window"]
     small = result["bank_gen_small_traces"]
@@ -234,6 +302,16 @@ def main() -> None:
           f"({fl['coordination_overhead']}x overhead), coupled "
           f"{fl['fleet_coupled_s']}s with {fl['contention_s']}s contention "
           f"(max |diff| = {fl['max_abs_makespan_diff']})")
+    if "engine_jax" in result:
+        jx = result["engine_jax"]
+        print(f"engine jax [{jx['device']}] ({jx['grid']}): "
+              f"{jx['batch_jax_s']}s vs numpy {jx['batch_numpy_s']}s, "
+              f"bitwise_equal={jx['bitwise_equal']}; "
+              f"{jx['big_lanes']} lanes in {jx['big_lanes_s']}s "
+              f"({jx['lanes_per_s']:,} lanes/s, chunk {jx['chunk']})")
+        if not jx["bitwise_equal"]:
+            raise AssertionError("jax engine broke the bit-for-bit "
+                                 "equivalence contract vs the numpy lanes")
     if eng["max_abs_makespan_diff"] > 1e-9:
         raise AssertionError("engines disagree beyond the 1e-9 contract")
     if weng["max_abs_makespan_diff"] > 1e-9:

@@ -193,10 +193,11 @@ def main() -> None:
                     help="bypass the persistent on-disk result cache "
                          "(~/.cache/repro or $REPRO_CACHE_DIR)")
     ap.add_argument("--engine", default=None,
-                    choices=("auto", "batch", "scalar"),
+                    choices=("auto", "batch", "scalar", "jax"),
                     help="simulation engine for --experiment runs "
                          "(default auto: lane-parallel batched where "
-                         "possible, scalar fallback otherwise)")
+                         "possible, scalar fallback otherwise; jax needs "
+                         "JAX_ENABLE_X64=1)")
     ap.add_argument("--batched-traces", action="store_true",
                     help="sample each cell's trace bank in shared RNG "
                          "waves (a different but statistically identical "

@@ -38,14 +38,17 @@ for every supported candidate:
     :func:`repro.predictors.estimator.maybe_replan` — estimates, replan
     points and plans are bit-for-bit the scalar engine's.
 
-An optional JAX backend (``backend="jax"``) runs the same lockstep loop as
-a single ``lax.while_loop`` over the lane arrays so banks can be dispatched
-to accelerators; it supports the four standard trust policies and inexact
-prediction windows (per-lane randomness is pre-drawn into stream-prefix
-tables, consumed at the same draw sites as the scalar engine), and
-requires x64 mode for the equivalence contract to hold.  Window-bearing
-traces, "within" window modes and adaptive candidates still need the NumPy
-backend.
+The JAX backend (``backend="jax"``, :mod:`repro.core.batch_jax`) runs the
+same lockstep loop as a jitted ``lax.while_loop`` over vmapped per-lane
+steps so banks can be dispatched to accelerators at feature parity: all
+four standard trust policies, exact/inexact/per-event prediction windows,
+both window action modes, and adaptive re-planning (the replan math runs
+on the host through :func:`repro.predictors.estimator.maybe_replan` via
+``jax.pure_callback``, so plans are bit-for-bit the scalar engine's).
+Per-lane randomness is pre-drawn into stream-prefix tables consumed at
+the same draw sites as the scalar engine; x64 mode is required for the
+equivalence contract to hold.  Large grids are chunked (and optionally
+``shard_map``-ed across devices) by the driver in ``batch_jax``.
 """
 
 from __future__ import annotations
@@ -178,6 +181,7 @@ class BatchResult:
     final_threshold: np.ndarray | None = None
     est_recall: np.ndarray | None = None
     est_precision: np.ndarray | None = None
+    est_mu: np.ndarray | None = None
 
     @property
     def waste(self) -> np.ndarray:
@@ -212,6 +216,8 @@ class BatchResult:
             res.est_recall = float(self.est_recall[ci, ti])
         if self.est_precision is not None:
             res.est_precision = float(self.est_precision[ci, ti])
+        if self.est_mu is not None:
+            res.est_mu = float(self.est_mu[ci, ti])
         return res
 
 
@@ -262,6 +268,12 @@ class _LaneState:
         self.ad_nuf = np.zeros(L, f8)    # unpredicted faults
         self.ad_pr = np.zeros(L, f8)     # recall last planned on
         self.ad_pp = np.zeros(L, f8)     # precision last planned on
+        # Online-MTBF state (estimate_mu lanes; mirrors the scalar engine's
+        # decayed (gap sum, gap count) pair + last-fault time).
+        self.ad_mu_gs = np.zeros(L, f8)  # decayed sum of fault gaps
+        self.ad_mu_gn = np.zeros(L, f8)  # decayed count of fault gaps
+        self.ad_lastf = np.full(L, -np.inf, f8)  # previous fault strike
+        self.ad_pmu = np.zeros(L, f8)    # mu last planned on
         # Counters.
         self.n_faults = np.zeros(L, i8)
         self.n_replans = np.zeros(L, i8)
@@ -437,6 +449,11 @@ def _run_lanes(
         # multiplies the integral float counters exactly.
         ad_dec = np.array([(a.decay if a else 1.0)
                            for a in lane_adaptive], dtype=np.float64)
+        ad_estmu = np.array(
+            [bool(a is not None and getattr(a, "estimate_mu", False))
+             for a in lane_adaptive], dtype=bool)
+    else:
+        ad_estmu = np.zeros(L, dtype=bool)
     within = lane_wmode == _WMODE_WITHIN
     if np.any(within & (lane_wperiod <= cp)):
         bad = float(lane_wperiod[within & (lane_wperiod <= cp)][0])
@@ -451,6 +468,7 @@ def _run_lanes(
         st.ad_pr[:] = [a.prior_recall if a else 0.0 for a in lane_adaptive]
         st.ad_pp[:] = [a.prior_precision if a else 0.0
                        for a in lane_adaptive]
+        st.ad_pmu[:] = platform.mu
 
     def _adaptive_replan(lanes: np.ndarray) -> None:
         """Estimator step for the (already counter-updated) adaptive lanes.
@@ -472,16 +490,33 @@ def _run_lanes(
         p_hat = np.maximum(ntp / (ntp + nfp), P_HAT_MIN)
         moved = (np.abs(r_hat - st.ad_pr[sub]) > ad_tol[sub]) \
             | (np.abs(p_hat - st.ad_pp[sub]) > ad_tol[sub])
+        has_mu = ad_estmu[sub] & (st.ad_mu_gn[sub] > 0.0)
+        if has_mu.any():
+            mu_hat = np.where(st.ad_mu_gn[sub] > 0.0,
+                              st.ad_mu_gs[sub]
+                              / np.where(st.ad_mu_gn[sub] > 0.0,
+                                         st.ad_mu_gn[sub], 1.0),
+                              0.0)
+            moved = moved | (has_mu
+                             & (np.abs(mu_hat - st.ad_pmu[sub])
+                                > ad_tol[sub] * st.ad_pmu[sub]))
         for lane in sub[moved]:
+            mu_lane = (float(st.ad_mu_gs[lane]) / float(st.ad_mu_gn[lane])
+                       if ad_estmu[lane] and st.ad_mu_gn[lane] > 0.0
+                       else None)
             out = maybe_replan(lane_adaptive[lane], platform, cp,
                                float(st.ad_ntp[lane]),
                                float(st.ad_nfp[lane]),
                                float(st.ad_nuf[lane]),
-                               float(st.ad_pr[lane]), float(st.ad_pp[lane]))
+                               float(st.ad_pr[lane]), float(st.ad_pp[lane]),
+                               mu_hat=mu_lane,
+                               planned_mu=float(st.ad_pmu[lane]))
             if out is None:      # pragma: no cover - the prefilter is exact
                 continue
             st.ad_pr[lane], st.ad_pp[lane], lane_period[lane], \
                 lane_trust_param[lane] = out
+            if mu_lane is not None:
+                st.ad_pmu[lane] = mu_lane
             st.n_replans[lane] += 1
 
     cursor = np.zeros(L, dtype=np.int64)
@@ -547,6 +582,19 @@ def _run_lanes(
                 st.target[f_idx] = np.where(take_def[is_fault],
                                             df_t[is_fault], t_tr[is_fault])
                 st.pc[f_idx] = _PC_FAULT
+                # Every actual fault (trace or deferred) is an MTBF
+                # observation for estimate_mu lanes: the gap to the
+                # previous strike, decayed-then-incremented at the same
+                # site as the scalar engine.
+                ad_f = ad_active[f_idx] & ad_estmu[f_idx]
+                mu_obs = ad_f & (st.ad_lastf[f_idx] > -np.inf)
+                obs = f_idx[mu_obs]
+                if obs.size:
+                    st.ad_mu_gs[obs] *= ad_dec[obs]
+                    st.ad_mu_gn[obs] *= ad_dec[obs]
+                    st.ad_mu_gs[obs] += st.target[obs] - st.ad_lastf[obs]
+                    st.ad_mu_gn[obs] += 1
+                st.ad_lastf[f_idx[ad_f]] = st.target[f_idx[ad_f]]
                 # Unpredicted faults are recall observations (EW lanes
                 # age all three counters before the increment, matching
                 # the scalar engine's decay-then-increment sites).
@@ -557,6 +605,11 @@ def _run_lanes(
                     st.ad_nuf[upd] *= ad_dec[upd]
                     st.ad_nuf[upd] += 1
                     _adaptive_replan(upd)
+                # Deferred (predicted) faults carry no (r, p) news but
+                # their strike moves mu-hat: a mu-only replan site.
+                d_rep = f_idx[mu_obs & take_def[is_fault]]
+                if d_rep.size:
+                    _adaptive_replan(d_rep)
 
             # Prediction events (true or false) announced for date t.
             is_pred = take_trace & (k_tr != FAULT_UNPRED)
@@ -722,12 +775,16 @@ def _run_lanes(
     st.final_threshold = np.where(ad_active, lane_trust_param, -1.0)
     er = np.full(L, -1.0)
     ep = np.full(L, -1.0)
+    em = np.full(L, -1.0)
     denom_f = st.ad_ntp + st.ad_nuf
     denom_p = st.ad_ntp + st.ad_nfp
     np.divide(st.ad_ntp, denom_f, out=er, where=ad_active & (denom_f > 0))
     np.divide(st.ad_ntp, denom_p, out=ep, where=ad_active & (denom_p > 0))
+    np.divide(st.ad_mu_gs, st.ad_mu_gn, out=em,
+              where=ad_estmu & (st.ad_mu_gn > 0))
     st.est_recall = er
     st.est_precision = ep
+    st.est_mu = em
     return st
 
 
@@ -793,6 +850,7 @@ def simulate_lanes(
     window_periods: Sequence[float] | None = None,
     adaptives: Sequence | None = None,
     start: float = 0.0,
+    backend: str = "numpy",
 ) -> np.ndarray:
     """Simulate an explicit list of (trace, candidate) lanes; returns the
     per-lane makespans.
@@ -828,6 +886,16 @@ def simulate_lanes(
     if lane_trace.size == 0:
         return np.empty(0, dtype=np.float64)
     bank = _pack_bank(traces, start)
+    if backend == "jax":
+        from .batch_jax import run_lanes_jax
+        out = run_lanes_jax(bank, platform, time_base, lane_trace,
+                            lane_period, lane_kind, lane_param, lane_window,
+                            lane_seed, cp, lane_wmode=lane_wmode,
+                            lane_wperiod=lane_wperiod,
+                            lane_adaptive=lane_adaptive)
+        return out["makespan"]
+    if backend != "numpy":
+        raise ValueError(f"unknown backend {backend!r}")
     st = _run_lanes(bank, platform, time_base, lane_trace, lane_period,
                     lane_kind, lane_param, lane_window, lane_seed, cp,
                     lane_wmode, lane_wperiod, lane_adaptive)
@@ -876,10 +944,10 @@ def simulate_batch(
         ``default_rng(trace_seeds[t])`` exactly like the scalar engine does
         per (strategy, trace) pair.  A scalar seeds every trace alike;
         ``None`` means seed 0 (the scalar engine's default rng).
-      backend: ``"numpy"`` (default) or ``"jax"`` (experimental; standard
-        trust policies + inexact windows via pre-drawn randomness tables;
-        no window-bearing traces, "within" modes or adaptive candidates;
-        requires x64).
+      backend: ``"numpy"`` (default) or ``"jax"`` (full feature parity:
+        windows, "within" modes, per-event windows and adaptive lanes;
+        randomness via pre-drawn stream-prefix tables; requires x64 for
+        the bit-for-bit contract).
 
     Returns:
       :class:`BatchResult` with ``(n_candidates, n_traces)`` arrays.  Each
@@ -916,19 +984,12 @@ def simulate_batch(
     lane_adaptive = [a for a in adaptive_seq for _ in range(n_traces)]
 
     if backend == "jax":
-        if np.any(wmode_arr == _WMODE_WITHIN) or bank.windows is not None:
-            raise ValueError(
-                "backend='jax' supports per-run inexact windows only "
-                "(no window-bearing traces or 'within' window modes); "
-                "use backend='numpy'")
-        if any(a is not None for a in adaptive_seq):
-            raise ValueError("backend='jax' does not support adaptive "
-                             "re-planning (per-lane cubic root solves); "
-                             "use backend='numpy'")
         from .batch_jax import run_lanes_jax
         out = run_lanes_jax(bank, platform, time_base, lane_trace,
                             lane_period, lane_kind, lane_param, lane_window,
-                            lane_seed, cp)
+                            lane_seed, cp, lane_wmode=lane_wmode,
+                            lane_wperiod=lane_wperiod,
+                            lane_adaptive=lane_adaptive)
         shape = (n_cand, n_traces)
         return BatchResult(
             makespan=out["makespan"].reshape(shape), time_base=time_base,
@@ -943,11 +1004,12 @@ def simulate_batch(
             time_prockpt=out["time_prockpt"].reshape(shape),
             time_down=out["time_down"].reshape(shape),
             time_lost=out["time_lost"].reshape(shape),
-            n_replans=np.zeros(shape, dtype=np.int64),
-            final_period=lane_period.reshape(shape).copy(),
-            final_threshold=np.full(shape, -1.0),
-            est_recall=np.full(shape, -1.0),
-            est_precision=np.full(shape, -1.0),
+            n_replans=out["n_replans"].reshape(shape),
+            final_period=out["final_period"].reshape(shape),
+            final_threshold=out["final_threshold"].reshape(shape),
+            est_recall=out["est_recall"].reshape(shape),
+            est_precision=out["est_precision"].reshape(shape),
+            est_mu=out["est_mu"].reshape(shape),
         )
     if backend != "numpy":
         raise ValueError(f"unknown backend {backend!r}")
@@ -974,4 +1036,5 @@ def simulate_batch(
         final_threshold=st.final_threshold.reshape(shape),
         est_recall=st.est_recall.reshape(shape),
         est_precision=st.est_precision.reshape(shape),
+        est_mu=st.est_mu.reshape(shape),
     )

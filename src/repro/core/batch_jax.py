@@ -1,37 +1,56 @@
-"""JAX backend for the lane-parallel batched simulator.
+"""JAX backend for the lane-parallel batched simulator (flagship engine).
 
-The whole lane fleet advances inside a single ``lax.while_loop`` whose body
-is the same pop / arrival / lockstep-schedule step as the NumPy engine in
-:mod:`repro.core.batch`, expressed as masked full-array updates — so banks
-can be jitted and dispatched to an accelerator.  The carried state is pure
-structure-of-arrays, which is exactly the layout an XLA backend wants; no
-Pallas kernel is needed because every step is elementwise over lanes.
+The lane fleet advances inside a jitted ``lax.while_loop`` whose body is
+the same pop / arrival / lockstep-schedule step as the NumPy engine in
+:mod:`repro.core.batch`, structured as:
 
-Lane randomness (FixedProbability trust draws, inexact-window fault
-offsets) is **pre-drawn** per lane: every scalar-engine draw consumes
-exactly one float64 from the lane's ``default_rng(seed)`` stream
-(``uniform(0, w)`` is bit-for-bit ``w * random()``), so the first
-``n_draw_sites`` stream values are tabulated up front and the loop carries
-one cursor per lane, consuming ``table[lane, cursor]`` at exactly the
-scalar engine's draw sites — announcement-time window offsets and
-decision-time trust draws stay bit-for-bit without any in-loop RNG.
+  * a **vmapped per-lane step** for the event pop and event arrival
+    sections (each lane is a small scalar program over its own state and
+    deferred-fault slots; ``jax.vmap`` lifts it over the lane axis), and
+  * the **event-advance kernel** (:mod:`repro.kernels.event_step`) for
+    the hot schedule step that touches every lane each iteration — a pure
+    ``jnp`` reference by default, or the Pallas kernel
+    (``REPRO_JAX_PALLAS=interpret|compile``) behind the compat shim.
 
-Remaining scope limits (checked, raises otherwise):
+Feature parity with the NumPy engine is complete: all four standard trust
+policies, exact/inexact windows, per-event window tensors
+(``EventTrace.windows``), both window action modes ("instant"/"within"),
+and adaptive re-planning.  Lane randomness (FixedProbability trust draws,
+in-window fault offsets) is **pre-drawn** per lane into stream-prefix
+tables: every scalar-engine draw consumes exactly one float64 from the
+lane's ``default_rng(seed)`` stream (``uniform(0, w)`` is bit-for-bit
+``w * random()``), so the loop carries one cursor per lane and consumes
+``table[lane, cursor]`` at exactly the scalar engine's draw sites.
 
-  * no per-event window traces (``EventTrace.windows``) and no "within"
-    window modes — rejected in :func:`repro.core.batch.simulate_batch`;
-  * no adaptive re-planning candidates (per-lane cubic root solves);
-  * requires ``jax_enable_x64`` so the float64 op sequence matches the
-    scalar engine bit-for-bit (float32 drifts far beyond the 1e-9
-    equivalence contract).
+Adaptive re-planning runs the estimator counters (and the online-MTBF
+gap statistics of ``AdaptiveConfig(estimate_mu=True)``) on-device at the
+same event-pop sites as the other engines; a vectorized prefilter
+replays the confidence gate + hysteresis, and the few lanes that fire
+re-plan on the host through the shared
+:func:`repro.predictors.estimator.maybe_replan` via ``jax.pure_callback``
+inside ``lax.cond`` — so replan points and plans are bit-for-bit the
+scalar engine's.
 
-Each (lane-count, event-width) shape triggers one XLA compilation; reuse
-bank sizes across calls to amortize it.
+Scale: the lane grid is **chunked** (``REPRO_JAX_CHUNK`` or the
+``chunk`` argument; one XLA compilation serves all chunks, input buffers
+are donated, so per-chunk memory stays flat) and each chunk can be
+**sharded across devices** with ``jax.experimental.shard_map``
+(``REPRO_JAX_SHARD=auto|0|1``; every device runs the while-loop on its
+lane shard).  Host callbacks are unreliable inside ``shard_map``, so the
+sharded path is used only for non-adaptive grids; adaptive grids take
+the plain chunked path.
+
+Requires ``jax_enable_x64`` so the float64 op sequence matches the
+scalar engine bit-for-bit (float32 drifts far beyond the 1e-9
+equivalence contract).  Each (chunk-size, event-width, table-width)
+shape triggers one XLA compilation; reuse bank sizes across calls to
+amortize it.
 """
 
 from __future__ import annotations
 
-from typing import Any
+import os
+from typing import Any, Sequence
 
 import numpy as np
 
@@ -42,9 +61,11 @@ from .waste import Platform
 __all__ = ["run_lanes_jax"]
 
 _TRUST_NEVER, _TRUST_ALWAYS, _TRUST_THRESHOLD, _TRUST_FIXED_Q = range(4)
+_WMODE_INSTANT, _WMODE_WITHIN = range(2)
 _PC_POP, _PC_FAULT, _PC_PRED, _PC_FINAL = range(4)
 _DEF_SLOTS = 8          # deferred-fault capacity; overflow is detected
-_BIG_SEQ = np.iinfo(np.int64).max
+_BIG_SEQ = np.iinfo(np.int32).max
+_ADV_PASSES = 4         # schedule steps per loop iteration (cf. numpy's 6)
 
 
 def _draw_tables(bank, lane_trace: np.ndarray, lane_kind: np.ndarray,
@@ -52,37 +73,66 @@ def _draw_tables(bank, lane_trace: np.ndarray, lane_kind: np.ndarray,
                  lane_seed: np.ndarray) -> np.ndarray:
     """Per-lane stream-prefix tables of pre-drawn uniforms.
 
-    A lane consumes at most one draw per true prediction (the in-window
-    fault offset, when the lane has an inexact window) plus one per
+    A lane consumes at most one draw per true prediction whose effective
+    window is positive (the in-window fault offset) plus one per
     prediction event (the FixedProbability trust draw, consumed only when
-    the decision is actually reached) — so the first
-    ``n_true·[w>0] + n_pred·[fixed_q]`` values of the lane's
-    ``default_rng(seed)`` stream bound every draw the scalar engine can
-    make, in consumption order.
+    the decision is actually reached).  Per-event windows make the bound
+    per *trace*: true predictions carrying their own positive window
+    always draw; sentinel (-1) events draw iff the lane's fallback window
+    is positive; explicit zero windows never draw.  The first ``need``
+    values of the lane's ``default_rng(seed)`` stream bound every draw
+    the scalar engine can make, in consumption order.
     """
-    n_true = (bank.kinds == FAULT_PRED).sum(axis=1)
-    n_pred = ((bank.kinds == FAULT_PRED)
-              | (bank.kinds == FALSE_PRED)).sum(axis=1)
-    need = (n_true[lane_trace] * (lane_window > 0.0)
-            + n_pred[lane_trace] * (lane_kind == _TRUST_FIXED_Q))
-    need = need.astype(np.int64)
+    is_true = bank.kinds == FAULT_PRED
+    n_pred = (is_true | (bank.kinds == FALSE_PRED)).sum(axis=1)
+    if bank.windows is None:
+        cnt_own = np.zeros(bank.kinds.shape[0], dtype=np.int64)
+        cnt_fb = is_true.sum(axis=1)
+    else:
+        cnt_own = (is_true & (bank.windows > 0.0)).sum(axis=1)
+        cnt_fb = (is_true & (bank.windows < 0.0)).sum(axis=1)
+    need = (cnt_own[lane_trace]
+            + cnt_fb[lane_trace] * (lane_window > 0.0)
+            + n_pred[lane_trace] * (lane_kind == _TRUST_FIXED_Q)
+            ).astype(np.int64)
     width = max(1, int(need.max()) if need.size else 1)
     tab = np.zeros((lane_trace.size, width), dtype=np.float64)
-    for i, n in enumerate(need):
-        if n:
-            tab[i, :n] = np.random.default_rng(int(lane_seed[i])).random(
-                int(n))
+    for i in np.nonzero(need)[0]:
+        n = int(need[i])
+        tab[i, :n] = np.random.default_rng(int(lane_seed[i])).random(n)
     return tab
+
+
+def _resolve_impl() -> str:
+    """Event-step kernel implementation from ``REPRO_JAX_PALLAS``."""
+    v = os.environ.get("REPRO_JAX_PALLAS", "").strip().lower()
+    if v in ("", "0", "off", "ref"):
+        return "ref"
+    if v in ("interpret", "interpreter"):
+        return "pallas_interpret"
+    if v in ("1", "compile", "tpu", "pallas"):
+        return "pallas"
+    raise ValueError(f"unknown REPRO_JAX_PALLAS value {v!r}")
 
 
 def run_lanes_jax(bank, platform: Platform, time_base: float,
                   lane_trace: np.ndarray, lane_period: np.ndarray,
                   lane_kind: np.ndarray, lane_param: np.ndarray,
                   lane_window: np.ndarray, lane_seed: np.ndarray,
-                  cp: float) -> dict[str, Any]:
+                  cp: float,
+                  lane_wmode: np.ndarray | None = None,
+                  lane_wperiod: np.ndarray | None = None,
+                  lane_adaptive: Sequence | None = None,
+                  chunk: int | None = None) -> dict[str, Any]:
     import jax
     import jax.numpy as jnp
     from jax import lax
+
+    from repro.kernels.event_step import (F_DONE, F_NOW, F_PERIOD, F_PHEND,
+                                          F_PSTART, F_SAVED, F_TARGET,
+                                          F_TCKPT, F_TDOWN, F_TPROC, F_WINEND,
+                                          F_WINREM, F_WPP, F_WREM, F_WWP,
+                                          I_FIN, I_NCKPT, I_PHASE, event_step)
 
     if not jax.config.jax_enable_x64:
         raise RuntimeError(
@@ -96,45 +146,105 @@ def run_lanes_jax(bank, platform: Platform, time_base: float,
     K = _DEF_SLOTS
     width = bank.times.shape[1]
     c, d, r = platform.c, platform.d, platform.r
-    fin_thresh = time_base - 1e-9
+    impl = _resolve_impl()
+
+    lane_period = np.asarray(lane_period, dtype=np.float64).copy()
+    lane_kind = np.asarray(lane_kind, dtype=np.int32).copy()
+    lane_param = np.asarray(lane_param, dtype=np.float64).copy()
+    lane_window = np.asarray(lane_window, dtype=np.float64)
+    if lane_wmode is None:
+        lane_wmode = np.zeros(L, dtype=np.int8)
+    if lane_wperiod is None:
+        lane_wperiod = np.zeros(L, dtype=np.float64)
+    if lane_adaptive is None:
+        lane_adaptive = [None] * L
+
+    within = np.asarray(lane_wmode) == _WMODE_WITHIN
+    if np.any(within & (lane_wperiod <= cp)):
+        bad = float(np.asarray(lane_wperiod)[within & (lane_wperiod <= cp)][0])
+        raise ValueError(f"window_period {bad} <= C_p {cp}: no work fits "
+                         f"between in-window checkpoints")
+    lane_wwp = np.where(within, lane_wperiod - cp, np.inf)
+
+    # Adaptive lanes (mirrors the NumPy engine's setup: plan state is
+    # per-lane, Never-trust adaptive lanes become Threshold(+inf)).
+    ad_act = np.array([a is not None for a in lane_adaptive], dtype=bool)
+    has_adaptive = bool(ad_act.any())
+    if has_adaptive:
+        bad_trust = ad_act & ~np.isin(lane_kind,
+                                      (_TRUST_NEVER, _TRUST_THRESHOLD))
+        if bad_trust.any():
+            raise ValueError(
+                "adaptive re-planning requires a Threshold or Never trust "
+                "policy (the plan sets the threshold)")
+        never = ad_act & (lane_kind == _TRUST_NEVER)
+        lane_kind[never] = _TRUST_THRESHOLD
+        lane_param[never] = np.inf
+        ad_minp = np.array([(a.min_preds if a else np.inf)
+                            for a in lane_adaptive], dtype=np.float64)
+        ad_minf = np.array([(a.min_faults if a else np.inf)
+                            for a in lane_adaptive], dtype=np.float64)
+        ad_tol = np.array([(a.tol if a else 0.0)
+                           for a in lane_adaptive], dtype=np.float64)
+        ad_dec = np.array([(a.decay if a else 1.0)
+                           for a in lane_adaptive], dtype=np.float64)
+        ad_estmu = np.array(
+            [bool(a is not None and getattr(a, "estimate_mu", False))
+             for a in lane_adaptive], dtype=bool)
+        ad_pr0 = np.array([(a.prior_recall if a else 0.0)
+                           for a in lane_adaptive], dtype=np.float64)
+        ad_pp0 = np.array([(a.prior_precision if a else 0.0)
+                           for a in lane_adaptive], dtype=np.float64)
+        from repro.predictors.estimator import P_HAT_MIN, maybe_replan
+    else:
+        ad_estmu = np.zeros(L, dtype=bool)
+
+    tab = _draw_tables(bank, lane_trace, lane_kind, lane_window, lane_seed)
+    TW = tab.shape[1]
 
     times2d = jnp.asarray(bank.times)
     kinds2d = jnp.asarray(bank.kinds.astype(np.int32))
-    n_ev_lane = jnp.asarray(bank.n_events[lane_trace])
-    tr = jnp.asarray(lane_trace)
-    period = jnp.asarray(lane_period)
-    kind = jnp.asarray(lane_kind.astype(np.int32))
-    param = jnp.asarray(lane_param)
-    window = jnp.asarray(lane_window)
-    tab = jnp.asarray(_draw_tables(bank, lane_trace, lane_kind, lane_window,
-                                   lane_seed))
-    tab_width = tab.shape[1]
-    lane_ids = jnp.arange(L)
+    wins2d = jnp.asarray(bank.windows if bank.windows is not None
+                         else np.full_like(bank.times, -1.0))
+    n_ev = bank.n_events[lane_trace].astype(np.int32)
 
-    def push_deferred(def_time, def_seq, next_seq, overflow, push, dates):
+    # -- chunking / sharding layout -----------------------------------------
+    env_chunk = os.environ.get("REPRO_JAX_CHUNK", "").strip()
+    if chunk is None and env_chunk:
+        chunk = int(env_chunk)
+    CL = L if (chunk is None or chunk <= 0) else min(int(chunk), L)
+    CL = max(CL, 1)
+
+    shard_env = os.environ.get("REPRO_JAX_SHARD", "auto").strip().lower()
+    devices = jax.devices()
+    use_shard = (not has_adaptive and shard_env != "0"
+                 and (len(devices) > 1 or shard_env in ("1", "force")))
+    n_shards = len(devices) if use_shard else 1
+    if use_shard and CL % n_shards:
+        CL += n_shards - CL % n_shards
+
+    # -- per-lane step: event pop -------------------------------------------
+    def _push_one(def_time, def_seq, next_seq, overflow, push, date):
         empty = jnp.isinf(def_time)
-        has_room = empty.any(axis=1)
-        overflow = overflow | (push & ~has_room)
-        slot = empty.argmax(axis=1)
-        onehot = (jnp.arange(K)[None, :] == slot[:, None]) & push[:, None]
-        def_time = jnp.where(onehot, dates[:, None], def_time)
-        def_seq = jnp.where(onehot, next_seq[:, None], def_seq)
+        overflow = overflow | (push & ~empty.any())
+        slot = empty.argmax()
+        onehot = (jnp.arange(K) == slot) & push
+        def_time = jnp.where(onehot, date, def_time)
+        def_seq = jnp.where(onehot, next_seq, def_seq)
         next_seq = jnp.where(push, next_seq + 1, next_seq)
         return def_time, def_seq, next_seq, overflow
 
-    def body(s):
-        active = ~s["finished"]
-
-        # -- 1. pop next events ---------------------------------------------
-        pop = active & (s["pc"] == _PC_POP)
+    def _pop_one(s, k):
+        pop = ~s["finished"] & (s["pc"] == _PC_POP)
         col = jnp.minimum(s["cursor"], width - 1)
-        have = s["cursor"] < n_ev_lane
-        t_tr = jnp.where(have, times2d[tr, col], jnp.inf)
-        k_tr = jnp.where(have, kinds2d[tr, col], -1)
-        min_t = s["def_time"].min(axis=1)
-        tie = s["def_time"] == min_t[:, None]
+        have = s["cursor"] < k["n_ev"]
+        t_tr = jnp.where(have, times2d[k["tr"], col], jnp.inf)
+        k_tr = jnp.where(have, kinds2d[k["tr"], col], -1)
+        w_ev = jnp.where(have, wins2d[k["tr"], col], -1.0)
+        min_t = s["def_time"].min()
+        tie = s["def_time"] == min_t
         seqm = jnp.where(tie, s["def_seq"], _BIG_SEQ)
-        slot = seqm.argmin(axis=1)
+        slot = seqm.argmin()
 
         none_left = pop & jnp.isinf(t_tr) & jnp.isinf(min_t)
         pc = jnp.where(none_left, _PC_FINAL, s["pc"])
@@ -143,47 +253,164 @@ def run_lanes_jax(bank, platform: Platform, time_base: float,
         take_trace = pop & ~none_left & (t_tr <= min_t)
         cursor = jnp.where(take_trace, s["cursor"] + 1, s["cursor"])
         take_def = pop & ~none_left & ~take_trace
-        clear = (jnp.arange(K)[None, :] == slot[:, None]) & take_def[:, None]
+        clear = (jnp.arange(K) == slot) & take_def
         def_time = jnp.where(clear, jnp.inf, s["def_time"])
         def_seq = jnp.where(clear, _BIG_SEQ, s["def_seq"])
 
         # Deferred pops were already counted at announcement; only trace
         # faults count here (mirrors the scalar engine's counting).
-        is_fault = take_def | (take_trace & (k_tr == FAULT_UNPRED))
-        n_faults = s["n_faults"] + (take_trace & (k_tr == FAULT_UNPRED))
-        target = jnp.where(is_fault, jnp.where(take_def, min_t, t_tr), target)
+        uf = take_trace & (k_tr == FAULT_UNPRED)
+        is_fault = take_def | uf
+        n_faults = s["n_faults"] + uf
+        f_t = jnp.where(take_def, min_t, t_tr)
+        target = jnp.where(is_fault, f_t, target)
         pc = jnp.where(is_fault, _PC_FAULT, pc)
 
         is_pred = take_trace & (k_tr != FAULT_UNPRED)
         n_predictions = s["n_predictions"] + is_pred
         is_true = is_pred & (k_tr == FAULT_PRED)
         n_faults = n_faults + is_true      # counted at announcement
-        # Inexact windows: the true fault materializes at t + w * u with u
-        # the next pre-drawn stream value (the scalar engine's
-        # announcement-time ``rng.uniform(0, w)`` draw, bit-for-bit).
-        draw_win = is_true & (window > 0.0)
-        u = tab[lane_ids, jnp.minimum(s["cur"], tab_width - 1)]
-        fault_date = jnp.where(draw_win, t_tr + window * u, t_tr)
+        out = {"pc": pc, "target": target, "cursor": cursor,
+               "def_time": def_time, "def_seq": def_seq,
+               "n_faults": n_faults, "n_predictions": n_predictions}
+
+        if has_adaptive:
+            # Decay-then-increment must round the product *before* the
+            # add, as the other engines' two statements do.  The runtime
+            # zero (now - now; unfoldable by the compiler) caps each
+            # product so the worst FMA contraction is fma(x, dec, 0) —
+            # the plain rounded product (cf. the fault-date guard in
+            # `_body`; selects sharing a predicate get merged by XLA's
+            # simplifier, re-exposing mul+add to LLVM).
+            zero = s["now"] - s["now"]
+            # Every actual fault is an MTBF observation for estimate_mu
+            # lanes (decay-then-increment at the scalar engine's site).
+            mu_site = k["ad_act"] & k["ad_estmu"] & is_fault
+            obs = mu_site & (s["ad_lastf"] > -jnp.inf)
+            gs_d = s["ad_gs"] * k["ad_dec"] + zero
+            gn_d = s["ad_gn"] * k["ad_dec"] + zero
+            out["ad_gs"] = jnp.where(obs, gs_d + (f_t - s["ad_lastf"]),
+                                     s["ad_gs"])
+            out["ad_gn"] = jnp.where(obs, gn_d + 1.0, s["ad_gn"])
+            out["ad_lastf"] = jnp.where(mu_site, f_t, s["ad_lastf"])
+            # (r, p) counters: unpredicted faults and announced
+            # predictions age-then-increment, as in both other engines.
+            upd_uf = uf & k["ad_act"]
+            upd_p = is_pred & k["ad_act"]
+            upd = upd_uf | upd_p
+            ntp = jnp.where(upd, s["ad_ntp"] * k["ad_dec"] + zero,
+                            s["ad_ntp"])
+            nfp = jnp.where(upd, s["ad_nfp"] * k["ad_dec"] + zero,
+                            s["ad_nfp"])
+            nuf = jnp.where(upd, s["ad_nuf"] * k["ad_dec"] + zero,
+                            s["ad_nuf"])
+            nuf = jnp.where(upd_uf, nuf + 1.0, nuf)
+            ntp = jnp.where(upd_p & is_true, ntp + 1.0, ntp)
+            nfp = jnp.where(upd_p & ~is_true, nfp + 1.0, nfp)
+            out["ad_ntp"], out["ad_nfp"], out["ad_nuf"] = ntp, nfp, nuf
+            # Replan sites: every counter-updating pop, plus deferred
+            # strikes that moved mu-hat (a mu-only replan site).
+            out["replan_eval"] = k["ad_act"] & (is_pred | uf
+                                                | (take_def & obs))
+
+        # Prediction announced for date t: draw the in-window fault
+        # offset (per-event window, falling back to the lane window) from
+        # the pre-drawn stream, decide honourability.  The fault date
+        # itself (t + w * u) is computed *outside* the vmapped step (see
+        # `_body`) so an optimization barrier can split the mul from the
+        # add — XLA:CPU otherwise contracts them into an FMA whose single
+        # rounding breaks bitwise parity with numpy's `t + uniform(0, w)`.
+        w_eff = jnp.where(w_ev < 0.0, k["window"], w_ev)
+        draw_win = is_true & (w_eff > 0.0)
+        u = k["tab"][jnp.minimum(s["cur"], TW - 1)]
         cur = s["cur"] + draw_win
         ckpt_start = t_tr - cp
         honour = is_pred & (ckpt_start >= s["now"])
-        pc = jnp.where(honour, _PC_PRED, pc)
-        target = jnp.where(honour, ckpt_start, target)
-        pred_t = jnp.where(honour, t_tr, s["pred_t"])
-        pred_fd = jnp.where(honour, fault_date, s["pred_fd"])
-        pred_true = jnp.where(honour, is_true, s["pred_true"])
+        out["pc"] = jnp.where(honour, _PC_PRED, out["pc"])
+        out["target"] = jnp.where(honour, ckpt_start, out["target"])
+        out["pred_t"] = jnp.where(honour, t_tr, s["pred_t"])
+        out["pred_true"] = jnp.where(honour, is_true, s["pred_true"])
+        out["pred_win"] = jnp.where(honour, w_eff, s["pred_win"])
+        out["cur"] = cur
         ignored = is_pred & ~honour
-        n_ignored = s["n_ignored"] + ignored
-        push = ignored & is_true
-        def_time, def_seq, next_seq, overflow = push_deferred(
-            def_time, def_seq, s["next_seq"], s["overflow"], push,
-            fault_date)
+        out["n_ignored"] = s["n_ignored"] + ignored
+        tmp = {"t_tr": t_tr, "w_eff": w_eff, "u": u, "draw": draw_win,
+               "honour": honour, "push": ignored & is_true}
+        return dict(s, **out), tmp
 
-        # -- 2a. fault arrivals ---------------------------------------------
-        now, done, saved = s["now"], s["done"], s["saved"]
-        phase, phase_end = s["phase"], s["phase_end"]
-        arr_f = active & (pc == _PC_FAULT) & (now >= target)
-        lost = done - saved
+    # -- adaptive replan fixup (between pop and arrival) --------------------
+    if has_adaptive:
+        holder: dict[str, Any] = {"cfgs": list(lane_adaptive)}
+
+        def _host_replan(fire, ntp, nfp, nuf, gs, gn, pr, pp, pmu, period,
+                         tparam, n_replans):
+            pr, pp, pmu = np.array(pr), np.array(pp), np.array(pmu)
+            period, tparam = np.array(period), np.array(tparam)
+            n_replans = np.array(n_replans)
+            for lane in np.nonzero(fire)[0]:
+                cfg = holder["cfgs"][lane]
+                if cfg is None:      # pragma: no cover - prefilter is exact
+                    continue
+                mu_hat = None
+                if getattr(cfg, "estimate_mu", False) and gn[lane] > 0.0:
+                    mu_hat = float(gs[lane]) / float(gn[lane])
+                plan = maybe_replan(cfg, platform, cp, float(ntp[lane]),
+                                    float(nfp[lane]), float(nuf[lane]),
+                                    float(pr[lane]), float(pp[lane]),
+                                    mu_hat=mu_hat,
+                                    planned_mu=float(pmu[lane]))
+                if plan is None:     # pragma: no cover - prefilter is exact
+                    continue
+                pr[lane], pp[lane], period[lane], tparam[lane] = plan
+                if mu_hat is not None:
+                    pmu[lane] = mu_hat
+                n_replans[lane] += 1
+            return pr, pp, pmu, period, tparam, n_replans
+
+        def _fixup(s, kc):
+            """Vectorized gate + hysteresis prefilter (the same float ops
+            as ``maybe_replan``), then the host re-plans the lanes that
+            fire through that very function — plans are bit-for-bit."""
+            ntp, nfp, nuf = s["ad_ntp"], s["ad_nfp"], s["ad_nuf"]
+            npred, nflt = ntp + nfp, ntp + nuf
+            gate = (npred >= kc["ad_minp"]) & (nflt >= kc["ad_minf"])
+            r_hat = ntp / jnp.where(gate, nflt, 1.0)
+            p_hat = jnp.maximum(ntp / jnp.where(gate, npred, 1.0), P_HAT_MIN)
+            has_mu = kc["ad_estmu"] & (s["ad_gn"] > 0.0)
+            mu_hat = s["ad_gs"] / jnp.where(s["ad_gn"] > 0.0, s["ad_gn"], 1.0)
+            moved = (jnp.abs(r_hat - s["ad_pr"]) > kc["ad_tol"]) \
+                | (jnp.abs(p_hat - s["ad_pp"]) > kc["ad_tol"]) \
+                | (has_mu & (jnp.abs(mu_hat - s["ad_pmu"])
+                             > kc["ad_tol"] * s["ad_pmu"]))
+            fire = s["replan_eval"] & gate & moved
+            n = ntp.shape[0]
+            shapes = tuple([jax.ShapeDtypeStruct((n,), jnp.float64)] * 5
+                           + [jax.ShapeDtypeStruct((n,), jnp.int32)])
+            args = (fire, ntp, nfp, nuf, s["ad_gs"], s["ad_gn"], s["ad_pr"],
+                    s["ad_pp"], s["ad_pmu"], s["period"], s["tparam"],
+                    s["n_replans"])
+
+            def _do(a):
+                return jax.pure_callback(_host_replan, shapes, *a)
+
+            def _skip(a):
+                return a[6], a[7], a[8], a[9], a[10], a[11]
+
+            pr, pp, pmu, period, tparam, n_rep = lax.cond(
+                fire.any(), _do, _skip, args)
+            return dict(s, ad_pr=pr, ad_pp=pp, ad_pmu=pmu, period=period,
+                        tparam=tparam, n_replans=n_rep,
+                        replan_eval=jnp.zeros_like(fire))
+
+    # -- per-lane step: event arrivals --------------------------------------
+    def _arrive_one(s, k):
+        active = ~s["finished"]
+        now, phase, phase_end = s["now"], s["phase"], s["phase_end"]
+        target = s["target"]
+
+        # Fault arrival (the vectorized `_Machine.fault`).
+        arr_f = active & (s["pc"] == _PC_FAULT) & (now >= target)
+        lost = s["done"] - s["saved"]
         in_phase = (phase != _WORK) & ~jnp.isinf(phase_end)
         dur = jnp.select([phase == _CKPT, phase == _PROCKPT,
                           phase == _DOWN, phase == _RECOVER],
@@ -195,144 +422,254 @@ def run_lanes_jax(bank, platform: Platform, time_base: float,
             arr_f & in_phase & ~ckpt_like, jnp.maximum(0.0, elapsed), 0.0)
         time_lost = s["time_lost"] + jnp.where(arr_f, lost, 0.0)
         n_faults_hit = s["n_faults_hit"] + arr_f
-        done = jnp.where(arr_f, saved, done)
+        done = jnp.where(arr_f, s["saved"], s["done"])
         phase = jnp.where(arr_f, _DOWN, phase)
         phase_end = jnp.where(arr_f, target + d, phase_end)
-        pc = jnp.where(arr_f, _PC_POP, pc)
+        # A fault ends any active prediction window.
+        win_end = jnp.where(arr_f, -jnp.inf, s["win_end"])
+        win_rem = jnp.where(arr_f, jnp.inf, s["win_rem"])
+        pc = jnp.where(arr_f, _PC_POP, s["pc"])
         target = jnp.where(arr_f, -jnp.inf, target)
 
-        # -- 2b. prediction arrivals ----------------------------------------
+        # Prediction arrival: the trust decision at the checkpoint-start
+        # date.  FixedProbability lanes draw only when the decision is
+        # reached (phase == WORK), so the cursor advances exactly there.
         arr_p = active & (pc == _PC_PRED) & (now >= target)
         working = arr_p & (phase == _WORK)
-        offset = pred_t - s["period_start"]
-        # FixedProbability trust: the scalar engine draws only when the
-        # decision is reached (phase == WORK at the checkpoint-start
-        # date), so the cursor advances exactly there.
-        draw_q = working & (kind == _TRUST_FIXED_Q)
-        u2 = tab[lane_ids, jnp.minimum(cur, tab_width - 1)]
-        cur = cur + draw_q
-        trusted = working & ((kind == _TRUST_ALWAYS)
-                             | ((kind == _TRUST_THRESHOLD)
-                                & (offset >= param))
-                             | (draw_q & (u2 < param)))
+        offset = s["pred_t"] - s["period_start"]
+        draw_q = working & (k["kind"] == _TRUST_FIXED_Q)
+        u2 = k["tab"][jnp.minimum(s["cur"], TW - 1)]
+        cur = s["cur"] + draw_q
+        trusted = working & ((k["kind"] == _TRUST_ALWAYS)
+                             | ((k["kind"] == _TRUST_THRESHOLD)
+                                & (offset >= s["tparam"]))
+                             | (draw_q & (u2 < s["tparam"])))
         phase = jnp.where(trusted, _PROCKPT, phase)
-        phase_end = jnp.where(trusted, pred_t, phase_end)
+        phase_end = jnp.where(trusted, s["pred_t"], phase_end)
         n_trusted = s["n_trusted"] + trusted
-        n_trusted_true = s["n_trusted_true"] + (trusted & pred_true)
-        n_ignored = n_ignored + (arr_p & ~working)
-        push2 = arr_p & pred_true
-        def_time, def_seq, next_seq, overflow = push_deferred(
-            def_time, def_seq, next_seq, overflow, push2, pred_fd)
+        n_trusted_true = s["n_trusted_true"] + (trusted & s["pred_true"])
+        # Arm the prediction window on trusting "within" lanes: keep
+        # proactive-checkpointing until pred_t + window.
+        arm = trusted & k["within"] & (s["pred_win"] > 0.0)
+        win_end = jnp.where(arm, s["pred_t"] + s["pred_win"], win_end)
+        n_ignored = s["n_ignored"] + (arr_p & ~working)
+        push2 = arr_p & s["pred_true"]
+        def_time, def_seq, next_seq, overflow = _push_one(
+            s["def_time"], s["def_seq"], s["next_seq"], s["overflow"],
+            push2, s["pred_fd"])
         pc = jnp.where(arr_p, _PC_POP, pc)
         target = jnp.where(arr_p, -jnp.inf, target)
 
-        # -- 3. one lockstep schedule step ----------------------------------
-        adv = active & (now < target)
-        in_work = adv & (phase == _WORK)
-        wz = in_work & (s["w_rem"] <= 0.0)
-        phase = jnp.where(wz, _CKPT, phase)
-        phase_end = jnp.where(wz, now + c, phase_end)
-        ww = in_work & ~wz
-        dt = jnp.minimum(s["w_rem"], target - now)
-        now = jnp.where(ww, now + dt, now)
-        done = jnp.where(ww, done + dt, done)
-        w_rem = jnp.where(ww, s["w_rem"] - dt, s["w_rem"])
-        fin_work = ww & (w_rem <= 0.0)
-        phase = jnp.where(fin_work, _CKPT, phase)
-        phase_end = jnp.where(fin_work, now + c, phase_end)
+        return dict(s, now=now, done=done, phase=phase, phase_end=phase_end,
+                    win_end=win_end, win_rem=win_rem, pc=pc, target=target,
+                    cur=cur, time_down=time_down, time_lost=time_lost,
+                    n_faults_hit=n_faults_hit, n_trusted=n_trusted,
+                    n_trusted_true=n_trusted_true, n_ignored=n_ignored,
+                    def_time=def_time, def_seq=def_seq, next_seq=next_seq,
+                    overflow=overflow)
 
-        in_ph = adv & (phase != _WORK) & ~wz & ~ww
-        complete = in_ph & (phase_end <= target)
-        now = jnp.where(complete, phase_end, now)
-        ph0 = phase
-        ck = complete & (ph0 == _CKPT)
-        n_periodic_ckpts = s["n_periodic_ckpts"] + ck
-        time_ckpt = s["time_ckpt"] + jnp.where(ck, c, 0.0)
-        saved = jnp.where(ck, done, saved)
-        fin = ck & (saved >= fin_thresh)
-        finished = s["finished"] | fin
-        pk = complete & (ph0 == _PROCKPT)
-        time_prockpt = s["time_prockpt"] + jnp.where(pk, cp, 0.0)
-        saved = jnp.where(pk, done, saved)
-        period_start = jnp.where(pk, now, s["period_start"])
-        phase = jnp.where(pk, _WORK, phase)
-        phase_end = jnp.where(pk, jnp.inf, phase_end)
-        dn = complete & (ph0 == _DOWN)
-        time_down = time_down + jnp.where(dn, d, 0.0)
-        phase = jnp.where(dn, _RECOVER, phase)
-        phase_end = jnp.where(dn, now + r, phase_end)
-        rc = complete & (ph0 == _RECOVER)
-        time_down = time_down + jnp.where(rc, r, 0.0)
-        renew = (ck & ~fin) | rc
-        phase = jnp.where(renew, _WORK, phase)
-        phase_end = jnp.where(renew, jnp.inf, phase_end)
-        period_start = jnp.where(renew, now, period_start)
-        wpp = jnp.where(renew, jnp.maximum(1e-9, period - c), s["wpp"])
-        w_rem = jnp.where(renew,
-                          jnp.minimum(wpp, time_base - saved), w_rem)
-        stall = in_ph & ~complete
-        now = jnp.where(stall, target, now)
+    # -- the loop body -------------------------------------------------------
+    def _advance(s, kc):
+        fs = jnp.stack([s["now"], s["done"], s["saved"], s["period_start"],
+                        s["phase_end"], s["wpp"], s["w_rem"], s["win_end"],
+                        s["win_rem"], s["target"], s["time_ckpt"],
+                        s["time_prockpt"], s["time_down"], s["period"],
+                        kc["wwp"]])
+        is_ = jnp.stack([s["phase"], s["finished"].astype(jnp.int32),
+                         s["n_periodic_ckpts"]])
+        for _ in range(_ADV_PASSES):
+            fs, is_ = event_step(fs, is_, c=c, cp=cp, d=d, r=r,
+                                 time_base=time_base, impl=impl)
+        return dict(s, now=fs[F_NOW], done=fs[F_DONE], saved=fs[F_SAVED],
+                    period_start=fs[F_PSTART], phase_end=fs[F_PHEND],
+                    wpp=fs[F_WPP], w_rem=fs[F_WREM], win_end=fs[F_WINEND],
+                    win_rem=fs[F_WINREM], time_ckpt=fs[F_TCKPT],
+                    time_prockpt=fs[F_TPROC], time_down=fs[F_TDOWN],
+                    phase=is_[I_PHASE], finished=is_[I_FIN] != 0,
+                    n_periodic_ckpts=is_[I_NCKPT])
 
-        return {
-            "now": now, "done": done, "saved": saved,
-            "period_start": period_start, "phase": phase,
-            "phase_end": phase_end, "wpp": wpp, "w_rem": w_rem,
-            "finished": finished, "pc": pc, "target": target,
-            "cursor": cursor, "pred_t": pred_t, "pred_fd": pred_fd,
-            "pred_true": pred_true, "cur": cur,
-            "def_time": def_time, "def_seq": def_seq, "next_seq": next_seq,
-            "overflow": overflow,
-            "n_faults": n_faults, "n_faults_hit": n_faults_hit,
-            "n_predictions": n_predictions, "n_trusted": n_trusted,
-            "n_trusted_true": n_trusted_true, "n_ignored": n_ignored,
-            "n_periodic_ckpts": n_periodic_ckpts, "time_ckpt": time_ckpt,
-            "time_prockpt": time_prockpt, "time_down": time_down,
-            "time_lost": time_lost,
+    def _push_all(s, push, date):
+        """Full-array deferred-fault insert (the pop-site pushes)."""
+        empty = jnp.isinf(s["def_time"])
+        overflow = s["overflow"] | (push & ~empty.any(axis=1))
+        slot = empty.argmax(axis=1)
+        onehot = (jnp.arange(K)[None, :] == slot[:, None]) & push[:, None]
+        return dict(s,
+                    def_time=jnp.where(onehot, date[:, None], s["def_time"]),
+                    def_seq=jnp.where(onehot, s["next_seq"][:, None],
+                                      s["def_seq"]),
+                    next_seq=jnp.where(push, s["next_seq"] + 1,
+                                       s["next_seq"]),
+                    overflow=overflow)
+
+    def _body(s, kc):
+        s, tmp = jax.vmap(_pop_one, in_axes=(0, 0))(s, kc)
+        # In-window fault date, guarded against FMA contraction (see
+        # `_pop_one`): the runtime zero (now - now; unfoldable, now could
+        # be non-finite for all the compiler knows) caps the product in
+        # an add, so the worst contraction is fma(w, u, 0) — the plain
+        # rounded product — and the outer add has no mul operand to fuse
+        # with.  HLO-level barriers don't survive LLVM's contraction.
+        zero = s["now"] - s["now"]
+        off = tmp["w_eff"] * tmp["u"] + zero
+        fd = jnp.where(tmp["draw"], tmp["t_tr"] + off, tmp["t_tr"])
+        s = dict(s, pred_fd=jnp.where(tmp["honour"], fd, s["pred_fd"]))
+        s = _push_all(s, tmp["push"], fd)
+        if has_adaptive:
+            s = _fixup(s, kc)
+        s = jax.vmap(_arrive_one, in_axes=(0, 0))(s, kc)
+        return _advance(s, kc)
+
+    def _loop(state, kc):
+        return lax.while_loop(
+            lambda s: ~(jnp.all(s["finished"]) | jnp.any(s["overflow"])),
+            lambda s: _body(s, kc), state)
+
+    run = _loop
+    if use_shard:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import Mesh
+        from jax.sharding import PartitionSpec as P
+        mesh = Mesh(np.asarray(devices), ("i",))
+
+        def _specs(tree):
+            return jax.tree_util.tree_map(
+                lambda v: P("i") if np.ndim(v) == 1 else P("i", None), tree)
+
+    # -- chunk driver --------------------------------------------------------
+    def _init_chunk(sl: slice, n_real: int):
+        n = CL
+        f8, i4 = np.float64, np.int32
+
+        def pad1(a, fill, dtype):
+            out = np.full(n, fill, dtype=dtype)
+            out[:n_real] = a[sl]
+            return out
+
+        period = pad1(lane_period, c, f8)
+        wpp0 = period - c
+        state = {
+            "now": np.zeros(n, f8), "done": np.zeros(n, f8),
+            "saved": np.zeros(n, f8), "period_start": np.zeros(n, f8),
+            "phase": np.full(n, _WORK, i4),
+            "phase_end": np.full(n, np.inf, f8),
+            "wpp": wpp0, "w_rem": np.minimum(wpp0, time_base),
+            "win_end": np.full(n, -np.inf, f8),
+            "win_rem": np.full(n, np.inf, f8),
+            "finished": np.zeros(n, bool),
+            "pc": np.full(n, _PC_POP, i4),
+            "target": np.full(n, -np.inf, f8),
+            "cursor": np.zeros(n, i4), "cur": np.zeros(n, i4),
+            "pred_t": np.zeros(n, f8), "pred_fd": np.zeros(n, f8),
+            "pred_true": np.zeros(n, bool), "pred_win": np.zeros(n, f8),
+            "def_time": np.full((n, K), np.inf, f8),
+            "def_seq": np.full((n, K), _BIG_SEQ, i4),
+            "next_seq": pad1(n_ev, 0, i4),
+            "overflow": np.zeros(n, bool),
+            "period": period, "tparam": pad1(lane_param, 0.0, f8),
+            "n_faults": np.zeros(n, i4), "n_faults_hit": np.zeros(n, i4),
+            "n_predictions": np.zeros(n, i4), "n_trusted": np.zeros(n, i4),
+            "n_trusted_true": np.zeros(n, i4), "n_ignored": np.zeros(n, i4),
+            "n_periodic_ckpts": np.zeros(n, i4),
+            "n_replans": np.zeros(n, i4),
+            "time_ckpt": np.zeros(n, f8), "time_prockpt": np.zeros(n, f8),
+            "time_down": np.zeros(n, f8), "time_lost": np.zeros(n, f8),
         }
+        state["finished"][n_real:] = True
+        kc = {
+            "tr": pad1(lane_trace, 0, i4), "n_ev": pad1(n_ev, 0, i4),
+            "kind": pad1(lane_kind, _TRUST_NEVER, i4),
+            "window": pad1(lane_window, 0.0, f8),
+            "within": pad1(within, False, bool),
+            "wwp": pad1(lane_wwp, np.inf, f8),
+            "tab": np.zeros((n, TW), f8),
+        }
+        kc["tab"][:n_real] = tab[sl]
+        if has_adaptive:
+            state.update(
+                ad_ntp=np.zeros(n, f8), ad_nfp=np.zeros(n, f8),
+                ad_nuf=np.zeros(n, f8),
+                ad_pr=pad1(ad_pr0, 0.0, f8), ad_pp=pad1(ad_pp0, 0.0, f8),
+                ad_gs=np.zeros(n, f8), ad_gn=np.zeros(n, f8),
+                ad_lastf=np.full(n, -np.inf, f8),
+                ad_pmu=np.full(n, platform.mu, f8),
+                replan_eval=np.zeros(n, bool),
+            )
+            kc.update(
+                ad_act=pad1(ad_act, False, bool),
+                ad_estmu=pad1(ad_estmu, False, bool),
+                ad_minp=pad1(ad_minp, np.inf, f8),
+                ad_minf=pad1(ad_minf, np.inf, f8),
+                ad_tol=pad1(ad_tol, 0.0, f8),
+                ad_dec=pad1(ad_dec, 1.0, f8),
+            )
+        return state, kc
 
-    f8 = jnp.float64
-    i8 = jnp.int64
-    zf = jnp.zeros(L, f8)
-    zi = jnp.zeros(L, i8)
-    wpp0 = period - c
-    state = {
-        "now": zf, "done": zf, "saved": zf, "period_start": zf,
-        "phase": jnp.full(L, _WORK, jnp.int32),
-        "phase_end": jnp.full(L, jnp.inf, f8),
-        "wpp": wpp0, "w_rem": jnp.minimum(wpp0, time_base - zf),
-        "finished": jnp.zeros(L, bool),
-        "pc": jnp.full(L, _PC_POP, jnp.int32),
-        "target": jnp.full(L, -jnp.inf, f8),
-        "cursor": zi, "pred_t": zf, "pred_fd": zf,
-        "pred_true": jnp.zeros(L, bool), "cur": zi,
-        "def_time": jnp.full((L, K), jnp.inf, f8),
-        "def_seq": jnp.full((L, K), _BIG_SEQ, i8),
-        "next_seq": n_ev_lane.astype(i8),
-        "overflow": jnp.zeros(L, bool),
-        "n_faults": zi, "n_faults_hit": zi, "n_predictions": zi,
-        "n_trusted": zi, "n_trusted_true": zi, "n_ignored": zi,
-        "n_periodic_ckpts": zi, "time_ckpt": zf, "time_prockpt": zf,
-        "time_down": zf, "time_lost": zf,
-    }
+    run_jit = None
+    out_keys = ("now", "n_faults", "n_faults_hit", "n_predictions",
+                "n_trusted", "n_trusted_true", "n_ignored",
+                "n_periodic_ckpts", "time_ckpt", "time_prockpt", "time_down",
+                "time_lost", "n_replans", "period", "tparam")
+    ad_keys = ("ad_ntp", "ad_nfp", "ad_nuf", "ad_gs", "ad_gn")
+    acc = {k: np.zeros(L, np.float64) for k in out_keys}
+    acc.update({k: np.zeros(L, np.float64) for k in ad_keys})
 
-    run = jax.jit(lambda s0: lax.while_loop(
-        lambda s: ~jnp.all(s["finished"]), body, s0))
-    final = jax.device_get(run(state))
-    if final["overflow"].any():
-        raise RuntimeError(
-            f"deferred-fault capacity ({K} slots) exceeded in the jax "
-            f"backend; rerun with backend='numpy'")
+    for lo in range(0, L, CL):
+        n_real = min(CL, L - lo)
+        sl = slice(lo, lo + n_real)
+        state, kc = _init_chunk(sl, n_real)
+        if has_adaptive:
+            cfgs = list(lane_adaptive[lo:lo + n_real])
+            holder["cfgs"] = cfgs + [None] * (CL - n_real)
+        if run_jit is None:
+            if use_shard:
+                run_jit = jax.jit(shard_map(
+                    run, mesh=mesh, in_specs=(_specs(state), _specs(kc)),
+                    out_specs=_specs(state), check_rep=False),
+                    donate_argnums=0)
+            else:
+                run_jit = jax.jit(run, donate_argnums=0)
+        final = jax.device_get(run_jit(state, kc))
+        if final["overflow"].any():
+            raise RuntimeError(
+                f"deferred-fault capacity ({K} slots) exceeded in the jax "
+                f"backend; rerun with backend='numpy'")
+        for key in out_keys:
+            acc[key][sl] = final[key][:n_real]
+        if has_adaptive:
+            for key in ad_keys:
+                acc[key][sl] = final[key][:n_real]
+
+    # -- final-plan / estimator diagnostics (mirrors the NumPy engine) ------
+    er = np.full(L, -1.0)
+    ep = np.full(L, -1.0)
+    em = np.full(L, -1.0)
+    if has_adaptive:
+        denom_f = acc["ad_ntp"] + acc["ad_nuf"]
+        denom_p = acc["ad_ntp"] + acc["ad_nfp"]
+        np.divide(acc["ad_ntp"], denom_f, out=er,
+                  where=ad_act & (denom_f > 0))
+        np.divide(acc["ad_ntp"], denom_p, out=ep,
+                  where=ad_act & (denom_p > 0))
+        np.divide(acc["ad_gs"], acc["ad_gn"], out=em,
+                  where=ad_estmu & (acc["ad_gn"] > 0))
     return {
-        "makespan": final["now"],
-        "n_faults": final["n_faults"],
-        "n_faults_hit": final["n_faults_hit"],
-        "n_predictions": final["n_predictions"],
-        "n_trusted": final["n_trusted"],
-        "n_trusted_true": final["n_trusted_true"],
-        "n_ignored": final["n_ignored"],
-        "n_periodic_ckpts": final["n_periodic_ckpts"],
-        "time_ckpt": final["time_ckpt"],
-        "time_prockpt": final["time_prockpt"],
-        "time_down": final["time_down"],
-        "time_lost": final["time_lost"],
+        "makespan": acc["now"],
+        "n_faults": acc["n_faults"].astype(np.int64),
+        "n_faults_hit": acc["n_faults_hit"].astype(np.int64),
+        "n_predictions": acc["n_predictions"].astype(np.int64),
+        "n_trusted": acc["n_trusted"].astype(np.int64),
+        "n_trusted_true": acc["n_trusted_true"].astype(np.int64),
+        "n_ignored": acc["n_ignored"].astype(np.int64),
+        "n_periodic_ckpts": acc["n_periodic_ckpts"].astype(np.int64),
+        "time_ckpt": acc["time_ckpt"],
+        "time_prockpt": acc["time_prockpt"],
+        "time_down": acc["time_down"],
+        "time_lost": acc["time_lost"],
+        "n_replans": acc["n_replans"].astype(np.int64),
+        "final_period": acc["period"],
+        "final_threshold": np.where(ad_act, acc["tparam"], -1.0),
+        "est_recall": er,
+        "est_precision": ep,
+        "est_mu": em,
     }

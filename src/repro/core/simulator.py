@@ -144,6 +144,7 @@ class SimResult:
     final_threshold: float = -1.0  # last planned trust threshold (-1: static)
     est_recall: float = -1.0       # final r-hat (-1: no estimator / no data)
     est_precision: float = -1.0    # final p-hat
+    est_mu: float = -1.0           # final mu-hat (-1: mu not estimated)
 
     @property
     def waste(self) -> float:
@@ -401,18 +402,31 @@ def simulate(
         # observation.  ad_dec == 1.0 keeps the legacy integer counters
         # (and their arithmetic) bit-for-bit.
         ad_dec = adaptive.decay
+        # Online MTBF (estimate_mu): EW mean of observed fault inter-arrival
+        # gaps, kept as decayed (sum, count) pairs so both engines replay
+        # the identical float sequence (mirrors ft/estimator.py's _EWMean).
+        ad_est_mu = getattr(adaptive, "estimate_mu", False)
+        ad_mu_gs = 0.0           # decayed sum of gaps
+        ad_mu_gn = 0.0           # decayed count of gaps
+        ad_last_fault = None     # strike time of the previous actual fault
+        ad_planned_mu = platform.mu
 
     res = SimResult(makespan=0.0, time_base=time_base)
     m = _Machine(platform, cp, period, time_base, res)
 
     def _ad_replan() -> None:
-        nonlocal ad_thr, ad_planned_r, ad_planned_p, ad_period
+        nonlocal ad_thr, ad_planned_r, ad_planned_p, ad_period, ad_planned_mu
         from repro.predictors.estimator import maybe_replan
+        mu_hat = (ad_mu_gs / ad_mu_gn
+                  if ad_est_mu and ad_mu_gn > 0.0 else None)
         out = maybe_replan(adaptive, platform, cp, ad_ntp, ad_nfp, ad_nuf,
-                           ad_planned_r, ad_planned_p)
+                           ad_planned_r, ad_planned_p,
+                           mu_hat=mu_hat, planned_mu=ad_planned_mu)
         if out is None:
             return
         ad_planned_r, ad_planned_p, ad_period, ad_thr = out
+        if mu_hat is not None:
+            ad_planned_mu = mu_hat
         m.period_fn = (lambda t, _T=ad_period: _T)
         res.n_replans += 1
 
@@ -441,6 +455,18 @@ def simulate(
     while queue and not m.finished:
         t, _, ev, payload, w = heapq.heappop(queue)
         if ev == _EV_FAULT:
+            mu_observed = False
+            if adaptive is not None and ad_est_mu:
+                # Every actual fault (trace or deferred) is an MTBF
+                # observation: the gap to the previous strike.
+                if ad_last_fault is not None:
+                    if ad_dec != 1.0:
+                        ad_mu_gs *= ad_dec
+                        ad_mu_gn *= ad_dec
+                    ad_mu_gs += t - ad_last_fault
+                    ad_mu_gn += 1
+                    mu_observed = True
+                ad_last_fault = t
             if payload == _FAULT_FROM_TRACE:
                 res.n_faults += 1
                 if adaptive is not None:
@@ -451,6 +477,10 @@ def simulate(
                         ad_nuf *= ad_dec
                     ad_nuf += 1
                     _ad_replan()
+            elif mu_observed:
+                # Deferred (predicted) faults carry no new (r, p)
+                # information, but their strike updates mu-hat.
+                _ad_replan()
             m.advance_to(t)
             if m.finished:
                 break
@@ -526,6 +556,8 @@ def simulate(
             res.est_recall = ad_ntp / (ad_ntp + ad_nuf)
         if ad_ntp + ad_nfp > 0:
             res.est_precision = ad_ntp / (ad_ntp + ad_nfp)
+        if ad_est_mu and ad_mu_gn > 0.0:
+            res.est_mu = ad_mu_gs / ad_mu_gn
     elif isinstance(period, (int, float)):
         res.final_period = float(period)
     return res

@@ -73,7 +73,7 @@ __all__ = [
 
 # Environment knobs.
 _WORKERS_ENV = "REPRO_EXPERIMENT_WORKERS"   # scalar-fallback process pool
-_ENGINE_ENV = "REPRO_ENGINE"                # auto (default) | batch | scalar
+_ENGINE_ENV = "REPRO_ENGINE"          # auto (default) | batch | scalar | jax
 _PERSIST_ENV = "REPRO_PERSIST_CACHE"        # 1 = spill EvalCache to disk
 _CACHE_DIR_ENV = "REPRO_CACHE_DIR"          # default ~/.cache/repro
 _BATCHED_TRACES_ENV = "REPRO_BATCHED_TRACES"  # 1 = bank-level trace sampling
@@ -97,7 +97,14 @@ _MIN_PARALLEL_SIMS = 16
 #     would decode into a 5-tuple that can never equal a v4 6-tuple.
 # v5: AdaptiveConfig.key() grew the halflife element (windowed/EW online
 #     estimator, PR 6); same invalidation story as v4 (6-tuple vs 7-tuple).
-_EVAL_CACHE_VERSION = 5
+# v6: the persist key grew the engine-identity tag (PR 7) — the numpy-family
+#     engines (auto/batch/scalar, bit-for-bit identical by contract) share
+#     the empty legacy tag, the jax engine is fingerprinted by jax version +
+#     backend platform + device kind (accelerator backends may relax the
+#     bitwise contract to float32 tolerances, so their results must never
+#     alias a CPU store).  v5 stores hash differently and are ignored —
+#     invalidated, never misread.
+_EVAL_CACHE_VERSION = 6
 
 
 def _env_flag(name: str) -> bool:
@@ -378,9 +385,9 @@ def _resolve_workers(workers: int | None) -> int:
 
 def _resolve_engine(engine: str | None) -> str:
     engine = engine or os.environ.get(_ENGINE_ENV, "").strip() or "auto"
-    if engine not in ("auto", "batch", "scalar"):
+    if engine not in ("auto", "batch", "scalar", "jax"):
         raise ValueError(f"unknown engine {engine!r} "
-                         f"(expected auto, batch or scalar)")
+                         f"(expected auto, batch, scalar or jax)")
     return engine
 
 
@@ -423,8 +430,10 @@ def evaluate_strategies(
     (default ``$REPRO_EXPERIMENT_WORKERS``, else the CPU count) and the
     pending work is large enough.  ``engine="scalar"`` (or
     ``REPRO_ENGINE=scalar``) forces the scalar path everywhere;
-    ``engine="batch"`` is strict — it raises if any candidate needs the
-    fallback.  Results are bit-for-bit independent of the execution plan.
+    ``engine="batch"`` and ``engine="jax"`` are strict — they raise if any
+    candidate needs the fallback (``"jax"`` runs the lane pass on the jax
+    engine, bit-for-bit the numpy lanes on CPU x64).  Results are
+    bit-for-bit independent of the execution plan.
     """
     cache = cache if cache is not None else EvalCache()
     engine = _resolve_engine(engine)
@@ -438,9 +447,9 @@ def evaluate_strategies(
     seen_keys: dict[tuple, tuple[int, int]] = {}  # key -> first slot
     for si, strat in enumerate(strategies):
         lanes_ok = engine != "scalar" and _batchable(strat)
-        if engine == "batch" and not lanes_ok:
+        if engine in ("batch", "jax") and not lanes_ok:
             raise ValueError(
-                f"engine='batch' cannot run strategy {strat.name!r} "
+                f"engine={engine!r} cannot run strategy {strat.name!r} "
                 f"(dynamic period or unsupported trust policy); use "
                 f"engine='auto' to allow the scalar fallback")
         for ti in range(n):
@@ -473,7 +482,8 @@ def evaluate_strategies(
             window_periods=[strategies[si].window_period
                             for si, _ in lane_items],
             adaptives=[strategies[si].adaptive for si, _ in lane_items],
-            seeds=seed + 7919 * tr_idx)
+            seeds=seed + 7919 * tr_idx,
+            backend="jax" if engine == "jax" else "numpy")
         for (si, ti), m in zip(lane_items, lane_ms):
             makespans[si, ti] = m
             cache.put(strategies[si], ti, float(m))
@@ -704,12 +714,32 @@ def _metric_value(metric: str, makespan: float | None,
     raise KeyError(f"unknown metric {metric!r}")
 
 
-def _cell_persist_key(cell: ScenarioSpec, batched_bank: bool) -> str:
+def _engine_fingerprint(engine: str) -> str:
+    """Cache-identity tag of the resolved engine.
+
+    The numpy-family engines (auto / batch / scalar) are bit-for-bit
+    identical by contract, so they share the empty legacy tag and keep
+    hitting each other's stores.  The jax engine matches them bitwise on
+    CPU x64, but an accelerator backend may relax the contract (float64
+    emulation, float32 kernels), so its results are keyed by jax version +
+    backend platform + device kind — a TPU store can never be misread as
+    a CPU (or numpy) one.
+    """
+    if engine != "jax":
+        return ""
+    import jax
+    dev = jax.devices()[0]
+    return f"jax-{jax.__version__}-{dev.platform}-{dev.device_kind}|"
+
+
+def _cell_persist_key(cell: ScenarioSpec, batched_bank: bool,
+                      engine: str = "auto") -> str:
     """Content hash of one evaluation context: the scenario spec (which
     covers the trace bank seeds/sizes, platform, cp and the evaluation
     seed) plus the bank sampling mode (batched banks are different draws
-    than per-trace banks)."""
-    tag = "batched|" if batched_bank else ""
+    than per-trace banks) and the engine identity tag (see
+    :func:`_engine_fingerprint`)."""
+    tag = ("batched|" if batched_bank else "") + _engine_fingerprint(engine)
     digest = hashlib.sha256(
         (f"eval-v{_EVAL_CACHE_VERSION}|" + tag + cell.key()).encode()
     ).hexdigest()
@@ -747,6 +777,7 @@ def run_experiment(
         persist = _env_flag(_PERSIST_ENV)
     if batched_traces is None:
         batched_traces = _env_flag(_BATCHED_TRACES_ENV)
+    engine = _resolve_engine(engine)
     rows: list[dict[str, Any]] = []
     for axis_cols, cell in exp.cells():
         overrides: dict[str, Any] = {}
@@ -762,8 +793,8 @@ def run_experiment(
         traces: list[EventTrace] = []
         if cell.n_traces > 0 and built:
             traces = trace_bank(cell, batched=batched_traces)
-        cache = EvalCache(persist_key=_cell_persist_key(cell, batched_traces)
-                          if persist else None)
+        cache = EvalCache(persist_key=_cell_persist_key(
+            cell, batched_traces, engine) if persist else None)
 
         # Batch all plain strategies first, then resolve the searches
         # against the warm cache.

@@ -91,6 +91,13 @@ class AdaptiveConfig:
     estimates).  ``model_order`` selects the analysis each re-plan solves:
     the paper's first-order model (default) or the exact-Exponential
     renewal analysis of :mod:`repro.core.exact`.
+
+    ``estimate_mu`` additionally estimates the platform MTBF online (the
+    EW mean of observed fault inter-arrival gaps, mirroring
+    ``ft/estimator.py``) and re-plans on the estimated mu instead of the
+    assumed ``platform.mu`` — the same hysteresis applies, *relative* for
+    mu (``|mu_hat - planned_mu| > tol * planned_mu``) because mu is not a
+    ratio in [0, 1].
     """
 
     prior_recall: float
@@ -100,6 +107,7 @@ class AdaptiveConfig:
     tol: float = 0.05
     model_order: str = "first"
     halflife: float | None = None
+    estimate_mu: bool = False
 
     def __post_init__(self) -> None:
         if self.min_preds < 1 or self.min_faults < 1:
@@ -123,14 +131,17 @@ class AdaptiveConfig:
                     f"min_faults={self.min_faults}) would never open")
 
     def plan(self, platform: Platform, cp: float, recall: float,
-             precision: float) -> tuple[float, float]:
+             precision: float, mu: float | None = None) -> tuple[float, float]:
         """(period, trust threshold) of the model-optimal plan at (r, p).
 
         The threshold is the trust breakpoint when the acting branch wins
         (beta_lim = C_p/p at first order, its numeric analogue for the
         exact model) and +inf when the predictor is analytically not worth
-        using (never trust).
+        using (never trust).  ``mu`` (if given) overrides the platform MTBF
+        with the online estimate.
         """
+        if mu is not None:
+            platform = dataclasses.replace(platform, mu=float(mu))
         pp = PredictedPlatform(platform, Predictor(recall, precision), cp)
         if self.model_order == "exact":
             from repro.core.exact import optimal_period_exact
@@ -148,7 +159,8 @@ class AdaptiveConfig:
     def key(self) -> tuple:
         """Value-semantics tuple for result-cache candidate keys."""
         return (self.prior_recall, self.prior_precision, self.min_preds,
-                self.min_faults, self.tol, self.halflife, self.model_order)
+                self.min_faults, self.tol, self.halflife, self.model_order,
+                self.estimate_mu)
 
     @property
     def decay(self) -> float:
@@ -160,12 +172,19 @@ def maybe_replan(cfg: AdaptiveConfig, platform: Platform, cp: float,
                  n_true_pred: float, n_false_pred: float,
                  n_unpred_faults: float,
                  planned_recall: float, planned_precision: float,
+                 mu_hat: float | None = None,
+                 planned_mu: float | None = None,
                  ) -> tuple[float, float, float, float] | None:
     """One estimator observation step, shared by both engines.
 
     Called after a counter update; returns ``None`` (keep the current
     plan: gate not passed, or estimates still inside the hysteresis box)
     or ``(r_hat, p_hat, period, threshold)`` for a re-plan.
+
+    ``mu_hat`` / ``planned_mu`` (``estimate_mu`` configs only) widen the
+    hysteresis box with a relative-mu axis: a large enough MTBF drift
+    triggers a re-plan even when (r-hat, p-hat) sit still, and every
+    re-plan is solved at the estimated mu.
     """
     if n_true_pred + n_false_pred < cfg.min_preds:
         return None
@@ -173,10 +192,13 @@ def maybe_replan(cfg: AdaptiveConfig, platform: Platform, cp: float,
         return None
     r_hat = estimate_recall(n_true_pred, n_unpred_faults)
     p_hat = estimate_precision(n_true_pred, n_false_pred)
+    mu_moved = (mu_hat is not None and planned_mu is not None
+                and abs(mu_hat - planned_mu) > cfg.tol * planned_mu)
     if abs(r_hat - planned_recall) <= cfg.tol \
-            and abs(p_hat - planned_precision) <= cfg.tol:
+            and abs(p_hat - planned_precision) <= cfg.tol \
+            and not mu_moved:
         return None
-    period, threshold = cfg.plan(platform, cp, r_hat, p_hat)
+    period, threshold = cfg.plan(platform, cp, r_hat, p_hat, mu=mu_hat)
     return r_hat, p_hat, period, threshold
 
 

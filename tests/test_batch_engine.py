@@ -474,6 +474,5 @@ def test_jax_backend_rejects_unsupported_config():
         with pytest.raises(RuntimeError, match="x64"):
             simulate_batch([tr], p, 1e4, [2000.0], backend="jax")
     else:  # pragma: no cover - depends on session config
-        with pytest.raises(ValueError):
-            simulate_batch([tr], p, 1e4, [2000.0], backend="jax",
-                           trust=FixedProbabilityTrust(0.5))
+        with pytest.raises(ValueError, match="period"):
+            simulate_batch([tr], p, 1e4, [p.c / 2], backend="jax")

@@ -261,8 +261,10 @@ def test_adaptive_model_order_in_candidate_key():
     a_exact = build_strategy("adaptive", sc.replace(model_order="exact"))
     k1, k2 = _candidate_key(a_first), _candidate_key(a_exact)
     assert k1 != k2
-    assert a_first.adaptive.key()[-1] == "first"
-    assert a_exact.adaptive.key()[-1] == "exact"
+    # key() = (..., halflife, model_order, estimate_mu) since the PR-7
+    # online-mu element was appended.
+    assert a_first.adaptive.key()[-2] == "first"
+    assert a_exact.adaptive.key()[-2] == "exact"
     # Both candidate keys stay persistable (JSON value semantics).
     assert _persistable_key(k1) is not None
     assert _persistable_key(k2) is not None

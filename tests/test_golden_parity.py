@@ -69,7 +69,9 @@ _CELLS: dict[str, tuple[ScenarioSpec, StrategySpec]] = {
                            StrategySpec("simple_policy", {"q": 0.5})),
 }
 
-_JAX_CELLS = ("baseline_rfo", "prediction_optimal")  # exact dates, static
+# Every pinned cell: the flagship jax engine covers the full strategy
+# matrix (windows, adaptive re-planning, stochastic trust, exact model).
+_JAX_CELLS = tuple(sorted(_CELLS))
 
 
 def _simulate_cell(name: str) -> dict:
@@ -174,6 +176,9 @@ for name in sys.argv[2:]:
         traces, scenario.platform, scenario.time_base, [float(strat.period)],
         cp=scenario.cp, trust=strat.trust,
         inexact_window=strat.inexact_window,
+        window_mode=strat.window_mode,
+        window_period=strat.window_period,
+        adaptive=strat.adaptive,
         trace_seeds=[scenario.seed + 7919 * i for i in range(len(traces))],
         backend="jax")
     got = [float(m) for m in batch.makespan[0]]

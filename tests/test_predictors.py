@@ -372,6 +372,42 @@ def test_adaptive_halflife_simulation_tracks_drift():
         < abs(runs["cum"].est_recall - 0.2)
 
 
+def test_adaptive_estimate_mu_parity_and_tracking():
+    """Online-MTBF regression (ROADMAP item 6): traces drawn at a third
+    of the assumed platform MTBF.  The ``estimate_mu`` run must (a) stay
+    bit-for-bit scalar/lane identical, (b) report an est_mu much closer
+    to the true MTBF than the stale platform value, and (c) re-plan to a
+    different cadence than its mu-blind twin."""
+    p = Platform(mu=6000.0, c=60.0, d=6.0, r=60.0)
+    true_mu = 2000.0
+    tb = 400_000.0
+    traces = [make_event_trace(Exponential(1.0), true_mu, 0.85, 0.8,
+                               1_200_000.0, np.random.default_rng(40 + i))
+              for i in range(2)]
+    seeds = [51, 52]
+    kw = dict(prior_recall=0.85, prior_precision=0.8, min_preds=8,
+              min_faults=8, tol=0.03)
+    runs = {}
+    for name, est in (("blind", False), ("mu", True)):
+        cfg = AdaptiveConfig(estimate_mu=est, **kw)
+        t0, thr0 = cfg.plan(p, 60.0, 0.85, 0.8)
+        batch = simulate_batch(traces, p, tb, [t0], cp=60.0,
+                               trust=ThresholdTrust(thr0), adaptive=cfg,
+                               trace_seeds=seeds)
+        for ti, tr in enumerate(traces):
+            want = simulate(tr, p, tb, t0, cp=60.0,
+                            trust=ThresholdTrust(thr0), adaptive=cfg,
+                            rng=np.random.default_rng(seeds[ti]))
+            assert_same(batch.result(0, ti), want, f"{name} trace {ti}")
+        runs[name] = batch
+    mu_hat = runs["mu"].est_mu[0]
+    assert (mu_hat > 0).all()
+    assert (np.abs(mu_hat - true_mu) < np.abs(p.mu - true_mu)).all()
+    assert runs["mu"].n_replans.sum() > 0
+    assert not np.array_equal(runs["mu"].final_period,
+                              runs["blind"].final_period)
+
+
 # ---------------------------------------------------------------------------
 # Adaptive re-planning: scalar / lane-engine bit-for-bit parity
 # ---------------------------------------------------------------------------
@@ -549,6 +585,18 @@ def test_v3_format_adaptive_key_never_aliases_v4(tmp_path):
     assert cache.get(ad, 0) is None  # ...but never serves a v4 candidate
 
 
+def test_v6_engine_tag_keys_separate_stores(monkeypatch):
+    """The v6 persist key carries an engine-identity tag: the bit-for-bit
+    numpy-family engines keep sharing one store, while pre-v6 stores live
+    under different file names — invalidated, never misread."""
+    from repro.experiments import runner
+    k6 = _cell_persist_key(SMALL, False)
+    assert _cell_persist_key(SMALL, False, "scalar") == k6
+    assert _cell_persist_key(SMALL, False, "batch") == k6
+    monkeypatch.setattr(runner, "_EVAL_CACHE_VERSION", 5)
+    assert _cell_persist_key(SMALL, False) != k6
+
+
 # ---------------------------------------------------------------------------
 # Estimator edge cases: empty streams, closed gates, final-event replans
 # ---------------------------------------------------------------------------
@@ -685,12 +733,22 @@ def test_jax_backend_fixed_probability_and_inexact_subprocess():
     assert "JAX-RNG-OK" in proc.stdout
 
 
-def test_jax_backend_rejects_adaptive():
+def test_jax_backend_runs_adaptive():
+    """The flagship jax engine runs adaptive candidates (bitwise parity
+    incl. replan sites is asserted in tests/test_jax_engine.py and the
+    golden net).  Without x64 the engine refuses loudly instead of
+    silently degrading the bitwise contract."""
     pytest.importorskip("jax")
+    import jax as _jax
     p = Platform(mu=5e4, c=600.0)
     tr = make_event_trace(Exponential(1.0), p.mu, 0.0, 1.0, 1e4,
                           np.random.default_rng(0))
     cfg = AdaptiveConfig(prior_recall=0.5, prior_precision=0.5)
-    with pytest.raises(ValueError, match="adaptive"):
-        simulate_batch([tr], p, 1e4, [2000.0], trust=ThresholdTrust(1.0),
-                       adaptive=cfg, backend="jax")
+    kw = dict(trust=ThresholdTrust(1.0), adaptive=cfg, trace_seeds=[0])
+    if not _jax.config.jax_enable_x64:
+        with pytest.raises(RuntimeError, match="x64"):
+            simulate_batch([tr], p, 1e4, [2000.0], backend="jax", **kw)
+    else:  # pragma: no cover - depends on session config
+        got = simulate_batch([tr], p, 1e4, [2000.0], backend="jax", **kw)
+        want = simulate_batch([tr], p, 1e4, [2000.0], **kw)
+        assert got.makespan[0, 0] == want.makespan[0, 0]

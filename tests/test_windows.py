@@ -222,16 +222,24 @@ def test_simulate_lanes_mixed_window_modes():
         assert ms[j] == want.makespan
 
 
-def test_jax_backend_rejects_window_lanes():
+def test_jax_backend_runs_window_lanes():
+    """The flagship jax engine runs window candidates (within-mode and
+    per-event window tensors); full bitwise parity is asserted in
+    tests/test_jax_engine.py and the golden net.  Without x64 the engine
+    refuses loudly instead of silently degrading the bitwise contract."""
     pytest.importorskip("jax")
+    import jax as _jax
     p = Platform(mu=5e4, c=600.0)
-    tr = trace_of([], [])
-    with pytest.raises(ValueError, match="window"):
-        simulate_batch([tr], p, 1e4, [2000.0], cp=600.0, backend="jax",
-                       window_mode="within", window_period=1800.0)
     wtr = trace_of([5000.0], [1], [600.0])
-    with pytest.raises(ValueError, match="window"):
-        simulate_batch([wtr], p, 1e4, [2000.0], backend="jax")
+    kw = dict(cp=600.0, trust=AlwaysTrust(), trace_seeds=[3],
+              window_mode="within", window_period=1800.0)
+    if not _jax.config.jax_enable_x64:
+        with pytest.raises(RuntimeError, match="x64"):
+            simulate_batch([wtr], p, 1e4, [2000.0], backend="jax", **kw)
+    else:  # pragma: no cover - depends on session config
+        got = simulate_batch([wtr], p, 1e4, [2000.0], backend="jax", **kw)
+        want = simulate_batch([wtr], p, 1e4, [2000.0], **kw)
+        assert got.makespan[0, 0] == want.makespan[0, 0]
 
 
 # ---------------------------------------------------------------------------
