@@ -164,7 +164,8 @@ def _fleet_cell(traces, platform, time_base, cp, trust, period,
 
 
 def run(n_traces: int, n_periods: int, scalar_periods: int,
-        batched_traces: bool, big_lanes: int) -> dict:
+        batched_traces: bool, big_lanes: int,
+        with_jax: bool = True) -> dict:
     from repro.core.prediction import beta_lim
     from repro.core.simulator import ThresholdTrust
     from repro.experiments.spec import ScenarioSpec
@@ -225,7 +226,7 @@ def run(n_traces: int, n_periods: int, scalar_periods: int,
 
     # -- flagship jax engine (PR 7): same grid bit-for-bit + lane scale ----
     jcell = _jax_cell(traces, platform, time_base, cp, trust, periods,
-                      seeds, big_lanes)
+                      seeds, big_lanes) if with_jax else None
     if jcell is not None:
         out["engine_jax"] = jcell
 
@@ -251,6 +252,41 @@ def run(n_traces: int, n_periods: int, scalar_periods: int,
                      window_period=tp),
         window=wspec.window, window_period=round(tp, 1))
     return out
+
+
+def check_contracts(result: dict) -> None:
+    """The engine-equivalence claims (shared by ``main`` and the suite
+    registry's ``bench``): numpy batch vs scalar within 1e-9, jax bitwise
+    vs numpy when present, 1-job fleets bit-for-bit vs the scalar loop."""
+    if result["engine"]["max_abs_makespan_diff"] > 1e-9:
+        raise AssertionError("engines disagree beyond the 1e-9 contract")
+    if result["engine_window"]["max_abs_makespan_diff"] > 1e-9:
+        raise AssertionError("window-mode engines disagree beyond the "
+                             "1e-9 contract")
+    if result["fleet"]["max_abs_makespan_diff"] != 0.0:
+        raise AssertionError("1-job fleet broke the bit-for-bit degeneracy "
+                             "contract vs the scalar loop")
+    if "engine_jax" in result and not result["engine_jax"]["bitwise_equal"]:
+        raise AssertionError("jax engine broke the bit-for-bit equivalence "
+                             "contract vs the numpy lanes")
+
+
+def bench(quick: bool = True) -> dict:
+    """Suite-registry entry point (``benchmarks.run`` / suite files).
+
+    Skips the jax cell so the payload's *structure* is identical on
+    jax-less and jax-bearing environments (the committed suite baseline is
+    diffed on both); the jax engine keeps its dedicated CI job via
+    ``python benchmarks/engine_perf.py --quick``.
+    """
+    n_traces = 24 if quick else 200
+    n_periods = 6 if quick else 24
+    result = run(n_traces, n_periods,
+                 scalar_periods=min(1 if quick else 3, n_periods),
+                 batched_traces=False,
+                 big_lanes=2 ** 14 if quick else 2 ** 20, with_jax=False)
+    check_contracts(result)
+    return result
 
 
 def main() -> None:
@@ -309,20 +345,21 @@ def main() -> None:
               f"bitwise_equal={jx['bitwise_equal']}; "
               f"{jx['big_lanes']} lanes in {jx['big_lanes_s']}s "
               f"({jx['lanes_per_s']:,} lanes/s, chunk {jx['chunk']})")
-        if not jx["bitwise_equal"]:
-            raise AssertionError("jax engine broke the bit-for-bit "
-                                 "equivalence contract vs the numpy lanes")
-    if eng["max_abs_makespan_diff"] > 1e-9:
-        raise AssertionError("engines disagree beyond the 1e-9 contract")
-    if weng["max_abs_makespan_diff"] > 1e-9:
-        raise AssertionError("window-mode engines disagree beyond the "
-                             "1e-9 contract")
-    if fl["max_abs_makespan_diff"] != 0.0:
-        raise AssertionError("1-job fleet broke the bit-for-bit degeneracy "
-                             "contract vs the scalar loop")
+    check_contracts(result)
 
+    # The store record is the source of truth; BENCH_simulator.json is its
+    # derived export (payload + record id for traceability).
+    export = dict(result)
+    try:
+        from benchmarks.run import record_benchmark
+        rid = record_benchmark("engine_perf", result, quick=args.quick)
+        if rid:
+            export["record_id"] = rid
+            print(f"store  -> {rid}")
+    except ImportError:
+        pass
     with open(args.out, "w") as fh:
-        json.dump(result, fh, indent=1)
+        json.dump(export, fh, indent=1, sort_keys=True)
     print(f"results -> {args.out}")
 
 

@@ -174,4 +174,9 @@ def run(quick: bool = True) -> dict:
 
 
 if __name__ == "__main__":
-    run(quick=False)
+    import os
+    import sys
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    from benchmarks.run import record_benchmark
+    record_benchmark("exact_sweep", run(quick=False), quick=False)

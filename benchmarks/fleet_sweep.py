@@ -131,5 +131,10 @@ def run(quick: bool = True) -> dict:
 
 
 if __name__ == "__main__":
+    import os
     import sys
-    run(quick="--full" not in sys.argv)
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    from benchmarks.run import record_benchmark
+    _quick = "--full" not in sys.argv
+    record_benchmark("fleet_sweep", run(quick=_quick), quick=_quick)

@@ -30,11 +30,36 @@ from __future__ import annotations
 
 import argparse
 import ast
-import dataclasses
 import json
 import os
 import sys
 import time
+
+
+def record_benchmark(name: str, payload: object, quick: bool) -> str | None:
+    """Write a benchmark suite's result through the result store.
+
+    The identity matches the suite runner's benchmark-item identity, so a
+    CLI run pre-populates the store that ``repro-store run`` resumes from.
+    Best effort: a store failure reports and returns None, never breaks
+    the benchmark itself.
+    """
+    try:
+        from repro.experiments.runner import (_EVAL_CACHE_VERSION,
+                                              _engine_fingerprint,
+                                              _resolve_engine)
+        from repro.store import ResultStore, RunRecord
+        identity = {
+            "eval_version": _EVAL_CACHE_VERSION,
+            "engine_fingerprint": _engine_fingerprint(_resolve_engine(None)),
+            "benchmark": name, "quick": quick,
+        }
+        rec = RunRecord.create("benchmark", name, identity,
+                               payload=payload or {})
+        return ResultStore().put(rec)
+    except Exception as e:  # noqa: BLE001 - recording must never break a run
+        print(f"[store] skipped recording {name}: {e}", file=sys.stderr)
+        return None
 
 
 def report_dryrun(path: str = "dryrun_results.json") -> None:
@@ -66,11 +91,12 @@ def report_roofline(path: str = "roofline_results.json") -> None:
 
 def _import_benchmarks():
     """Import every benchmark module so experiments register themselves."""
-    from . import (beyond, exact_sweep, exec_times, fleet_sweep, log_traces,
-                   multilevel, predictor_sweep, recall_precision, roofline,
-                   table2, waste_vs_n, window_sweep)
+    from . import (beyond, engine_perf, exact_sweep, exec_times, fleet_sweep,
+                   log_traces, multilevel, predictor_sweep, recall_precision,
+                   roofline, table2, waste_vs_n, window_sweep)
     del roofline  # registers the spec-driven accelerator sweep only
     return {
+        "engine_perf": engine_perf.bench,
         "table2": table2.run,
         "exec_times": exec_times.run,
         "waste_vs_n": waste_vs_n.run,
@@ -105,38 +131,10 @@ def run_one_experiment(name: str, overrides: dict[str, object],
                        batched_traces: bool | None = None) -> None:
     from repro.experiments import build_experiment, run_experiment
     exp = build_experiment(name, quick=quick)
-    sweep = exp.sweep
-    scenario = exp.scenario
-    def _covering_axis(field: str) -> str | None:
-        # An axis discards a base-scenario override when one of its swept
-        # paths equals the override path or is a prefix of it (the axis
-        # replaces the whole subtree per cell).  An axis on a *deeper* path
-        # (axis "dist.params.shape" vs override "dist.name") merges instead,
-        # so the override survives and is fine.
-        for axis_key in (sweep.axes if sweep else ()):
-            for axis_field in axis_key.split(","):
-                if field == axis_field or field.startswith(axis_field + "."):
-                    return axis_key
-        return None
-
-    for key, value in overrides.items():
-        if sweep is not None and key in sweep.axes:
-            values = list(value) if isinstance(value, (list, tuple)) \
-                else [value]
-            axes = dict(sweep.axes)
-            axes[key] = values
-            labels = {k: v for k, v in sweep.labels.items() if k != key}
-            sweep = dataclasses.replace(sweep, axes=axes, labels=labels)
-        else:
-            covering = next((a for f in key.split(",")
-                             for a in [_covering_axis(f)] if a), None)
-            if covering:
-                raise SystemExit(
-                    f"error: field {key!r} is controlled by sweep axis "
-                    f"{covering!r}; override the axis instead, e.g. "
-                    f"--set '{covering}=[...]'")
-            scenario = scenario.replace(**{key: value})
-    exp = dataclasses.replace(exp, sweep=sweep, scenario=scenario)
+    try:
+        exp = exp.with_overrides(overrides)
+    except ValueError as e:
+        raise SystemExit(f"error: {e}") from None
     if exp.scenario.extras.get("external_runner"):
         # Spec-driven accelerator sweep (e.g. roofline): runs as a
         # subprocess under the dry-run device flag the spec demands.
@@ -161,6 +159,28 @@ def run_one_experiment(name: str, overrides: dict[str, object],
                            engine=engine, batched_traces=batched_traces)
     print()
     print(table.format())
+
+    # Record the run through the result store (same identity as a suite
+    # item, so suite runs resume from CLI runs and vice versa).
+    try:
+        from repro.experiments.runner import (_EVAL_CACHE_VERSION,
+                                              _engine_fingerprint,
+                                              _resolve_engine)
+        from repro.store import ResultStore, RunRecord
+        identity = {
+            "eval_version": _EVAL_CACHE_VERSION,
+            "engine_fingerprint": _engine_fingerprint(
+                _resolve_engine(engine)),
+            "spec": exp.to_dict(), "n_traces": n_traces, "seed": seed,
+            "batched_traces": bool(batched_traces),
+        }
+        rec = RunRecord.create("experiment", name, identity,
+                               rows=table.rows)
+        rid = ResultStore().put(rec)
+        print(f"store  -> {rid}")
+    except Exception as e:  # noqa: BLE001
+        print(f"[store] skipped recording {name}: {e}", file=sys.stderr)
+
     if out_path:
         with open(out_path, "w") as fh:
             fh.write(table.to_json(indent=1))
@@ -245,6 +265,9 @@ def main() -> None:
         try:
             results[name] = fn(quick=quick)
             print(f"[{name}] done in {time.time() - t0:.1f}s", flush=True)
+            rid = record_benchmark(name, results[name], quick)
+            if rid:
+                print(f"[{name}] store -> {rid}", flush=True)
         except AssertionError as e:
             print(f"[{name}] CLAIM FAILED: {e}", flush=True)
             raise

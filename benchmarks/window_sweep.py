@@ -92,3 +92,12 @@ def run(quick: bool = True) -> dict:
     print("[window_sweep] claims OK: I=0 reproduces exact dates; "
           "windows hurt; in-window checkpointing recovers part of it")
     return out
+
+
+if __name__ == "__main__":
+    import os
+    import sys
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    from benchmarks.run import record_benchmark
+    record_benchmark("window_sweep", run(quick=False), quick=False)

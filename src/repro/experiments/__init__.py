@@ -30,9 +30,10 @@ from .registry import (PREDICTORS, build_distribution, build_experiment,
                        list_strategies, register_distribution,
                        register_experiment, register_strategy)
 from .runner import (BestPeriodSearch, EvalCache, ResultTable,
-                     best_period_search, clear_trace_bank, default_cache_dir,
+                     SuiteItemResult, SuiteRunResult, best_period_search,
+                     clear_trace_bank, default_cache_dir,
                      evaluate_strategies, evaluate_mean, run_experiment,
-                     trace_bank)
+                     run_suite, trace_bank)
 from .spec import (MU_IND_SYNTH, SECONDS_PER_DAY, DistributionSpec,
                    ExperimentSpec, PredictorSpec, ScenarioSpec, StrategySpec,
                    SweepSpec)
@@ -66,4 +67,7 @@ __all__ = [
     "evaluate_mean",
     "best_period_search",
     "run_experiment",
+    "run_suite",
+    "SuiteItemResult",
+    "SuiteRunResult",
 ]

@@ -41,7 +41,9 @@ import json
 import math
 import os
 import pickle
+import sys
 import tempfile
+import time
 from concurrent.futures import ProcessPoolExecutor
 from pathlib import Path
 from typing import Any, Iterable, Iterator, Mapping, Sequence
@@ -69,6 +71,9 @@ __all__ = [
     "evaluate_mean",
     "best_period_search",
     "run_experiment",
+    "run_suite",
+    "SuiteItemResult",
+    "SuiteRunResult",
 ]
 
 # Environment knobs.
@@ -77,6 +82,13 @@ _ENGINE_ENV = "REPRO_ENGINE"          # auto (default) | batch | scalar | jax
 _PERSIST_ENV = "REPRO_PERSIST_CACHE"        # 1 = spill EvalCache to disk
 _CACHE_DIR_ENV = "REPRO_CACHE_DIR"          # default ~/.cache/repro
 _BATCHED_TRACES_ENV = "REPRO_BATCHED_TRACES"  # 1 = bank-level trace sampling
+_CACHE_MAX_MB_ENV = "REPRO_CACHE_MAX_MB"    # spill size cap (0 = unbounded)
+_CACHE_GC_DRY_ENV = "REPRO_CACHE_GC_DRY_RUN"  # 1 = report, don't evict
+
+# The persistent spill is a *derived* cache (every entry regenerates from
+# its spec; run-level results live durably in repro.store), so it gets a
+# default size cap with LRU eviction instead of growing without bound.
+_DEFAULT_CACHE_MAX_MB = 512.0
 
 # Below this many pending scalar simulations a process pool is not worth
 # its startup cost; the fallback runs serial regardless of worker count.
@@ -232,10 +244,18 @@ class EvalCache:
         if persist_key is not None:
             self._path = Path(cache_dir or default_cache_dir()) \
                 / f"{persist_key}.json"
-            for ckey_str, per_trace in self._read_store().items():
+            store = self._read_store()
+            for ckey_str, per_trace in store.items():
                 key = self._decode_key(ckey_str)
                 for ti, m in per_trace.items():
                     self._makespans[(key, int(ti))] = float(m)
+            if store:
+                # mtime is the spill's LRU clock (see gc in flush): a pure
+                # read marks the file recently-used too.
+                try:
+                    os.utime(self._path)
+                except OSError:
+                    pass
 
     @staticmethod
     def _decode_key(ckey_str: str) -> tuple:
@@ -303,6 +323,30 @@ class EvalCache:
                 pass
             raise
         self._new.clear()
+        self._maybe_gc()
+
+    def _maybe_gc(self) -> None:
+        """Keep the spill directory under ``$REPRO_CACHE_MAX_MB`` (default
+        512; ``0`` disables) by LRU-evicting other cells' spill files —
+        the fix for the previously unbounded ``~/.cache/repro`` growth.
+        ``REPRO_CACHE_GC_DRY_RUN=1`` reports would-be evictions loudly on
+        stderr without deleting anything."""
+        raw = os.environ.get(_CACHE_MAX_MB_ENV, "").strip()
+        try:
+            max_mb = float(raw) if raw else _DEFAULT_CACHE_MAX_MB
+        except ValueError:
+            max_mb = _DEFAULT_CACHE_MAX_MB
+        if max_mb <= 0:
+            return
+        from repro.store.store import gc_cache  # late: avoid import cycle
+        dry = _env_flag(_CACHE_GC_DRY_ENV)
+        evicted = gc_cache(self._path.parent,
+                           max_bytes=int(max_mb * 1024 * 1024), dry_run=dry)
+        for path, size in evicted:
+            verb = "would evict" if dry else "evicted"
+            print(f"[repro cache gc] {verb} {path} ({size} bytes; "
+                  f"cap {max_mb:g} MB, set {_CACHE_MAX_MB_ENV}=0 to disable)",
+                  file=sys.stderr, flush=True)
 
     def __len__(self) -> int:
         return len(self._makespans)
@@ -676,6 +720,9 @@ class ResultTable:
     # -- output --------------------------------------------------------------
 
     def to_json(self, **kw: Any) -> str:
+        """Deterministic by default: keys sorted so exported tables diff
+        cleanly (pass ``sort_keys=False`` for insertion order)."""
+        kw.setdefault("sort_keys", True)
         return json.dumps(self.rows, default=str, **kw)
 
     def format(self, columns: Sequence[str] | None = None,
@@ -841,3 +888,227 @@ def run_experiment(
                   f"{len(traces)} traces, cache {cache.misses} sims "
                   f"/ {cache.hits} hits", flush=True)
     return ResultTable(rows)
+
+
+# ---------------------------------------------------------------------------
+# Suite execution (store-backed, resumable)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SuiteItemResult:
+    """Outcome of one suite item: the stored record (or the error that
+    prevented one), whether the store satisfied it without executing, and
+    the evaluated claim results."""
+
+    name: str
+    kind: str
+    record_id: str
+    record: Any = None            # RunRecord | None (None on error)
+    cached: bool = False
+    claims: list = dataclasses.field(default_factory=list)
+    error: str | None = None
+    wall_s: float = 0.0
+
+    @property
+    def ok(self) -> bool:
+        return self.error is None \
+            and all(c.get("ok", False) for c in self.claims)
+
+
+@dataclasses.dataclass
+class SuiteRunResult:
+    """Outcome of :func:`run_suite`: the per-item results plus the
+    aggregate suite record written to the store."""
+
+    suite: Any                    # SuiteSpec
+    record: Any                   # suite-kind RunRecord
+    items: list = dataclasses.field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return all(it.ok for it in self.items)
+
+    @property
+    def record_id(self) -> str:
+        return self.record.record_id
+
+    @property
+    def n_cached(self) -> int:
+        return sum(it.cached for it in self.items)
+
+    def failures(self) -> list[str]:
+        out = []
+        for it in self.items:
+            if it.error is not None:
+                out.append(f"{it.name}: ERROR {it.error}")
+            for c in it.claims:
+                if not c.get("ok", False):
+                    out.append(f"{it.name}: CLAIM FAILED {c['claim']} "
+                               f"({c.get('detail', '')})")
+        return out
+
+    def summary(self) -> str:
+        lines = [f"suite {self.suite.name}: {len(self.items)} items, "
+                 f"{self.n_cached} from store, "
+                 f"{'OK' if self.ok else 'FAILED'} "
+                 f"[{self.record_id}]"]
+        for it in self.items:
+            n_claims = len(it.claims)
+            n_ok = sum(c.get("ok", False) for c in it.claims)
+            tag = "store" if it.cached else f"{it.wall_s:.1f}s"
+            state = "error" if it.error else \
+                ("ok" if it.ok else f"{n_claims - n_ok} claim(s) failed")
+            lines.append(f"  {it.kind:10s} {it.name:24s} {tag:>7s}  "
+                         f"claims {n_ok}/{n_claims}  {state}")
+        lines += [f"  ! {f}" for f in self.failures()]
+        return "\n".join(lines)
+
+
+def _suite_item_identity(item: Any, engine: str) -> tuple[dict, Any]:
+    """(identity dict, built ExperimentSpec | None) of one suite item.
+
+    The identity covers everything the results depend on — the full
+    canonical spec (experiment items) or the benchmark name + quick flag,
+    the execution context, the runner semantics version and the engine
+    identity fingerprint (v6 EvalCache precedent: numpy-family engines
+    share the empty tag) — and nothing they don't, so re-running the same
+    inputs finds the prior record.
+    """
+    base = {"eval_version": _EVAL_CACHE_VERSION,
+            "engine_fingerprint": _engine_fingerprint(engine)}
+    if item.kind == "benchmark":
+        return dict(base, benchmark=item.benchmark, quick=item.quick), None
+    from .registry import build_experiment
+    if item.spec is not None:
+        exp = ExperimentSpec.from_dict(item.spec)
+    else:
+        exp = build_experiment(item.experiment, quick=item.quick,
+                               **item.args)
+    if item.overrides:
+        exp = exp.with_overrides(item.overrides)
+    identity = dict(base, spec=exp.to_dict(), n_traces=item.n_traces,
+                    seed=item.seed, batched_traces=item.batched_traces)
+    return identity, exp
+
+
+def _run_suite_item(item: Any, store: Any, *, resume: bool,
+                    engine: str | None, workers: int | None,
+                    verbose: bool) -> SuiteItemResult:
+    from repro.store import RunRecord, evaluate_claims
+
+    eng = _resolve_engine(item.engine or engine)
+    try:
+        identity, exp = _suite_item_identity(item, eng)
+    except (KeyError, ValueError, TypeError) as e:
+        # Unknown experiment / malformed spec or overrides: no identity,
+        # so nothing to probe or store — report the item as failed.
+        return SuiteItemResult(name=item.name, kind=item.kind, record_id="",
+                               error=f"{type(e).__name__}: {e}")
+    rid = RunRecord.id_for(item.kind, item.name, identity)
+    res = SuiteItemResult(name=item.name, kind=item.kind, record_id=rid)
+
+    rec = store.get(rid) if resume else None
+    if rec is not None:
+        res.record, res.cached = rec, True
+    else:
+        t0 = time.time()
+        try:
+            if item.kind == "benchmark":
+                import benchmarks.run as bench_mod
+                benches = bench_mod._import_benchmarks()
+                if item.benchmark not in benches:
+                    raise KeyError(
+                        f"unknown benchmark {item.benchmark!r} "
+                        f"(have {sorted(benches)})")
+                old = os.environ.get(_ENGINE_ENV)
+                if item.engine:
+                    os.environ[_ENGINE_ENV] = item.engine
+                try:
+                    payload = benches[item.benchmark](quick=item.quick)
+                finally:
+                    if item.engine:
+                        if old is None:
+                            os.environ.pop(_ENGINE_ENV, None)
+                        else:
+                            os.environ[_ENGINE_ENV] = old
+                rec = RunRecord.create(item.kind, item.name, identity,
+                                       payload=payload or {},
+                                       timings={"wall_s": time.time() - t0})
+            else:
+                table = run_experiment(
+                    exp, n_traces=item.n_traces, seed=item.seed,
+                    workers=workers, verbose=verbose, engine=eng,
+                    batched_traces=item.batched_traces or None)
+                rec = RunRecord.create(item.kind, item.name, identity,
+                                       rows=table.rows,
+                                       timings={"wall_s": time.time() - t0})
+        except (AssertionError, KeyError, ValueError, TypeError) as e:
+            # A failed run is reported, never stored: the identity must
+            # only ever resolve to a completed result.
+            res.error = f"{type(e).__name__}: {e}"
+            res.wall_s = time.time() - t0
+            return res
+        res.record, res.wall_s = rec, time.time() - t0
+
+    # Claims are (re-)evaluated on every run, including store-resumed ones,
+    # so tightening a suite file re-gates cached results without simulating.
+    table = ResultTable(res.record.rows) if res.record.rows else None
+    res.claims = evaluate_claims(item, table, res.record.payload)
+    res.record = res.record.with_claims(res.claims)
+    store.put(res.record)
+    return res
+
+
+def run_suite(
+    suite: Any,
+    *,
+    store: Any = None,
+    resume: bool = True,
+    engine: str | None = None,
+    workers: int | None = None,
+    verbose: bool = False,
+) -> SuiteRunResult:
+    """Run a scenario suite through the result store (resumably).
+
+    ``suite`` is a :class:`repro.store.SuiteSpec` or a path to a suite
+    file.  Per item the store is probed with the item's identity hash
+    first — a hit (``resume=True``, the default) skips execution entirely
+    and only re-evaluates the item's claims, so a second invocation of an
+    unchanged suite simulates nothing.  Results land in ``store``
+    (default :func:`repro.store.default_store_dir`) as immutable
+    :class:`~repro.store.RunRecord`\\ s plus one aggregate suite record
+    whose identity covers every member id.
+    """
+    from repro.store import ResultStore, RunRecord, SuiteSpec
+
+    if not isinstance(suite, SuiteSpec):
+        suite = SuiteSpec.from_file(suite)
+    store = store if store is not None else ResultStore()
+    suite.ensure_registered()
+
+    items: list[SuiteItemResult] = []
+    for item in suite.items:
+        if verbose:
+            print(f"[suite {suite.name}] {item.kind} {item.name} ...",
+                  flush=True)
+        res = _run_suite_item(item, store, resume=resume, engine=engine,
+                              workers=workers, verbose=verbose)
+        if verbose:
+            src = "store" if res.cached else f"ran in {res.wall_s:.1f}s"
+            print(f"[suite {suite.name}] {item.name}: {src}, "
+                  f"{'ok' if res.ok else 'FAILED'}", flush=True)
+        items.append(res)
+
+    identity = {"suite": suite.name,
+                "member_ids": [it.record_id for it in items],
+                "eval_version": _EVAL_CACHE_VERSION}
+    suite_rec = RunRecord.create(
+        "suite", suite.name, identity,
+        payload={"items": [{
+            "name": it.name, "kind": it.kind, "record_id": it.record_id,
+            "cached": it.cached, "ok": it.ok, "error": it.error,
+            "claims": it.claims,
+        } for it in items]},
+        timings={"wall_s": sum(it.wall_s for it in items)})
+    store.put(suite_rec)
+    return SuiteRunResult(suite=suite, record=suite_rec, items=items)

@@ -559,6 +559,49 @@ class ExperimentSpec:
         sweep = self.sweep or SweepSpec()
         yield from sweep.cells(self.scenario)
 
+    def with_overrides(self, overrides: Mapping[str, Any]) -> "ExperimentSpec":
+        """Apply ``--set``-style overrides: a sweep-axis name replaces that
+        axis's values (dropping its display labels), any other dotted path
+        updates the base scenario.  Overriding a scenario field that a sweep
+        axis controls raises ``ValueError`` — the axis would silently
+        discard the override per cell.  (The CLI and suite files share this
+        semantics; see ``benchmarks/run.py --set``.)
+        """
+        sweep = self.sweep
+        scenario = self.scenario
+
+        def _covering_axis(field: str) -> str | None:
+            # An axis discards a base-scenario override when one of its
+            # swept paths equals the override path or is a prefix of it
+            # (the axis replaces the whole subtree per cell).  An axis on a
+            # *deeper* path (axis "dist.params.shape" vs override
+            # "dist.name") merges instead, so the override survives.
+            for axis_key in (sweep.axes if sweep else ()):
+                for axis_field in axis_key.split(","):
+                    if field == axis_field \
+                            or field.startswith(axis_field + "."):
+                        return axis_key
+            return None
+
+        for key, value in overrides.items():
+            if sweep is not None and key in sweep.axes:
+                values = list(value) if isinstance(value, (list, tuple)) \
+                    else [value]
+                axes = dict(sweep.axes)
+                axes[key] = values
+                labels = {k: v for k, v in sweep.labels.items() if k != key}
+                sweep = dataclasses.replace(sweep, axes=axes, labels=labels)
+            else:
+                covering = next((a for f in key.split(",")
+                                 for a in [_covering_axis(f)] if a), None)
+                if covering:
+                    raise ValueError(
+                        f"field {key!r} is controlled by sweep axis "
+                        f"{covering!r}; override the axis instead, e.g. "
+                        f"--set '{covering}=[...]'")
+                scenario = scenario.replace(**{key: value})
+        return dataclasses.replace(self, sweep=sweep, scenario=scenario)
+
     def to_dict(self) -> dict:
         return {
             "name": self.name,

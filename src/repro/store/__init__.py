@@ -1,0 +1,36 @@
+"""Queryable result store + declarative scenario suites.
+
+The ops layer over :mod:`repro.experiments`: every run lands as an
+immutable, content-addressed :class:`RunRecord` in the on-disk
+:class:`ResultStore` (provenance, engine fingerprints, per-cell results),
+suite files collect :class:`~repro.experiments.spec.ExperimentSpec`s with
+expected-claim asserts (:class:`SuiteSpec` / :class:`ClaimSpec`), and the
+``repro-store`` CLI (``python -m repro.store``) lists / shows / diffs /
+garbage-collects records and gates suite runs against committed baselines.
+
+The suite *runner* lives with the experiment runner:
+:func:`repro.experiments.runner.run_suite`.
+"""
+
+from .record import (STORE_SCHEMA_VERSION, RunRecord, canonical_json,
+                     content_hash)
+from .store import (Diff, ResultStore, default_store_dir, diff_records,
+                    gc_cache, is_timing_key)
+from .suite import ClaimSpec, SuiteItem, SuiteSpec, evaluate_claims
+
+__all__ = [
+    "STORE_SCHEMA_VERSION",
+    "RunRecord",
+    "canonical_json",
+    "content_hash",
+    "Diff",
+    "ResultStore",
+    "default_store_dir",
+    "diff_records",
+    "gc_cache",
+    "is_timing_key",
+    "ClaimSpec",
+    "SuiteItem",
+    "SuiteSpec",
+    "evaluate_claims",
+]

@@ -1,0 +1,7 @@
+"""``python -m repro.store`` -> the ``repro-store`` CLI."""
+
+import sys
+
+from .cli import main
+
+sys.exit(main())
