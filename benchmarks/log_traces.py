@@ -99,4 +99,9 @@ def run(quick: bool = True) -> list[dict]:
 
 
 if __name__ == "__main__":
-    run(quick=False)
+    import os
+    import sys
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    from benchmarks.run import record_benchmark
+    record_benchmark("log_traces", {"rows": run(quick=False)}, quick=False)

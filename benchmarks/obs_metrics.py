@@ -1,0 +1,88 @@
+"""Observability benchmark: waste-attribution buckets + trace counters.
+
+Runs one fixed prediction cell through the scalar engine with a
+``RecordingSink``, attributes every simulated second to a paper term
+(``repro.obs.attribution``), and replays two of the jobs as a contended
+fleet to exercise the ``wait`` bucket and the Perfetto exporter.  The
+payload's bucket values and event counters are deterministic — the CI
+suite pins them exactly (``suites/quick.yaml``) and the baseline gate
+diffs them bit-for-bit; ``wall_s`` rides in the banded timing cells.
+"""
+
+from __future__ import annotations
+
+import time
+
+
+def run(quick: bool = True) -> dict:
+    import numpy as np
+
+    from repro.core.simulator import simulate
+    from repro.experiments import ScenarioSpec, StrategySpec
+    from repro.fleet.sim import FleetJobInput, simulate_fleet
+    from repro.obs import (RecordingSink, attribute_fleet_job,
+                           attribute_result, fleet_to_perfetto)
+
+    t0 = time.perf_counter()
+    scenario = ScenarioSpec(n=2 ** 16, c=600.0, d=60.0, r=600.0, n_traces=2,
+                            time_base_years_total=2000.0, seed=5)
+    strat = StrategySpec("optimal_prediction").build(scenario)
+    traces = scenario.make_traces()
+    seeds = [scenario.seed + 7919 * i for i in range(len(traces))]
+
+    # -- single run: tracing on, buckets must close exactly -----------------
+    sink = RecordingSink()
+    res = simulate(traces[0], scenario.platform, scenario.time_base,
+                   strat.period, cp=scenario.cp, trust=strat.trust,
+                   rng=np.random.default_rng(seeds[0]), sink=sink)
+    att = attribute_result(res)
+    assert att.total() == res.makespan, "bucket closure broke"
+    counts = sink.counts()
+    single = {name: v for name, v in att.buckets().items()}
+    single.update(
+        makespan=res.makespan,
+        n_proactive_ckpts=res.n_proactive_ckpts,
+        n_rollbacks=res.n_rollbacks,
+        n_events=len(sink),
+        n_fault_events=counts.get("fault", 0),
+        n_trust_events=counts.get("trust", 0),
+        sum_exact=int(att.total() == res.makespan),
+    )
+
+    # -- contended fleet: wait bucket + Perfetto timeline -------------------
+    sinks = [RecordingSink() for _ in traces]
+    fleet = simulate_fleet(
+        [FleetJobInput(trace=tr, platform=scenario.platform,
+                       time_base=scenario.time_base, period=strat.period,
+                       cp=scenario.cp, trust=strat.trust,
+                       rng=np.random.default_rng(seeds[i]),
+                       name=f"job{i}", sink=sinks[i])
+         for i, tr in enumerate(traces)],
+        storage_streams=1, repair_slots=1)
+    fatts = [attribute_fleet_job(j) for j in fleet.jobs]
+    assert all(a.total() == j.sim.makespan
+               for a, j in zip(fatts, fleet.jobs)), "fleet closure broke"
+    trace_json = fleet_to_perfetto(
+        [(j.name, s.events) for j, s in zip(fleet.jobs, sinks)])
+    fleet_out = {
+        "n_jobs": len(fleet.jobs),
+        "wait_total": sum(a.wait for a in fatts),
+        "makespan": fleet.makespan,
+        "n_trace_events": len(trace_json["traceEvents"]),
+        "sum_exact": int(all(a.total() == j.sim.makespan
+                             for a, j in zip(fatts, fleet.jobs))),
+    }
+
+    print(f"obs_metrics: buckets closed on 1 run + {len(fleet.jobs)} fleet "
+          f"jobs; {len(sink)} events traced")
+    return {"single": single, "fleet": fleet_out,
+            "wall_s": time.perf_counter() - t0}
+
+
+if __name__ == "__main__":
+    import os
+    import sys
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    from benchmarks.run import record_benchmark
+    record_benchmark("obs_metrics", run(quick=False), quick=False)

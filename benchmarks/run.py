@@ -92,8 +92,9 @@ def report_roofline(path: str = "roofline_results.json") -> None:
 def _import_benchmarks():
     """Import every benchmark module so experiments register themselves."""
     from . import (beyond, engine_perf, exact_sweep, exec_times, fleet_sweep,
-                   log_traces, multilevel, predictor_sweep, recall_precision,
-                   roofline, table2, waste_vs_n, window_sweep)
+                   log_traces, multilevel, obs_metrics, predictor_sweep,
+                   recall_precision, roofline, table2, waste_vs_n,
+                   window_sweep)
     del roofline  # registers the spec-driven accelerator sweep only
     return {
         "engine_perf": engine_perf.bench,
@@ -108,6 +109,7 @@ def _import_benchmarks():
         "predictor_sweep": predictor_sweep.run,
         "exact_sweep": exact_sweep.run,
         "fleet_sweep": fleet_sweep.run,
+        "obs_metrics": obs_metrics.run,
     }
 
 

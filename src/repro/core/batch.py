@@ -176,6 +176,12 @@ class BatchResult:
     time_prockpt: np.ndarray
     time_down: np.ndarray
     time_lost: np.ndarray
+    # Waste-attribution split of time_down + diagnostics (repro.obs);
+    # mirror the SimResult fields of the same names.
+    time_downtime: np.ndarray | None = None
+    time_recovery: np.ndarray | None = None
+    n_proactive_ckpts: np.ndarray | None = None
+    n_rollbacks: np.ndarray | None = None
     n_replans: np.ndarray | None = None
     final_period: np.ndarray | None = None
     final_threshold: np.ndarray | None = None
@@ -206,6 +212,14 @@ class BatchResult:
             time_down=float(self.time_down[ci, ti]),
             time_lost=float(self.time_lost[ci, ti]),
         )
+        if self.time_downtime is not None:
+            res.time_downtime = float(self.time_downtime[ci, ti])
+        if self.time_recovery is not None:
+            res.time_recovery = float(self.time_recovery[ci, ti])
+        if self.n_proactive_ckpts is not None:
+            res.n_proactive_ckpts = int(self.n_proactive_ckpts[ci, ti])
+        if self.n_rollbacks is not None:
+            res.n_rollbacks = int(self.n_rollbacks[ci, ti])
         if self.n_replans is not None:
             res.n_replans = int(self.n_replans[ci, ti])
         if self.final_period is not None:
@@ -287,6 +301,11 @@ class _LaneState:
         self.time_prockpt = np.zeros(L, f8)
         self.time_down = np.zeros(L, f8)
         self.time_lost = np.zeros(L, f8)
+        # Waste-attribution split of time_down + diagnostics (repro.obs).
+        self.time_downtime = np.zeros(L, f8)
+        self.time_recovery = np.zeros(L, f8)
+        self.n_proactive_ckpts = np.zeros(L, i8)
+        self.n_rollbacks = np.zeros(L, i8)
 
     def push_deferred(self, lanes: np.ndarray, dates: np.ndarray) -> None:
         """Insert a deferred fault (date, next seq) for each lane in ``lanes``."""
@@ -337,6 +356,7 @@ def _complete_phases(st: _LaneState, lanes: np.ndarray, periods: np.ndarray,
     pk = lanes[ph == _PROCKPT]
     if pk.size:
         st.time_prockpt[pk] += cp
+        st.n_proactive_ckpts[pk] += 1
         st.saved[pk] = st.done[pk]
         # Period continues (paper §4.1): offsets measured from this save.
         st.period_start[pk] = st.now[pk]
@@ -349,12 +369,14 @@ def _complete_phases(st: _LaneState, lanes: np.ndarray, periods: np.ndarray,
     dn = lanes[ph == _DOWN]
     if dn.size:
         st.time_down[dn] += p.d
+        st.time_downtime[dn] += p.d
         st.phase[dn] = _RECOVER
         st.phase_end[dn] = st.now[dn] + p.r
 
     rc = lanes[ph == _RECOVER]
     if rc.size:
         st.time_down[rc] += p.r
+        st.time_recovery[rc] += p.r
         _new_period(st, rc, periods, p, time_base)
 
 
@@ -384,7 +406,12 @@ def _apply_faults(st: _LaneState, lanes: np.ndarray, p: Platform,
     lost = lost + np.where(ckpt_like, np.maximum(0.0, elapsed), 0.0)
     st.time_down[lanes] += np.where(in_phase & ~ckpt_like,
                                     np.maximum(0.0, elapsed), 0.0)
+    st.time_downtime[lanes] += np.where(in_phase & (ph == _DOWN),
+                                        np.maximum(0.0, elapsed), 0.0)
+    st.time_recovery[lanes] += np.where(in_phase & (ph == _RECOVER),
+                                        np.maximum(0.0, elapsed), 0.0)
     st.time_lost[lanes] += lost
+    st.n_rollbacks[lanes] += lost > 0.0
     st.done[lanes] = st.saved[lanes]
     st.phase[lanes] = _DOWN
     st.phase_end[lanes] = t + p.d
@@ -1004,6 +1031,10 @@ def simulate_batch(
             time_prockpt=out["time_prockpt"].reshape(shape),
             time_down=out["time_down"].reshape(shape),
             time_lost=out["time_lost"].reshape(shape),
+            time_downtime=out["time_downtime"].reshape(shape),
+            time_recovery=out["time_recovery"].reshape(shape),
+            n_proactive_ckpts=out["n_proactive_ckpts"].reshape(shape),
+            n_rollbacks=out["n_rollbacks"].reshape(shape),
             n_replans=out["n_replans"].reshape(shape),
             final_period=out["final_period"].reshape(shape),
             final_threshold=out["final_threshold"].reshape(shape),
@@ -1031,6 +1062,10 @@ def simulate_batch(
         time_prockpt=st.time_prockpt.reshape(shape),
         time_down=st.time_down.reshape(shape),
         time_lost=st.time_lost.reshape(shape),
+        time_downtime=st.time_downtime.reshape(shape),
+        time_recovery=st.time_recovery.reshape(shape),
+        n_proactive_ckpts=st.n_proactive_ckpts.reshape(shape),
+        n_rollbacks=st.n_rollbacks.reshape(shape),
         n_replans=st.n_replans.reshape(shape),
         final_period=st.final_period.reshape(shape),
         final_threshold=st.final_threshold.reshape(shape),

@@ -50,6 +50,7 @@ amortize it.
 from __future__ import annotations
 
 import os
+import time
 from typing import Any, Sequence
 
 import numpy as np
@@ -130,9 +131,11 @@ def run_lanes_jax(bank, platform: Platform, time_base: float,
 
     from repro.kernels.event_step import (F_DONE, F_NOW, F_PERIOD, F_PHEND,
                                           F_PSTART, F_SAVED, F_TARGET,
-                                          F_TCKPT, F_TDOWN, F_TPROC, F_WINEND,
+                                          F_TCKPT, F_TDOWN, F_TDOWNT,
+                                          F_TPROC, F_TRECOV, F_WINEND,
                                           F_WINREM, F_WPP, F_WREM, F_WWP,
-                                          I_FIN, I_NCKPT, I_PHASE, event_step)
+                                          I_FIN, I_NCKPT, I_NPROC, I_PHASE,
+                                          event_step)
 
     if not jax.config.jax_enable_x64:
         raise RuntimeError(
@@ -420,8 +423,15 @@ def run_lanes_jax(bank, platform: Platform, time_base: float,
         lost = lost + jnp.where(ckpt_like, jnp.maximum(0.0, elapsed), 0.0)
         time_down = s["time_down"] + jnp.where(
             arr_f & in_phase & ~ckpt_like, jnp.maximum(0.0, elapsed), 0.0)
+        time_downtime = s["time_downtime"] + jnp.where(
+            arr_f & in_phase & (phase == _DOWN),
+            jnp.maximum(0.0, elapsed), 0.0)
+        time_recovery = s["time_recovery"] + jnp.where(
+            arr_f & in_phase & (phase == _RECOVER),
+            jnp.maximum(0.0, elapsed), 0.0)
         time_lost = s["time_lost"] + jnp.where(arr_f, lost, 0.0)
         n_faults_hit = s["n_faults_hit"] + arr_f
+        n_rollbacks = s["n_rollbacks"] + (arr_f & (lost > 0.0))
         done = jnp.where(arr_f, s["saved"], s["done"])
         phase = jnp.where(arr_f, _DOWN, phase)
         phase_end = jnp.where(arr_f, target + d, phase_end)
@@ -462,8 +472,10 @@ def run_lanes_jax(bank, platform: Platform, time_base: float,
 
         return dict(s, now=now, done=done, phase=phase, phase_end=phase_end,
                     win_end=win_end, win_rem=win_rem, pc=pc, target=target,
-                    cur=cur, time_down=time_down, time_lost=time_lost,
-                    n_faults_hit=n_faults_hit, n_trusted=n_trusted,
+                    cur=cur, time_down=time_down, time_downtime=time_downtime,
+                    time_recovery=time_recovery, time_lost=time_lost,
+                    n_faults_hit=n_faults_hit, n_rollbacks=n_rollbacks,
+                    n_trusted=n_trusted,
                     n_trusted_true=n_trusted_true, n_ignored=n_ignored,
                     def_time=def_time, def_seq=def_seq, next_seq=next_seq,
                     overflow=overflow)
@@ -474,9 +486,9 @@ def run_lanes_jax(bank, platform: Platform, time_base: float,
                         s["phase_end"], s["wpp"], s["w_rem"], s["win_end"],
                         s["win_rem"], s["target"], s["time_ckpt"],
                         s["time_prockpt"], s["time_down"], s["period"],
-                        kc["wwp"]])
+                        kc["wwp"], s["time_downtime"], s["time_recovery"]])
         is_ = jnp.stack([s["phase"], s["finished"].astype(jnp.int32),
-                         s["n_periodic_ckpts"]])
+                         s["n_periodic_ckpts"], s["n_prockpts"]])
         for _ in range(_ADV_PASSES):
             fs, is_ = event_step(fs, is_, c=c, cp=cp, d=d, r=r,
                                  time_base=time_base, impl=impl)
@@ -485,8 +497,9 @@ def run_lanes_jax(bank, platform: Platform, time_base: float,
                     wpp=fs[F_WPP], w_rem=fs[F_WREM], win_end=fs[F_WINEND],
                     win_rem=fs[F_WINREM], time_ckpt=fs[F_TCKPT],
                     time_prockpt=fs[F_TPROC], time_down=fs[F_TDOWN],
+                    time_downtime=fs[F_TDOWNT], time_recovery=fs[F_TRECOV],
                     phase=is_[I_PHASE], finished=is_[I_FIN] != 0,
-                    n_periodic_ckpts=is_[I_NCKPT])
+                    n_periodic_ckpts=is_[I_NCKPT], n_prockpts=is_[I_NPROC])
 
     def _push_all(s, push, date):
         """Full-array deferred-fault insert (the pop-site pushes)."""
@@ -571,9 +584,12 @@ def run_lanes_jax(bank, platform: Platform, time_base: float,
             "n_predictions": np.zeros(n, i4), "n_trusted": np.zeros(n, i4),
             "n_trusted_true": np.zeros(n, i4), "n_ignored": np.zeros(n, i4),
             "n_periodic_ckpts": np.zeros(n, i4),
+            "n_prockpts": np.zeros(n, i4), "n_rollbacks": np.zeros(n, i4),
             "n_replans": np.zeros(n, i4),
             "time_ckpt": np.zeros(n, f8), "time_prockpt": np.zeros(n, f8),
             "time_down": np.zeros(n, f8), "time_lost": np.zeros(n, f8),
+            "time_downtime": np.zeros(n, f8),
+            "time_recovery": np.zeros(n, f8),
         }
         state["finished"][n_real:] = True
         kc = {
@@ -608,12 +624,17 @@ def run_lanes_jax(bank, platform: Platform, time_base: float,
     run_jit = None
     out_keys = ("now", "n_faults", "n_faults_hit", "n_predictions",
                 "n_trusted", "n_trusted_true", "n_ignored",
-                "n_periodic_ckpts", "time_ckpt", "time_prockpt", "time_down",
-                "time_lost", "n_replans", "period", "tparam")
+                "n_periodic_ckpts", "n_prockpts", "n_rollbacks",
+                "time_ckpt", "time_prockpt", "time_down",
+                "time_lost", "time_downtime", "time_recovery",
+                "n_replans", "period", "tparam")
     ad_keys = ("ad_ntp", "ad_nfp", "ad_nuf", "ad_gs", "ad_gn")
     acc = {k: np.zeros(L, np.float64) for k in out_keys}
     acc.update({k: np.zeros(L, np.float64) for k in ad_keys})
 
+    from repro.obs.metrics import get_registry
+    reg = get_registry()
+    wall0 = time.perf_counter()
     for lo in range(0, L, CL):
         n_real = min(CL, L - lo)
         sl = slice(lo, lo + n_real)
@@ -621,6 +642,7 @@ def run_lanes_jax(bank, platform: Platform, time_base: float,
         if has_adaptive:
             cfgs = list(lane_adaptive[lo:lo + n_real])
             holder["cfgs"] = cfgs + [None] * (CL - n_real)
+        first_chunk = run_jit is None
         if run_jit is None:
             if use_shard:
                 run_jit = jax.jit(shard_map(
@@ -629,8 +651,14 @@ def run_lanes_jax(bank, platform: Platform, time_base: float,
                     donate_argnums=0)
             else:
                 run_jit = jax.jit(run, donate_argnums=0)
+        t0 = time.perf_counter()
         final = jax.device_get(run_jit(state, kc))
+        # The first chunk pays the XLA compilation; later chunks reuse it.
+        reg.add_time("jax.compile_s" if first_chunk else "jax.run_s",
+                     time.perf_counter() - t0)
+        reg.count("jax.chunks")
         if final["overflow"].any():
+            reg.count("engine.deferred_overflows")
             raise RuntimeError(
                 f"deferred-fault capacity ({K} slots) exceeded in the jax "
                 f"backend; rerun with backend='numpy'")
@@ -639,6 +667,9 @@ def run_lanes_jax(bank, platform: Platform, time_base: float,
         if has_adaptive:
             for key in ad_keys:
                 acc[key][sl] = final[key][:n_real]
+    wall = time.perf_counter() - wall0
+    if wall > 0.0:
+        reg.gauge("jax.lanes_per_s", L / wall)
 
     # -- final-plan / estimator diagnostics (mirrors the NumPy engine) ------
     er = np.full(L, -1.0)
@@ -662,10 +693,14 @@ def run_lanes_jax(bank, platform: Platform, time_base: float,
         "n_trusted_true": acc["n_trusted_true"].astype(np.int64),
         "n_ignored": acc["n_ignored"].astype(np.int64),
         "n_periodic_ckpts": acc["n_periodic_ckpts"].astype(np.int64),
+        "n_proactive_ckpts": acc["n_prockpts"].astype(np.int64),
+        "n_rollbacks": acc["n_rollbacks"].astype(np.int64),
         "time_ckpt": acc["time_ckpt"],
         "time_prockpt": acc["time_prockpt"],
         "time_down": acc["time_down"],
         "time_lost": acc["time_lost"],
+        "time_downtime": acc["time_downtime"],
+        "time_recovery": acc["time_recovery"],
         "n_replans": acc["n_replans"].astype(np.int64),
         "final_period": acc["period"],
         "final_threshold": np.where(ad_act, acc["tparam"], -1.0),

@@ -137,6 +137,16 @@ class SimResult:
     time_prockpt: float = 0.0      # proactive checkpointing time
     time_down: float = 0.0         # downtime + recovery
     time_lost: float = 0.0         # destroyed (re-executed) work
+    # Waste-attribution split of ``time_down`` (repro.obs): independent
+    # accumulators for the downtime (D, incl. interrupted downtimes) and
+    # recovery (R, incl. interrupted recoveries) portions.  ``time_down``
+    # stays the authoritative merged accrual; the split is accrued from the
+    # same per-event terms, so time_downtime + time_recovery == time_down
+    # up to summation order (not bitwise).
+    time_downtime: float = 0.0     # downtime-only portion of time_down
+    time_recovery: float = 0.0     # recovery-only portion of time_down
+    n_proactive_ckpts: int = 0     # completed proactive checkpoints
+    n_rollbacks: int = 0           # faults that discarded positive progress
     # Adaptive re-planning diagnostics (repro.predictors.estimator); the
     # sentinels keep non-adaptive runs comparable across engines.
     n_replans: int = 0
@@ -159,7 +169,7 @@ class _Machine:
     """Phase machine executing the periodic schedule between events."""
 
     def __init__(self, platform: Platform, cp: float, period,
-                 time_base: float, res: SimResult) -> None:
+                 time_base: float, res: SimResult, *, sink=None) -> None:
         # ``period`` may be a float or a callable t -> T (dynamic policies,
         # e.g. hazard-aware periods for Weibull faults; see
         # benchmarks/beyond.py).  Evaluated at each period start.
@@ -172,6 +182,9 @@ class _Machine:
         self.work_per_period = self.period_fn(0.0) - platform.c
         self.time_base = time_base
         self.res = res
+        # Optional repro.obs.TraceSink; None = tracing off (zero overhead
+        # beyond one ``is not None`` test per hook point).
+        self.sink = sink
 
         self.now = 0.0
         self.done = 0.0          # useful work completed (volatile + saved)
@@ -230,10 +243,14 @@ class _Machine:
     def _start_ckpt(self) -> None:
         self.phase = _CKPT
         self.phase_end = self.now + self.p.c
+        if self.sink is not None:
+            self.sink.emit(self.now, "ckpt_start")
 
     def _start_prockpt(self) -> None:
         self.phase = _PROCKPT
         self.phase_end = self.now + self.cp
+        if self.sink is not None:
+            self.sink.emit(self.now, "prockpt_start")
 
     def _close_window(self) -> None:
         self.win_end = -math.inf
@@ -244,6 +261,8 @@ class _Machine:
             self.res.n_periodic_ckpts += 1
             self.res.time_ckpt += self.p.c
             self.saved = self.done
+            if self.sink is not None:
+                self.sink.emit(self.now, "ckpt_end", dur=self.p.c)
             if self.saved >= self.time_base - 1e-9:
                 self.finished = True
                 return
@@ -252,7 +271,10 @@ class _Machine:
             self._new_period()
         elif self.phase == _PROCKPT:
             self.res.time_prockpt += self.cp
+            self.res.n_proactive_ckpts += 1
             self.saved = self.done
+            if self.sink is not None:
+                self.sink.emit(self.now, "prockpt_end", dur=self.cp)
             # Period continues (paper §4.1); offsets for later predictions are
             # measured from the last save, which is now.
             self.period_start = self.now
@@ -263,10 +285,16 @@ class _Machine:
                 self.win_rem = self.win_wp
         elif self.phase == _DOWN:
             self.res.time_down += self.p.d
+            self.res.time_downtime += self.p.d
             self.phase = _RECOVER
             self.phase_end = self.now + self.p.r
+            if self.sink is not None:
+                self.sink.emit(self.now, "recover_start", dur=self.p.r)
         elif self.phase == _RECOVER:
             self.res.time_down += self.p.r
+            self.res.time_recovery += self.p.r
+            if self.sink is not None:
+                self.sink.emit(self.now, "recover_end", dur=self.p.r)
             self._new_period()
 
     def _new_period(self) -> None:
@@ -301,9 +329,21 @@ class _Machine:
                 - (self.phase_end - self.now)
             if self.phase in (_CKPT, _PROCKPT):
                 lost += max(0.0, elapsed)
+            elif self.phase == _DOWN:
+                self.res.time_down += max(0.0, elapsed)
+                self.res.time_downtime += max(0.0, elapsed)
             else:
                 self.res.time_down += max(0.0, elapsed)
+                self.res.time_recovery += max(0.0, elapsed)
         self.res.time_lost += lost
+        if lost > 0.0:
+            self.res.n_rollbacks += 1
+        if self.sink is not None:
+            self.sink.emit(t, "fault", phase=self.phase)
+            if lost > 0.0:
+                self.sink.emit(t, "rollback", lost=lost, saved=self.saved)
+                self.sink.emit(t, "re_exec", dur=lost)
+            self.sink.emit(t, "down_start", dur=self.p.d)
         self.done = self.saved
         # Restart (or start) downtime; a fault during DOWN/RECOVER restarts D.
         self.phase = _DOWN
@@ -338,6 +378,7 @@ def simulate(
     start: float = 0.0,
     rng: np.random.Generator | None = None,
     adaptive=None,
+    sink=None,
 ) -> SimResult:
     """Simulate one execution; returns the :class:`SimResult`.
 
@@ -367,6 +408,13 @@ def simulate(
         constant initial period and a Threshold/Never trust policy (the
         plan *is* the threshold); the re-planned period takes effect at
         the next period start.
+      sink: an optional :class:`repro.obs.TraceSink` receiving structured
+        records (checkpoint start/end, proactive checkpoints, faults,
+        rollbacks, re-execution spans, prediction arrival + trust
+        decision, adaptive replans).  ``None`` (the default) disables
+        tracing at zero overhead; tracing never touches the RNG or any
+        float in the simulation, so results are bit-for-bit identical
+        with tracing on or off.
     """
     cp = platform.c if cp is None else cp
     trust = trust or NeverTrust()
@@ -412,7 +460,7 @@ def simulate(
         ad_planned_mu = platform.mu
 
     res = SimResult(makespan=0.0, time_base=time_base)
-    m = _Machine(platform, cp, period, time_base, res)
+    m = _Machine(platform, cp, period, time_base, res, sink=sink)
 
     def _ad_replan() -> None:
         nonlocal ad_thr, ad_planned_r, ad_planned_p, ad_period, ad_planned_mu
@@ -429,6 +477,8 @@ def simulate(
             ad_planned_mu = mu_hat
         m.period_fn = (lambda t, _T=ad_period: _T)
         res.n_replans += 1
+        if sink is not None:
+            sink.emit(m.now, "replan", period=ad_period, threshold=ad_thr)
 
     # Shift the trace so the job starts at time 0.
     sel = trace.times >= start
@@ -504,6 +554,8 @@ def simulate(
                 ad_nfp += 1
             _ad_replan()
         w_i = inexact_window if w < 0.0 else w
+        if sink is not None:
+            sink.emit(t, "prediction", true=is_true, window=w_i)
         fault_date = t
         if is_true:
             # Counted at announcement — consistent with the _EV_FAULT
@@ -522,23 +574,35 @@ def simulate(
                 break
             if m.phase == _WORK:
                 offset = t - m.period_start
-                if (offset >= ad_thr) if adaptive is not None \
-                        else trust.trust(offset, rng):
+                trusted = (offset >= ad_thr) if adaptive is not None \
+                    else trust.trust(offset, rng)
+                if trusted:
                     acted = m.try_proactive(t)
                     if acted:
                         res.n_trusted += 1
                         if is_true:
                             res.n_trusted_true += 1
+                        if sink is not None:
+                            sink.emit(m.now, "prockpt_start")
                         if within and w_i > 0.0:
                             # Arm the window: once the initial proactive
                             # checkpoint completes at t, keep checkpointing
                             # every window_period seconds until t + I.
                             m.win_end = t + w_i
                             m.win_wp = window_period - cp
+                if sink is not None:
+                    sink.emit(t, "trust", trusted=trusted, acted=acted,
+                              offset=offset)
             else:
                 res.n_ignored_by_necessity += 1
+                if sink is not None:
+                    sink.emit(t, "trust", trusted=False, acted=False,
+                              ignored=True)
         else:
             res.n_ignored_by_necessity += 1
+            if sink is not None:
+                sink.emit(t, "trust", trusted=False, acted=False,
+                          ignored=True)
 
         if is_true:
             # The actual fault still strikes (at fault_date), whether or not

@@ -820,11 +820,14 @@ def run_experiment(
     ``batched_traces`` select the simulation engine and the bank sampling
     path (see :func:`evaluate_strategies` / :func:`trace_bank`).
     """
+    from repro.obs.metrics import get_registry
+
     if persist is None:
         persist = _env_flag(_PERSIST_ENV)
     if batched_traces is None:
         batched_traces = _env_flag(_BATCHED_TRACES_ENV)
     engine = _resolve_engine(engine)
+    reg = get_registry()
     rows: list[dict[str, Any]] = []
     for axis_cols, cell in exp.cells():
         overrides: dict[str, Any] = {}
@@ -851,9 +854,11 @@ def run_experiment(
         resolved: dict[int, Strategy | BestPeriodSearch] = {
             i: s for i, (_, s) in enumerate(built)}
         if traces and plain:
-            batched = evaluate_strategies(
-                traces, platform, time_base, cp, [s for _, s in plain],
-                seed=cell.seed, cache=cache, workers=workers, engine=engine)
+            with reg.timer("runner.eval_s"):
+                batched = evaluate_strategies(
+                    traces, platform, time_base, cp, [s for _, s in plain],
+                    seed=cell.seed, cache=cache, workers=workers,
+                    engine=engine)
             for (i, _), m in zip(plain, batched):
                 means[i] = m
         for i, (_, s) in enumerate(built):
@@ -864,11 +869,15 @@ def run_experiment(
                     # stays distinct from the plain base strategy.
                     resolved[i] = dataclasses.replace(s.base, name=s.name)
                     continue
-                refined, m = best_period_search(
-                    s, traces, platform, time_base, cp, seed=cell.seed,
-                    cache=cache, workers=workers, engine=engine)
+                with reg.timer("runner.eval_s"):
+                    refined, m = best_period_search(
+                        s, traces, platform, time_base, cp, seed=cell.seed,
+                        cache=cache, workers=workers, engine=engine)
                 resolved[i], means[i] = refined, m
         cache.flush()
+        reg.count("runner.cache_hits", cache.hits)
+        reg.count("runner.cache_misses", cache.misses)
+        reg.count("runner.cells")
 
         for i, (sspec, _) in enumerate(built):
             strat = resolved[i]
@@ -991,6 +1000,28 @@ def _suite_item_identity(item: Any, engine: str) -> tuple[dict, Any]:
     return identity, exp
 
 
+def _metrics_outputs(reg: Any) -> tuple[dict, dict]:
+    """Split a registry snapshot into (payload counters, timing extras).
+
+    Deterministic counters go into the record payload (exact-diffed);
+    anything resume- or environment-dependent — the cache hit/miss split,
+    chunk counts, and all timers/gauges — rides in ``timings``, which
+    diffs exclude as provenance.
+    """
+    cnt = dict(reg.counters)
+    extras = dict(reg.flat_timings())
+    hits = cnt.pop("runner.cache_hits", 0)
+    misses = cnt.pop("runner.cache_misses", 0)
+    if hits or misses:
+        cnt["runner.cache_lookups"] = hits + misses
+        extras["runner.cache_hits"] = hits
+        extras["runner.cache_misses"] = misses
+    chunks = cnt.pop("jax.chunks", 0)    # REPRO_JAX_CHUNK-dependent
+    if chunks:
+        extras["jax.chunks"] = chunks
+    return cnt, extras
+
+
 def _run_suite_item(item: Any, store: Any, *, resume: bool,
                     engine: str | None, workers: int | None,
                     verbose: bool) -> SuiteItemResult:
@@ -1011,6 +1042,10 @@ def _run_suite_item(item: Any, store: Any, *, resume: bool,
     if rec is not None:
         res.record, res.cached = rec, True
     else:
+        from repro.obs.metrics import MetricsRegistry, set_registry
+
+        reg = MetricsRegistry()
+        prev_reg = set_registry(reg)
         t0 = time.time()
         try:
             if item.kind == "benchmark":
@@ -1031,23 +1066,37 @@ def _run_suite_item(item: Any, store: Any, *, resume: bool,
                             os.environ.pop(_ENGINE_ENV, None)
                         else:
                             os.environ[_ENGINE_ENV] = old
+                counters, extras = _metrics_outputs(reg)
+                if isinstance(payload, dict) or not payload:
+                    payload = dict(payload or {})
+                else:    # row-list benchmarks (log_traces / exec_times)
+                    payload = {"rows": payload}
+                if counters:
+                    payload["metrics"] = counters
                 rec = RunRecord.create(item.kind, item.name, identity,
-                                       payload=payload or {},
-                                       timings={"wall_s": time.time() - t0})
+                                       payload=payload,
+                                       timings={"wall_s": time.time() - t0,
+                                                **extras})
             else:
                 table = run_experiment(
                     exp, n_traces=item.n_traces, seed=item.seed,
                     workers=workers, verbose=verbose, engine=eng,
                     batched_traces=item.batched_traces or None)
+                counters, extras = _metrics_outputs(reg)
                 rec = RunRecord.create(item.kind, item.name, identity,
                                        rows=table.rows,
-                                       timings={"wall_s": time.time() - t0})
+                                       payload={"metrics": counters}
+                                       if counters else {},
+                                       timings={"wall_s": time.time() - t0,
+                                                **extras})
         except (AssertionError, KeyError, ValueError, TypeError) as e:
             # A failed run is reported, never stored: the identity must
             # only ever resolve to a completed result.
             res.error = f"{type(e).__name__}: {e}"
             res.wall_s = time.time() - t0
             return res
+        finally:
+            set_registry(prev_reg)
         res.record, res.wall_s = rec, time.time() - t0
 
     # Claims are (re-)evaluated on every run, including store-resumed ones,

@@ -48,6 +48,7 @@ from repro.core.simulator import (_CKPT, _DOWN, _EV_FAULT, _EV_PREDICTION,
 from repro.core.simulator import _Machine
 from repro.core.traces import FAULT_PRED, FAULT_UNPRED, EventTrace
 from repro.core.waste import Platform
+from repro.obs.metrics import get_registry
 
 __all__ = ["FleetJobInput", "FleetJobResult", "FleetSimResult",
            "simulate_fleet"]
@@ -71,6 +72,7 @@ class FleetJobInput:
     inexact_window: float = 0.0
     rng: np.random.Generator | None = None
     name: str = ""
+    sink: object | None = None        # repro.obs TraceSink (None = off)
 
 
 @dataclasses.dataclass
@@ -116,8 +118,9 @@ class _JobRun:
         self.coord = coord
         self.name = inp.name or f"job{idx}"
         self.res = SimResult(makespan=0.0, time_base=inp.time_base)
+        self.sink = inp.sink
         self.m = _Machine(inp.platform, inp.cp, inp.period, inp.time_base,
-                          self.res)
+                          self.res, sink=inp.sink)
         self.cp = inp.cp
         self.period_arg = inp.period
         self.trust = inp.trust or NeverTrust()
@@ -220,6 +223,8 @@ class _JobRun:
                 res.n_faults += 1
                 if w_i > 0.0:
                     fault_date = t + float(self.rng.uniform(0.0, w_i))
+            if self.sink is not None:
+                self.sink.emit(t, "prediction", true=is_true, window=w_i)
 
             ckpt_start = t - self.cp
             if ckpt_start >= m.now:
@@ -229,15 +234,25 @@ class _JobRun:
                 yield (_AT, ckpt_start)
                 if m.phase == _WORK:
                     offset = t - m.period_start
-                    if self.trust.trust(offset, self.rng):
-                        if self.coord.try_proactive(self, t):
-                            res.n_trusted += 1
-                            if is_true:
-                                res.n_trusted_true += 1
+                    trusted = self.trust.trust(offset, self.rng)
+                    acted = trusted and self.coord.try_proactive(self, t)
+                    if acted:
+                        res.n_trusted += 1
+                        if is_true:
+                            res.n_trusted_true += 1
+                    if self.sink is not None:
+                        self.sink.emit(t, "trust", trusted=trusted,
+                                       acted=acted, offset=offset)
                 else:
                     res.n_ignored_by_necessity += 1
+                    if self.sink is not None:
+                        self.sink.emit(t, "trust", trusted=False,
+                                       acted=False, ignored=True)
             else:
                 res.n_ignored_by_necessity += 1
+                if self.sink is not None:
+                    self.sink.emit(t, "trust", trusted=False, acted=False,
+                                   ignored=True)
 
             if is_true:
                 heapq.heappush(queue, (fault_date, self.seq, _EV_FAULT,
@@ -303,6 +318,9 @@ class _Coordinator:
         m = job.m
         m.phase = kind
         m.phase_end = scalar_end
+        if job.sink is not None:     # the fleet bypasses _start_ckpt
+            job.sink.emit(m.now, "ckpt_start" if kind == _CKPT
+                          else "prockpt_start")
         job.save = _OpenSave(kind, nominal, m.now)
         self.saving.append(job)
         self._progress(m.now)
@@ -360,6 +378,7 @@ class _Coordinator:
             self._set_stretch(t)
         was_waiting = job.waiting
         m.fault(t)
+        get_registry().count("fleet.faults")
         if self.repair_slots is None:
             return
         if job.has_slot:
@@ -375,6 +394,7 @@ class _Coordinator:
             job.wait_since = t
             self.repair_q.append(job)
             m.phase_end = math.inf
+            get_registry().count("fleet.repair_waits")
 
     def _release_slot(self, job: _JobRun, t: float) -> None:
         if self.repair_slots is None or not job.has_slot:

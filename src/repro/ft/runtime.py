@@ -24,6 +24,7 @@ import dataclasses
 import numpy as np
 
 from ..core.traces import FALSE_PRED, FAULT_PRED, FAULT_UNPRED, EventTrace
+from ..obs.metrics import get_registry
 
 __all__ = ["VirtualClock", "FaultInjector", "PredictorRuntime", "Prediction"]
 
@@ -61,6 +62,7 @@ class FaultInjector:
         """Earliest fault time in [t0, t1), or None."""
         i = bisect.bisect_left(self.fault_times, t0)
         if i < len(self.fault_times) and self.fault_times[i] < t1:
+            get_registry().count("ft.faults_injected")
             return float(self.fault_times[i])
         return None
 
@@ -85,6 +87,8 @@ class PredictorRuntime:
         a0, a1 = t0 + self.lead_time, t1 + self.lead_time
         i = bisect.bisect_left(self.pred_dates, a0)
         j = bisect.bisect_left(self.pred_dates, a1)
+        if j > i:
+            get_registry().count("ft.predictions", j - i)
         return [
             Prediction(float(d) - self.lead_time, float(d), bool(tr))
             for d, tr in zip(self.pred_dates[i:j], self.pred_true[i:j])

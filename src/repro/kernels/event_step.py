@@ -47,14 +47,16 @@ _WORK, _CKPT, _PROCKPT, _DOWN, _RECOVER = range(5)
 # Float64 state rows.
 F_FIELDS = ("now", "done", "saved", "period_start", "phase_end", "wpp",
             "w_rem", "win_end", "win_rem", "target", "time_ckpt",
-            "time_prockpt", "time_down", "period", "lane_wwp")
+            "time_prockpt", "time_down", "period", "lane_wwp",
+            "time_downtime", "time_recovery")
 (F_NOW, F_DONE, F_SAVED, F_PSTART, F_PHEND, F_WPP, F_WREM, F_WINEND,
- F_WINREM, F_TARGET, F_TCKPT, F_TPROC, F_TDOWN, F_PERIOD, F_WWP) = range(15)
+ F_WINREM, F_TARGET, F_TCKPT, F_TPROC, F_TDOWN, F_PERIOD, F_WWP,
+ F_TDOWNT, F_TRECOV) = range(17)
 N_F = len(F_FIELDS)
 
 # Int32 state rows.
-I_FIELDS = ("phase", "finished", "n_periodic_ckpts")
-I_PHASE, I_FIN, I_NCKPT = range(3)
+I_FIELDS = ("phase", "finished", "n_periodic_ckpts", "n_proactive_ckpts")
+I_PHASE, I_FIN, I_NCKPT, I_NPROC = range(4)
 N_I = len(I_FIELDS)
 
 LANE_BLOCK = 1024
@@ -121,6 +123,7 @@ def _advance_math(fs, is_, *, c: float, cp: float, d: float, r: float,
     win_rem = jnp.where(act, fs[F_WWP], win_rem)
 
     pk = complete & (ph0 == _PROCKPT)
+    n_prockpts = is_[I_NPROC] + pk
     time_prockpt = fs[F_TPROC] + jnp.where(pk, cp, 0.0)
     saved = jnp.where(pk, done, saved)
     period_start = jnp.where(pk, now, fs[F_PSTART])
@@ -131,10 +134,12 @@ def _advance_math(fs, is_, *, c: float, cp: float, d: float, r: float,
 
     dn = complete & (ph0 == _DOWN)
     time_down = fs[F_TDOWN] + jnp.where(dn, d, 0.0)
+    time_downtime = fs[F_TDOWNT] + jnp.where(dn, d, 0.0)
     phase = jnp.where(dn, _RECOVER, phase)
     phase_end = jnp.where(dn, now + r, phase_end)
     rc = complete & (ph0 == _RECOVER)
     time_down = time_down + jnp.where(rc, r, 0.0)
+    time_recovery = fs[F_TRECOV] + jnp.where(rc, r, 0.0)
 
     renew = (ck & ~fin) | rc
     phase = jnp.where(renew, _WORK, phase)
@@ -147,10 +152,12 @@ def _advance_math(fs, is_, *, c: float, cp: float, d: float, r: float,
 
     fs_out = jnp.stack([now, done, saved, period_start, phase_end, wpp,
                         w_rem, win_end, win_rem, target, time_ckpt,
-                        time_prockpt, time_down, fs[F_PERIOD], fs[F_WWP]])
+                        time_prockpt, time_down, fs[F_PERIOD], fs[F_WWP],
+                        time_downtime, time_recovery])
     is_out = jnp.stack([phase.astype(jnp.int32),
                         finished.astype(jnp.int32),
-                        n_ckpts.astype(jnp.int32)])
+                        n_ckpts.astype(jnp.int32),
+                        n_prockpts.astype(jnp.int32)])
     return fs_out, is_out
 
 

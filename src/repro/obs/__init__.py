@@ -1,0 +1,52 @@
+"""Observability layer: tracing, waste attribution, metrics, timelines.
+
+The paper's first-order analysis (arXiv:1302.3752) is a *decomposition* —
+waste is a sum of named terms (periodic checkpoints, proactive
+checkpoints on predictions, re-execution after unpredicted faults,
+downtime + recovery).  This package attributes every simulated second to
+one of those terms and exposes the decision points as structured events:
+
+  * :mod:`repro.obs.trace` — the zero-overhead-when-off ``TraceSink``
+    protocol the scalar engine (and the fleet engine) emit structured
+    events into; ``RecordingSink`` captures them, ``NullSink`` drops
+    them.  The numpy/jax lane engines are bit-for-bit equivalent to the
+    scalar engine, so a lane's trace is *reconstructed* by replaying the
+    scalar engine (:func:`repro.obs.trace.record_run`).
+  * :mod:`repro.obs.attribution` — ``WasteAttribution`` buckets
+    {work, ckpt, proactive_ckpt, re_exec, downtime, recovery, wait}
+    with ``sum(buckets) == makespan`` enforced bit-for-bit, plus the
+    analytic first-order expectations to reconcile against.
+  * :mod:`repro.obs.metrics` — a process-local ``MetricsRegistry``
+    (counters / gauges / timers) threaded through the experiment
+    runner, the jax engine's chunk driver, and the fleet simulator.
+  * :mod:`repro.obs.perfetto` — Chrome/Perfetto ``trace_event`` JSON
+    timelines of a run or a fleet (jobs as tracks, checkpoints as
+    slices, faults as instants).
+"""
+
+from .attribution import (BUCKETS, WasteAttribution, attribute_batch,
+                          attribute_fleet_job, attribute_result,
+                          expected_fractions)
+from .metrics import MetricsRegistry, get_registry, set_registry
+from .perfetto import events_to_trace_events, fleet_to_perfetto, write_trace
+from .trace import NullSink, RecordingSink, TraceEvent, TraceSink, record_run
+
+__all__ = [
+    "BUCKETS",
+    "WasteAttribution",
+    "attribute_result",
+    "attribute_batch",
+    "attribute_fleet_job",
+    "expected_fractions",
+    "MetricsRegistry",
+    "get_registry",
+    "set_registry",
+    "TraceEvent",
+    "TraceSink",
+    "NullSink",
+    "RecordingSink",
+    "record_run",
+    "events_to_trace_events",
+    "fleet_to_perfetto",
+    "write_trace",
+]

@@ -2,6 +2,7 @@
 
     repro-store list [--kind K] [--name N]
     repro-store show RECORD_ID
+    repro-store metrics RECORD_ID_OR_NAME
     repro-store diff A B [--timing-rel-tol 0.5]
     repro-store diff BASELINE.json            # bundle vs the store
     repro-store gc [--keep 5] [--max-mb 64] [--dry-run]
@@ -124,6 +125,34 @@ def _cmd_diff(args: argparse.Namespace) -> int:
     if n == 0:
         print("no divergence")
     return _EXIT_REGRESSION if n else _EXIT_OK
+
+
+def _cmd_metrics(args: argparse.Namespace) -> int:
+    """Tabulate a record's observability metrics: the deterministic
+    counters of ``payload["metrics"]`` plus the timing-banded timers and
+    gauges persisted under ``timings``."""
+    rec = _resolve_record(_store(args), args.record)
+    if rec is None:
+        print(f"error: no record {args.record!r}", file=sys.stderr)
+        return _EXIT_USAGE
+    sections = (
+        ("counters", rec.payload.get("metrics", {}) or {}),
+        ("timings", rec.timings or {}),
+    )
+    print(f"{rec.kind}/{rec.name} ({rec.record_id})")
+    empty = True
+    for title, values in sections:
+        if not values:
+            continue
+        empty = False
+        print(f"  {title}:")
+        for key in sorted(values):
+            v = values[key]
+            shown = f"{v:.6g}" if isinstance(v, float) else v
+            print(f"    {key:32s} {shown}")
+    if empty:
+        print("  (no metrics recorded)")
+    return _EXIT_OK
 
 
 def _cmd_gc(args: argparse.Namespace) -> int:
@@ -270,6 +299,11 @@ def main(argv: list[str] | None = None) -> int:
                    help="compare timing cells within this relative band "
                         "(default: ignore them)")
     p.set_defaults(fn=_cmd_diff)
+
+    p = sub.add_parser(
+        "metrics", help="show a record's counters / timers / gauges")
+    p.add_argument("record", help="record id, file path, or name (newest)")
+    p.set_defaults(fn=_cmd_metrics)
 
     p = sub.add_parser("gc", help="prune store records / the EvalCache spill")
     p.add_argument("--keep", type=int, default=5, metavar="N",
