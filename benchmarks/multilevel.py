@@ -18,7 +18,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.multilevel import TwoLevelPlatform, optimal_two_level, \
-    simulate_two_level
+    simulate_two_level, two_level_stream
 from repro.core.waste import t_rfo, waste
 from repro.experiments import (DistributionSpec, ExperimentSpec, ScenarioSpec,
                                SweepSpec, register_experiment)
@@ -55,13 +55,13 @@ def run(quick: bool = True) -> list[dict]:
                               r1=cell.extras["r1"], r2=cell.r, d=cell.d)
         w1 = waste(t_rfo(p1), p1)
         t1, k, w2 = optimal_two_level(p2)
-        # Simulation check (Exponential faults, soft with probability phi).
+        # Simulation check: the stream rides the shared trace machinery
+        # (hard = fail-stop stream, soft = silent stream; for Exponential
+        # the superposition is rate 1/mu with soft probability phi).
         sims = []
         for seed in range(cell.n_traces):
-            r = np.random.default_rng(seed)
-            need = int(5 * cell.time_base / cell.mu) + 50
-            faults = np.cumsum(r.exponential(cell.mu, size=need))
-            soft = r.random(len(faults)) < phi
+            faults, soft = two_level_stream(
+                p2, 5.0 * cell.time_base, np.random.default_rng(seed))
             sims.append(simulate_two_level(
                 faults, soft, p2, cell.time_base, t1, k).waste)
         n_exp = cell.n.bit_length() - 1

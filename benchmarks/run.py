@@ -93,8 +93,8 @@ def _import_benchmarks():
     """Import every benchmark module so experiments register themselves."""
     from . import (beyond, engine_perf, exact_sweep, exec_times, fleet_sweep,
                    log_traces, multilevel, obs_metrics, predictor_sweep,
-                   recall_precision, roofline, table2, waste_vs_n,
-                   window_sweep)
+                   recall_precision, roofline, silent_sweep, table2,
+                   waste_vs_n, window_sweep)
     del roofline  # registers the spec-driven accelerator sweep only
     return {
         "engine_perf": engine_perf.bench,
@@ -108,6 +108,7 @@ def _import_benchmarks():
         "window_sweep": window_sweep.run,
         "predictor_sweep": predictor_sweep.run,
         "exact_sweep": exact_sweep.run,
+        "silent_sweep": silent_sweep.run,
         "fleet_sweep": fleet_sweep.run,
         "obs_metrics": obs_metrics.run,
     }

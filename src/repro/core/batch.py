@@ -58,10 +58,10 @@ from typing import Sequence
 
 import numpy as np
 
-from .simulator import (_CKPT, _DOWN, _PROCKPT, _RECOVER, _WORK, WINDOW_MODES,
-                        AlwaysTrust, FixedProbabilityTrust, NeverTrust,
-                        SimResult, ThresholdTrust, TrustPolicy)
-from .traces import FAULT_PRED, FAULT_UNPRED, EventTrace
+from .simulator import (_CKPT, _DOWN, _PROCKPT, _RECOVER, _VERIFY, _WORK,
+                        WINDOW_MODES, AlwaysTrust, FixedProbabilityTrust,
+                        NeverTrust, SimResult, ThresholdTrust, TrustPolicy)
+from .traces import FAULT_PRED, FAULT_UNPRED, SILENT, EventTrace
 from .waste import Platform
 
 __all__ = [
@@ -84,6 +84,7 @@ _PC_POP = 0      # needs its next event popped (target is meaningless)
 _PC_FAULT = 1    # arrival applies a fault at ``target``
 _PC_PRED = 2     # arrival decides a proactive checkpoint at ``target``
 _PC_FINAL = 3    # events exhausted: run fault-free to completion
+_PC_SILENT = 4   # arrival marks the lane latently corrupted at ``target``
 
 _BIG_SEQ = np.iinfo(np.int64).max
 
@@ -183,6 +184,11 @@ class BatchResult:
     n_proactive_ckpts: np.ndarray | None = None
     n_rollbacks: np.ndarray | None = None
     n_replans: np.ndarray | None = None
+    # Silent-error / verification counters (arXiv:1310.8486).
+    n_silent: np.ndarray | None = None
+    n_verifications: np.ndarray | None = None
+    n_deep_rollbacks: np.ndarray | None = None
+    time_verify: np.ndarray | None = None
     final_period: np.ndarray | None = None
     final_threshold: np.ndarray | None = None
     est_recall: np.ndarray | None = None
@@ -222,6 +228,14 @@ class BatchResult:
             res.n_rollbacks = int(self.n_rollbacks[ci, ti])
         if self.n_replans is not None:
             res.n_replans = int(self.n_replans[ci, ti])
+        if self.n_silent is not None:
+            res.n_silent = int(self.n_silent[ci, ti])
+        if self.n_verifications is not None:
+            res.n_verifications = int(self.n_verifications[ci, ti])
+        if self.n_deep_rollbacks is not None:
+            res.n_deep_rollbacks = int(self.n_deep_rollbacks[ci, ti])
+        if self.time_verify is not None:
+            res.time_verify = float(self.time_verify[ci, ti])
         if self.final_period is not None:
             res.final_period = float(self.final_period[ci, ti])
         if self.final_threshold is not None:
@@ -243,7 +257,10 @@ class _LaneState:
     """All per-lane state as structure-of-arrays."""
 
     def __init__(self, n_lanes: int, periods: np.ndarray, c: float,
-                 time_base: float) -> None:
+                 time_base: float,
+                 n_verify: np.ndarray | None = None,
+                 verify_cost: np.ndarray | None = None,
+                 keep_ckpts: np.ndarray | None = None) -> None:
         L = n_lanes
         f8 = np.float64
         self.now = np.zeros(L, f8)
@@ -257,6 +274,22 @@ class _LaneState:
         self.wpp = periods - c
         self.w_rem = np.minimum(self.wpp, time_base - self.saved)
         self.finished = np.zeros(L, bool)
+        # Silent-error verification state (arXiv:1310.8486), mirroring
+        # _Machine: v_rem is inf on verification-off lanes so it never wins
+        # the work-chunk min and those lanes stay bit-for-bit unchanged.
+        self.nv = (np.zeros(L, np.int64) if n_verify is None
+                   else np.asarray(n_verify, dtype=np.int64))
+        self.vcost = (np.zeros(L, f8) if verify_cost is None
+                      else np.asarray(verify_cost, dtype=f8))
+        self.keep = (np.ones(L, np.int64) if keep_ckpts is None
+                     else np.asarray(keep_ckpts, dtype=np.int64))
+        self.v_wp = np.where(self.nv >= 1,
+                             self.wpp / np.maximum(self.nv, 1), np.inf)
+        self.v_rem = self.v_wp.copy()
+        self.verify_then_ckpt = np.zeros(L, bool)
+        self.corrupted = np.zeros(L, bool)
+        self.saved_clean = np.zeros(L, f8)
+        self.n_dirty = np.zeros(L, np.int64)
         # Engine bookkeeping.
         self.pc = np.full(L, _PC_POP, np.int8)
         self.target = np.full(L, -np.inf, f8)
@@ -306,6 +339,10 @@ class _LaneState:
         self.time_recovery = np.zeros(L, f8)
         self.n_proactive_ckpts = np.zeros(L, i8)
         self.n_rollbacks = np.zeros(L, i8)
+        self.n_silent = np.zeros(L, i8)
+        self.n_verifications = np.zeros(L, i8)
+        self.n_deep_rollbacks = np.zeros(L, i8)
+        self.time_verify = np.zeros(L, f8)
 
     def push_deferred(self, lanes: np.ndarray, dates: np.ndarray) -> None:
         """Insert a deferred fault (date, next seq) for each lane in ``lanes``."""
@@ -334,6 +371,55 @@ class _LaneState:
         return min_t, slot
 
 
+def _record_saves(st: _LaneState, lanes: np.ndarray) -> None:
+    """Vectorized `_Machine._record_save`: retained-ring bookkeeping at any
+    completed checkpoint (a save while corrupted writes a dirty snapshot;
+    ``keep`` dirty snapshots evict the clean one)."""
+    cor = st.corrupted[lanes]
+    dirty = lanes[cor]
+    if dirty.size:
+        st.n_dirty[dirty] += 1
+        st.saved_clean[dirty[st.n_dirty[dirty] >= st.keep[dirty]]] = 0.0
+    clean = lanes[~cor]
+    st.saved_clean[clean] = st.done[clean]
+    st.n_dirty[clean] = 0
+
+
+def _detect_lanes(st: _LaneState, lanes: np.ndarray, p: Platform) -> None:
+    """Vectorized `_Machine._detect`: a verification (or the end-of-job
+    acceptance check) caught latent corruption — roll back to the newest
+    clean retained snapshot and pay one recovery R (no downtime D)."""
+    if lanes.size == 0:
+        return
+    lost = st.done[lanes] - st.saved_clean[lanes]
+    st.time_lost[lanes] += lost
+    st.n_rollbacks[lanes] += lost > 0.0
+    st.n_deep_rollbacks[lanes] += st.n_dirty[lanes] > 0
+    st.done[lanes] = st.saved_clean[lanes]
+    st.saved[lanes] = st.saved_clean[lanes]
+    st.n_dirty[lanes] = 0
+    st.corrupted[lanes] = False
+    st.phase[lanes] = _RECOVER
+    st.phase_end[lanes] = st.now[lanes] + p.r
+    st.win_end[lanes] = -np.inf
+    st.win_rem[lanes] = np.inf
+
+
+def _finish_work_lanes(st: _LaneState, lanes: np.ndarray,
+                       p: Platform) -> None:
+    """Vectorized `_Machine._finish_work`: end of the period's work —
+    checkpoint, guarded by a verification on verification-on lanes."""
+    if lanes.size == 0:
+        return
+    ver = lanes[st.nv[lanes] >= 1]
+    st.phase[ver] = _VERIFY
+    st.phase_end[ver] = st.now[ver] + st.vcost[ver]
+    st.verify_then_ckpt[ver] = True
+    ck = lanes[st.nv[lanes] < 1]
+    st.phase[ck] = _CKPT
+    st.phase_end[ck] = st.now[ck] + p.c
+
+
 def _complete_phases(st: _LaneState, lanes: np.ndarray, periods: np.ndarray,
                      p: Platform, cp: float, time_base: float,
                      lane_wwp: np.ndarray) -> None:
@@ -346,25 +432,47 @@ def _complete_phases(st: _LaneState, lanes: np.ndarray, periods: np.ndarray,
         st.n_periodic_ckpts[ck] += 1
         st.time_ckpt[ck] += p.c
         st.saved[ck] = st.done[ck]
-        fin = ck[st.saved[ck] >= time_base - 1e-9]
-        st.finished[fin] = True
+        _record_saves(st, ck)
+        at_end = st.saved[ck] >= time_base - 1e-9
+        # End-of-job acceptance check: a corrupted final checkpoint is
+        # rejected (detection), not shipped.
+        det = ck[at_end & st.corrupted[ck]]
+        st.finished[ck[at_end & ~st.corrupted[ck]]] = True
         act = ck[st.now[ck] < st.win_end[ck]]
         st.win_rem[act] = lane_wwp[act]
         _new_period(st, ck[st.saved[ck] < time_base - 1e-9], periods, p,
                     time_base)
+        _detect_lanes(st, det, p)
 
     pk = lanes[ph == _PROCKPT]
     if pk.size:
         st.time_prockpt[pk] += cp
         st.n_proactive_ckpts[pk] += 1
         st.saved[pk] = st.done[pk]
+        _record_saves(st, pk)
         # Period continues (paper §4.1): offsets measured from this save.
         st.period_start[pk] = st.now[pk]
         st.phase[pk] = _WORK
         st.phase_end[pk] = np.inf
-        # In-window cadence restarts from every save.
+        # In-window and verification cadences restart from every save.
         act = pk[st.now[pk] < st.win_end[pk]]
         st.win_rem[act] = lane_wwp[act]
+        st.v_rem[pk] = st.v_wp[pk]
+
+    vf = lanes[ph == _VERIFY]
+    if vf.size:
+        st.time_verify[vf] += st.vcost[vf]
+        st.n_verifications[vf] += 1
+        det = vf[st.corrupted[vf]]
+        ok = vf[~st.corrupted[vf]]
+        st.v_rem[ok] = st.v_wp[ok]
+        tc = ok[st.verify_then_ckpt[ok]]
+        st.phase[tc] = _CKPT
+        st.phase_end[tc] = st.now[tc] + p.c
+        wk = ok[~st.verify_then_ckpt[ok]]
+        st.phase[wk] = _WORK
+        st.phase_end[wk] = np.inf
+        _detect_lanes(st, det, p)
 
     dn = lanes[ph == _DOWN]
     if dn.size:
@@ -390,6 +498,10 @@ def _new_period(st: _LaneState, lanes: np.ndarray, periods: np.ndarray,
     st.wpp[lanes] = np.maximum(1e-9, periods[lanes] - p.c)
     st.w_rem[lanes] = np.minimum(st.wpp[lanes],
                                  time_base - st.saved[lanes])
+    ver = lanes[st.nv[lanes] >= 1]
+    if ver.size:
+        st.v_wp[ver] = st.wpp[ver] / st.nv[ver]
+    st.v_rem[lanes] = st.v_wp[lanes]
 
 
 def _apply_faults(st: _LaneState, lanes: np.ndarray, p: Platform,
@@ -397,12 +509,18 @@ def _apply_faults(st: _LaneState, lanes: np.ndarray, p: Platform,
     """Vectorized `_Machine.fault` at ``t == target`` for the lane indices."""
     t = st.target[lanes]
     st.n_faults_hit[lanes] += 1
-    lost = st.done[lanes] - st.saved[lanes]
+    # A detected fault reveals latent corruption: when corrupted
+    # checkpoints are retained (n_dirty > 0), roll back past them to the
+    # newest clean snapshot (arXiv:1310.8486).
+    deep = st.n_dirty[lanes] > 0
+    base = np.where(deep, st.saved_clean[lanes], st.saved[lanes])
+    lost = st.done[lanes] - base
     ph = st.phase[lanes]
     in_phase = (ph != _WORK) & ~np.isinf(st.phase_end[lanes])
-    dur = dur_table[ph]
+    dur = np.where(ph == _VERIFY, st.vcost[lanes], dur_table[ph])
     elapsed = dur - (st.phase_end[lanes] - st.now[lanes])
-    ckpt_like = in_phase & ((ph == _CKPT) | (ph == _PROCKPT))
+    ckpt_like = in_phase & ((ph == _CKPT) | (ph == _PROCKPT)
+                            | (ph == _VERIFY))
     lost = lost + np.where(ckpt_like, np.maximum(0.0, elapsed), 0.0)
     st.time_down[lanes] += np.where(in_phase & ~ckpt_like,
                                     np.maximum(0.0, elapsed), 0.0)
@@ -412,6 +530,11 @@ def _apply_faults(st: _LaneState, lanes: np.ndarray, p: Platform,
                                         np.maximum(0.0, elapsed), 0.0)
     st.time_lost[lanes] += lost
     st.n_rollbacks[lanes] += lost > 0.0
+    st.n_deep_rollbacks[lanes] += deep
+    d_idx = lanes[deep]
+    st.saved[d_idx] = st.saved_clean[d_idx]
+    st.n_dirty[d_idx] = 0
+    st.corrupted[lanes] = False
     st.done[lanes] = st.saved[lanes]
     st.phase[lanes] = _DOWN
     st.phase_end[lanes] = t + p.d
@@ -434,6 +557,9 @@ def _run_lanes(
     lane_wmode: np.ndarray | None = None,
     lane_wperiod: np.ndarray | None = None,
     lane_adaptive: Sequence | None = None,
+    lane_nverify: np.ndarray | None = None,
+    lane_vcost: np.ndarray | None = None,
+    lane_keep: np.ndarray | None = None,
 ) -> _LaneState:
     """Run all lanes to completion; returns the final lane state."""
     L = lane_trace.size
@@ -444,6 +570,13 @@ def _run_lanes(
         lane_wmode = np.zeros(L, dtype=np.int8)
     if lane_wperiod is None:
         lane_wperiod = np.zeros(L, dtype=np.float64)
+    if lane_nverify is not None and np.any(lane_nverify < 0):
+        raise ValueError("n_verify must be >= 0")
+    if lane_vcost is not None and (np.any(lane_vcost < 0.0)
+                                   or not np.all(np.isfinite(lane_vcost))):
+        raise ValueError("verify_cost must be finite and >= 0")
+    if lane_keep is not None and np.any(lane_keep < 1):
+        raise ValueError("keep_ckpts must be >= 1")
 
     # Adaptive lanes: the plan is a per-lane (period, threshold) pair the
     # estimator mutates, so those arrays become lane state.
@@ -489,7 +622,9 @@ def _run_lanes(
     # In-window work quantum per lane (only "within" lanes ever read it).
     lane_wwp = np.where(within, lane_wperiod - cp, np.inf)
 
-    st = _LaneState(L, lane_period, platform.c, time_base)
+    st = _LaneState(L, lane_period, platform.c, time_base,
+                    n_verify=lane_nverify, verify_cost=lane_vcost,
+                    keep_ckpts=lane_keep)
     if ad_active.any():
         from repro.predictors.estimator import P_HAT_MIN, maybe_replan
         st.ad_pr[:] = [a.prior_recall if a else 0.0 for a in lane_adaptive]
@@ -547,8 +682,10 @@ def _run_lanes(
             st.n_replans[lane] += 1
 
     cursor = np.zeros(L, dtype=np.int64)
-    # Phase durations indexed by phase code (`_Machine._phase_duration`).
-    dur_table = np.array([0.0, platform.c, cp, platform.d, platform.r])
+    # Phase durations indexed by phase code (`_Machine._phase_duration`);
+    # the _VERIFY slot is a placeholder — its per-lane verify_cost is
+    # substituted where needed.
+    dur_table = np.array([0.0, platform.c, cp, platform.d, platform.r, 0.0])
     # Per-lane seq counters start after the trace events so deferred faults
     # always lose time ties to trace events (the scalar heap's seq order).
     st.next_seq[:] = bank.n_events[lane_trace]
@@ -638,8 +775,16 @@ def _run_lanes(
                 if d_rep.size:
                     _adaptive_replan(d_rep)
 
+            # Silent corruptions: latent until a verification or a
+            # detected fault reveals them (no schedule change on arrival).
+            is_sil = take_trace & (k_tr == SILENT)
+            s_idx = idx[is_sil]
+            if s_idx.size:
+                st.pc[s_idx] = _PC_SILENT
+                st.target[s_idx] = t_tr[is_sil]
+
             # Prediction events (true or false) announced for date t.
-            is_pred = take_trace & (k_tr != FAULT_UNPRED)
+            is_pred = take_trace & (k_tr != FAULT_UNPRED) & (k_tr != SILENT)
             p_idx = idx[is_pred]
             if p_idx.size:
                 st.n_predictions[p_idx] += 1
@@ -699,6 +844,19 @@ def _run_lanes(
             st.pc[lanes] = _PC_POP
             st.target[lanes] = -np.inf
 
+        arr_s = (pc_w == _PC_SILENT) & at_target
+        if arr_s.any():
+            lanes = work[arr_s]
+            ph = st.phase[lanes]
+            # Strikes while down/recovering touch no application state
+            # (`_Machine.silent`).
+            hit = lanes[(ph == _WORK) | (ph == _CKPT) | (ph == _PROCKPT)
+                        | (ph == _VERIFY)]
+            st.n_silent[hit] += 1
+            st.corrupted[hit] = True
+            st.pc[lanes] = _PC_POP
+            st.target[lanes] = -np.inf
+
         arr_p = (pc_w == _PC_PRED) & at_target
         if arr_p.any():
             lanes = work[arr_p]
@@ -747,17 +905,18 @@ def _run_lanes(
             ph = st.phase[adv]
             is_work = ph == _WORK
             wrem0 = st.w_rem[adv] <= 0.0
-            wz = adv[is_work & wrem0]             # degenerate: straight to ckpt
-            st.phase[wz] = _CKPT
-            st.phase_end[wz] = st.now[wz] + platform.c
+            # Degenerate: straight to the (possibly verified) checkpoint.
+            _finish_work_lanes(st, adv[is_work & wrem0], platform)
 
             ww = adv[is_work & ~wrem0]
             if ww.size:
                 # Inside an active prediction window the chunk also stops at
                 # the in-window checkpoint cadence and the window end; the
-                # min over the same operands keeps inactive lanes bit-exact.
+                # min over the same operands keeps inactive lanes bit-exact
+                # (v_rem is +inf on verification-off lanes).
                 in_win = st.now[ww] < st.win_end[ww]
                 dt = np.minimum(st.w_rem[ww], st.target[ww] - st.now[ww])
+                dt = np.minimum(dt, st.v_rem[ww])
                 if in_win.any():
                     cap = np.where(in_win,
                                    np.minimum(st.win_rem[ww],
@@ -767,12 +926,19 @@ def _run_lanes(
                 st.now[ww] += dt
                 st.done[ww] += dt
                 st.w_rem[ww] -= dt
+                st.v_rem[ww] -= dt
                 st.win_rem[ww[in_win]] -= dt[in_win]
-                fin_work = ww[st.w_rem[ww] <= 0.0]
-                st.phase[fin_work] = _CKPT
-                st.phase_end[fin_work] = st.now[fin_work] + platform.c
+                _finish_work_lanes(st, ww[st.w_rem[ww] <= 0.0], platform)
+                # Mid-period verification due (w_rem > 0 keeps the scalar
+                # elif priority: end-of-work wins over the verify cadence).
+                vdue = ww[(st.w_rem[ww] > 0.0) & (st.v_rem[ww] <= 0.0)]
+                if vdue.size:
+                    st.phase[vdue] = _VERIFY
+                    st.phase_end[vdue] = st.now[vdue] + st.vcost[vdue]
+                    st.verify_then_ckpt[vdue] = False
                 if in_win.any():
-                    live = (st.w_rem[ww] > 0.0) & in_win
+                    live = (st.w_rem[ww] > 0.0) & (st.v_rem[ww] > 0.0) \
+                        & in_win
                     # In-window proactive checkpoint due.
                     pro = ww[live & (st.win_rem[ww] <= 0.0)
                              & (st.now[ww] < st.win_end[ww])]
@@ -876,6 +1042,9 @@ def simulate_lanes(
     window_modes: Sequence[str] | None = None,
     window_periods: Sequence[float] | None = None,
     adaptives: Sequence | None = None,
+    n_verifies: Sequence[int] | None = None,
+    verify_costs: Sequence[float] | None = None,
+    keep_ckpts: Sequence[int] | None = None,
     start: float = 0.0,
     backend: str = "numpy",
 ) -> np.ndarray:
@@ -906,9 +1075,19 @@ def simulate_lanes(
                     np.asarray(window_periods, dtype=np.float64))
     lane_adaptive = (list(adaptives) if adaptives is not None
                      else [None] * lane_trace.size)
+    lane_nv = (np.zeros(lane_trace.size, dtype=np.int64)
+               if n_verifies is None else
+               np.asarray(n_verifies, dtype=np.int64))
+    lane_vc = (np.zeros(lane_trace.size, dtype=np.float64)
+               if verify_costs is None else
+               np.asarray(verify_costs, dtype=np.float64))
+    lane_kc = (np.ones(lane_trace.size, dtype=np.int64)
+               if keep_ckpts is None else
+               np.asarray(keep_ckpts, dtype=np.int64))
     if not (lane_trace.size == lane_period.size == lane_kind.size
             == lane_window.size == lane_seed.size == lane_wmode.size
-            == lane_wperiod.size == len(lane_adaptive)):
+            == lane_wperiod.size == len(lane_adaptive) == lane_nv.size
+            == lane_vc.size == lane_kc.size):
         raise ValueError("lane array lengths differ")
     if lane_trace.size == 0:
         return np.empty(0, dtype=np.float64)
@@ -919,13 +1098,17 @@ def simulate_lanes(
                             lane_period, lane_kind, lane_param, lane_window,
                             lane_seed, cp, lane_wmode=lane_wmode,
                             lane_wperiod=lane_wperiod,
-                            lane_adaptive=lane_adaptive)
+                            lane_adaptive=lane_adaptive,
+                            lane_nverify=lane_nv, lane_vcost=lane_vc,
+                            lane_keep=lane_kc)
         return out["makespan"]
     if backend != "numpy":
         raise ValueError(f"unknown backend {backend!r}")
     st = _run_lanes(bank, platform, time_base, lane_trace, lane_period,
                     lane_kind, lane_param, lane_window, lane_seed, cp,
-                    lane_wmode, lane_wperiod, lane_adaptive)
+                    lane_wmode, lane_wperiod, lane_adaptive,
+                    lane_nverify=lane_nv, lane_vcost=lane_vc,
+                    lane_keep=lane_kc)
     return st.now
 
 
@@ -941,6 +1124,9 @@ def simulate_batch(
     window_mode: str | Sequence[str] = "instant",
     window_period: float | Sequence[float] = 0.0,
     adaptive=None,
+    n_verify: int | Sequence[int] = 0,
+    verify_cost: float | Sequence[float] = 0.0,
+    keep_ckpts: int | Sequence[int] = 1,
     start: float = 0.0,
     trace_seeds: Sequence[int] | int | None = None,
     backend: str = "numpy",
@@ -966,6 +1152,10 @@ def simulate_batch(
         candidate, ``None`` entries = static) to run the online (r-hat,
         p-hat) estimator per lane and re-plan period / trust threshold as
         the gated estimates drift (see :func:`repro.core.simulator.simulate`).
+      n_verify: scalar or per-candidate verifications-per-period k
+        (arXiv:1310.8486); 0 disables the verification cadence.
+      verify_cost: scalar or per-candidate verification duration V.
+      keep_ckpts: scalar or per-candidate retained-checkpoint depth.
       start: job start offset into the traces (paper: one year).
       trace_seeds: per-trace RNG seeds; lane (c, t) draws from a fresh
         ``default_rng(trace_seeds[t])`` exactly like the scalar engine does
@@ -1009,6 +1199,15 @@ def simulate_batch(
     lane_wperiod = np.repeat(wperiod_arr, n_traces)
     lane_seed = np.tile(seeds, n_cand)
     lane_adaptive = [a for a in adaptive_seq for _ in range(n_traces)]
+    nv_arr = np.broadcast_to(
+        np.asarray(n_verify, dtype=np.int64), (n_cand,)).copy()
+    vc_arr = np.broadcast_to(
+        np.asarray(verify_cost, dtype=np.float64), (n_cand,)).copy()
+    kc_arr = np.broadcast_to(
+        np.asarray(keep_ckpts, dtype=np.int64), (n_cand,)).copy()
+    lane_nv = np.repeat(nv_arr, n_traces)
+    lane_vc = np.repeat(vc_arr, n_traces)
+    lane_kc = np.repeat(kc_arr, n_traces)
 
     if backend == "jax":
         from .batch_jax import run_lanes_jax
@@ -1016,7 +1215,9 @@ def simulate_batch(
                             lane_period, lane_kind, lane_param, lane_window,
                             lane_seed, cp, lane_wmode=lane_wmode,
                             lane_wperiod=lane_wperiod,
-                            lane_adaptive=lane_adaptive)
+                            lane_adaptive=lane_adaptive,
+                            lane_nverify=lane_nv, lane_vcost=lane_vc,
+                            lane_keep=lane_kc)
         shape = (n_cand, n_traces)
         return BatchResult(
             makespan=out["makespan"].reshape(shape), time_base=time_base,
@@ -1036,6 +1237,10 @@ def simulate_batch(
             n_proactive_ckpts=out["n_proactive_ckpts"].reshape(shape),
             n_rollbacks=out["n_rollbacks"].reshape(shape),
             n_replans=out["n_replans"].reshape(shape),
+            n_silent=out["n_silent"].reshape(shape),
+            n_verifications=out["n_verifications"].reshape(shape),
+            n_deep_rollbacks=out["n_deep_rollbacks"].reshape(shape),
+            time_verify=out["time_verify"].reshape(shape),
             final_period=out["final_period"].reshape(shape),
             final_threshold=out["final_threshold"].reshape(shape),
             est_recall=out["est_recall"].reshape(shape),
@@ -1047,7 +1252,9 @@ def simulate_batch(
 
     st = _run_lanes(bank, platform, time_base, lane_trace, lane_period,
                     lane_kind, lane_param, lane_window, lane_seed, cp,
-                    lane_wmode, lane_wperiod, lane_adaptive)
+                    lane_wmode, lane_wperiod, lane_adaptive,
+                    lane_nverify=lane_nv, lane_vcost=lane_vc,
+                    lane_keep=lane_kc)
     shape = (n_cand, n_traces)
     return BatchResult(
         makespan=st.now.reshape(shape), time_base=time_base,
@@ -1067,6 +1274,10 @@ def simulate_batch(
         n_proactive_ckpts=st.n_proactive_ckpts.reshape(shape),
         n_rollbacks=st.n_rollbacks.reshape(shape),
         n_replans=st.n_replans.reshape(shape),
+        n_silent=st.n_silent.reshape(shape),
+        n_verifications=st.n_verifications.reshape(shape),
+        n_deep_rollbacks=st.n_deep_rollbacks.reshape(shape),
+        time_verify=st.time_verify.reshape(shape),
         final_period=st.final_period.reshape(shape),
         final_threshold=st.final_threshold.reshape(shape),
         est_recall=st.est_recall.reshape(shape),

@@ -55,15 +55,15 @@ from typing import Any, Sequence
 
 import numpy as np
 
-from .simulator import _CKPT, _DOWN, _PROCKPT, _RECOVER, _WORK
-from .traces import FALSE_PRED, FAULT_PRED, FAULT_UNPRED
+from .simulator import _CKPT, _DOWN, _PROCKPT, _RECOVER, _VERIFY, _WORK
+from .traces import FALSE_PRED, FAULT_PRED, FAULT_UNPRED, SILENT
 from .waste import Platform
 
 __all__ = ["run_lanes_jax"]
 
 _TRUST_NEVER, _TRUST_ALWAYS, _TRUST_THRESHOLD, _TRUST_FIXED_Q = range(4)
 _WMODE_INSTANT, _WMODE_WITHIN = range(2)
-_PC_POP, _PC_FAULT, _PC_PRED, _PC_FINAL = range(4)
+_PC_POP, _PC_FAULT, _PC_PRED, _PC_FINAL, _PC_SILENT = range(5)
 _DEF_SLOTS = 8          # deferred-fault capacity; overflow is detected
 _BIG_SEQ = np.iinfo(np.int32).max
 _ADV_PASSES = 4         # schedule steps per loop iteration (cf. numpy's 6)
@@ -124,18 +124,24 @@ def run_lanes_jax(bank, platform: Platform, time_base: float,
                   lane_wmode: np.ndarray | None = None,
                   lane_wperiod: np.ndarray | None = None,
                   lane_adaptive: Sequence | None = None,
+                  lane_nverify: np.ndarray | None = None,
+                  lane_vcost: np.ndarray | None = None,
+                  lane_keep: np.ndarray | None = None,
                   chunk: int | None = None) -> dict[str, Any]:
     import jax
     import jax.numpy as jnp
     from jax import lax
 
     from repro.kernels.event_step import (F_DONE, F_NOW, F_PERIOD, F_PHEND,
-                                          F_PSTART, F_SAVED, F_TARGET,
-                                          F_TCKPT, F_TDOWN, F_TDOWNT,
-                                          F_TPROC, F_TRECOV, F_WINEND,
-                                          F_WINREM, F_WPP, F_WREM, F_WWP,
-                                          I_FIN, I_NCKPT, I_NPROC, I_PHASE,
-                                          event_step)
+                                          F_PSTART, F_SAVED, F_SVCLEAN,
+                                          F_TARGET, F_TCKPT, F_TDOWN,
+                                          F_TDOWNT, F_TLOST, F_TPROC,
+                                          F_TRECOV, F_TVERIFY, F_VREM,
+                                          F_VWP, F_WINEND, F_WINREM, F_WPP,
+                                          F_WREM, F_WWP, I_CORR, I_FIN,
+                                          I_NCKPT, I_NDEEP, I_NDIRTY,
+                                          I_NPROC, I_NROLL, I_NVERIF,
+                                          I_PHASE, I_VTC, event_step)
 
     if not jax.config.jax_enable_x64:
         raise RuntimeError(
@@ -161,6 +167,21 @@ def run_lanes_jax(bank, platform: Platform, time_base: float,
         lane_wperiod = np.zeros(L, dtype=np.float64)
     if lane_adaptive is None:
         lane_adaptive = [None] * L
+    if lane_nverify is None:
+        lane_nverify = np.zeros(L, dtype=np.int32)
+    if lane_vcost is None:
+        lane_vcost = np.zeros(L, dtype=np.float64)
+    if lane_keep is None:
+        lane_keep = np.ones(L, dtype=np.int32)
+    lane_nverify = np.asarray(lane_nverify).astype(np.int32)
+    lane_vcost = np.asarray(lane_vcost, dtype=np.float64)
+    lane_keep = np.asarray(lane_keep).astype(np.int32)
+    if np.any(lane_nverify < 0):
+        raise ValueError("n_verify must be >= 0")
+    if np.any(~np.isfinite(lane_vcost)) or np.any(lane_vcost < 0.0):
+        raise ValueError("verify_cost must be finite and >= 0")
+    if np.any(lane_keep < 1):
+        raise ValueError("keep_ckpts must be >= 1")
 
     within = np.asarray(lane_wmode) == _WMODE_WITHIN
     if np.any(within & (lane_wperiod <= cp)):
@@ -269,7 +290,14 @@ def run_lanes_jax(bank, platform: Platform, time_base: float,
         target = jnp.where(is_fault, f_t, target)
         pc = jnp.where(is_fault, _PC_FAULT, pc)
 
-        is_pred = take_trace & (k_tr != FAULT_UNPRED)
+        # Silent-error strikes route to their own arrival state: the lane
+        # advances to the strike date, then flips its latent-corruption
+        # flag there (no immediate downtime).
+        is_sil = take_trace & (k_tr == SILENT)
+        target = jnp.where(is_sil, t_tr, target)
+        pc = jnp.where(is_sil, _PC_SILENT, pc)
+
+        is_pred = take_trace & (k_tr != FAULT_UNPRED) & (k_tr != SILENT)
         n_predictions = s["n_predictions"] + is_pred
         is_true = is_pred & (k_tr == FAULT_PRED)
         n_faults = n_faults + is_true      # counted at announcement
@@ -411,15 +439,21 @@ def run_lanes_jax(bank, platform: Platform, time_base: float,
         now, phase, phase_end = s["now"], s["phase"], s["phase_end"]
         target = s["target"]
 
-        # Fault arrival (the vectorized `_Machine.fault`).
+        # Fault arrival (the vectorized `_Machine.fault`).  A lane whose
+        # retained ring holds dirty snapshots rolls back past them to the
+        # newest clean state (deep rollback).
         arr_f = active & (s["pc"] == _PC_FAULT) & (now >= target)
-        lost = s["done"] - s["saved"]
+        deep = s["n_dirty"] > 0
+        base = jnp.where(deep, s["saved_clean"], s["saved"])
+        lost = s["done"] - base
         in_phase = (phase != _WORK) & ~jnp.isinf(phase_end)
         dur = jnp.select([phase == _CKPT, phase == _PROCKPT,
-                          phase == _DOWN, phase == _RECOVER],
-                         [c, cp, d, r], 0.0)
+                          phase == _DOWN, phase == _RECOVER,
+                          phase == _VERIFY],
+                         [c, cp, d, r, k["vcost"]], 0.0)
         elapsed = dur - (phase_end - now)
-        ckpt_like = in_phase & ((phase == _CKPT) | (phase == _PROCKPT))
+        ckpt_like = in_phase & ((phase == _CKPT) | (phase == _PROCKPT)
+                                | (phase == _VERIFY))
         lost = lost + jnp.where(ckpt_like, jnp.maximum(0.0, elapsed), 0.0)
         time_down = s["time_down"] + jnp.where(
             arr_f & in_phase & ~ckpt_like, jnp.maximum(0.0, elapsed), 0.0)
@@ -432,7 +466,11 @@ def run_lanes_jax(bank, platform: Platform, time_base: float,
         time_lost = s["time_lost"] + jnp.where(arr_f, lost, 0.0)
         n_faults_hit = s["n_faults_hit"] + arr_f
         n_rollbacks = s["n_rollbacks"] + (arr_f & (lost > 0.0))
-        done = jnp.where(arr_f, s["saved"], s["done"])
+        n_deep_rollbacks = s["n_deep_rollbacks"] + (arr_f & deep)
+        saved = jnp.where(arr_f & deep, s["saved_clean"], s["saved"])
+        n_dirty = jnp.where(arr_f, 0, s["n_dirty"])
+        corrupted = s["corrupted"] & ~arr_f
+        done = jnp.where(arr_f, saved, s["done"])
         phase = jnp.where(arr_f, _DOWN, phase)
         phase_end = jnp.where(arr_f, target + d, phase_end)
         # A fault ends any active prediction window.
@@ -440,6 +478,17 @@ def run_lanes_jax(bank, platform: Platform, time_base: float,
         win_rem = jnp.where(arr_f, jnp.inf, s["win_rem"])
         pc = jnp.where(arr_f, _PC_POP, s["pc"])
         target = jnp.where(arr_f, -jnp.inf, target)
+
+        # Silent-error strike: flip the latent-corruption flag if the
+        # lane is computing or saving (strikes during downtime/recovery
+        # hit no application state, as in the scalar engine).
+        arr_s = active & (pc == _PC_SILENT) & (now >= target)
+        hit = arr_s & ((phase == _WORK) | (phase == _CKPT)
+                       | (phase == _PROCKPT) | (phase == _VERIFY))
+        n_silent = s["n_silent"] + hit
+        corrupted = corrupted | hit
+        pc = jnp.where(arr_s, _PC_POP, pc)
+        target = jnp.where(arr_s, -jnp.inf, target)
 
         # Prediction arrival: the trust decision at the checkpoint-start
         # date.  FixedProbability lanes draw only when the decision is
@@ -470,11 +519,14 @@ def run_lanes_jax(bank, platform: Platform, time_base: float,
         pc = jnp.where(arr_p, _PC_POP, pc)
         target = jnp.where(arr_p, -jnp.inf, target)
 
-        return dict(s, now=now, done=done, phase=phase, phase_end=phase_end,
+        return dict(s, now=now, done=done, saved=saved, phase=phase,
+                    phase_end=phase_end,
                     win_end=win_end, win_rem=win_rem, pc=pc, target=target,
                     cur=cur, time_down=time_down, time_downtime=time_downtime,
                     time_recovery=time_recovery, time_lost=time_lost,
                     n_faults_hit=n_faults_hit, n_rollbacks=n_rollbacks,
+                    n_deep_rollbacks=n_deep_rollbacks, n_silent=n_silent,
+                    n_dirty=n_dirty, corrupted=corrupted,
                     n_trusted=n_trusted,
                     n_trusted_true=n_trusted_true, n_ignored=n_ignored,
                     def_time=def_time, def_seq=def_seq, next_seq=next_seq,
@@ -486,9 +538,16 @@ def run_lanes_jax(bank, platform: Platform, time_base: float,
                         s["phase_end"], s["wpp"], s["w_rem"], s["win_end"],
                         s["win_rem"], s["target"], s["time_ckpt"],
                         s["time_prockpt"], s["time_down"], s["period"],
-                        kc["wwp"], s["time_downtime"], s["time_recovery"]])
+                        kc["wwp"], s["time_downtime"], s["time_recovery"],
+                        s["time_lost"], s["time_verify"], s["v_wp"],
+                        s["v_rem"], kc["vcost"], s["saved_clean"]])
         is_ = jnp.stack([s["phase"], s["finished"].astype(jnp.int32),
-                         s["n_periodic_ckpts"], s["n_prockpts"]])
+                         s["n_periodic_ckpts"], s["n_prockpts"],
+                         s["n_rollbacks"], s["n_verifications"],
+                         s["n_deep_rollbacks"], s["n_dirty"],
+                         s["corrupted"].astype(jnp.int32),
+                         s["verify_then_ckpt"].astype(jnp.int32),
+                         kc["nv"], kc["keep"]])
         for _ in range(_ADV_PASSES):
             fs, is_ = event_step(fs, is_, c=c, cp=cp, d=d, r=r,
                                  time_base=time_base, impl=impl)
@@ -498,8 +557,15 @@ def run_lanes_jax(bank, platform: Platform, time_base: float,
                     win_rem=fs[F_WINREM], time_ckpt=fs[F_TCKPT],
                     time_prockpt=fs[F_TPROC], time_down=fs[F_TDOWN],
                     time_downtime=fs[F_TDOWNT], time_recovery=fs[F_TRECOV],
+                    time_lost=fs[F_TLOST], time_verify=fs[F_TVERIFY],
+                    v_wp=fs[F_VWP], v_rem=fs[F_VREM],
+                    saved_clean=fs[F_SVCLEAN],
                     phase=is_[I_PHASE], finished=is_[I_FIN] != 0,
-                    n_periodic_ckpts=is_[I_NCKPT], n_prockpts=is_[I_NPROC])
+                    n_periodic_ckpts=is_[I_NCKPT], n_prockpts=is_[I_NPROC],
+                    n_rollbacks=is_[I_NROLL], n_verifications=is_[I_NVERIF],
+                    n_deep_rollbacks=is_[I_NDEEP], n_dirty=is_[I_NDIRTY],
+                    corrupted=is_[I_CORR] != 0,
+                    verify_then_ckpt=is_[I_VTC] != 0)
 
     def _push_all(s, push, date):
         """Full-array deferred-fault insert (the pop-site pushes)."""
@@ -561,6 +627,8 @@ def run_lanes_jax(bank, platform: Platform, time_base: float,
 
         period = pad1(lane_period, c, f8)
         wpp0 = period - c
+        nv = pad1(lane_nverify, 0, i4)
+        vwp0 = np.where(nv >= 1, wpp0 / np.maximum(nv, 1), np.inf)
         state = {
             "now": np.zeros(n, f8), "done": np.zeros(n, f8),
             "saved": np.zeros(n, f8), "period_start": np.zeros(n, f8),
@@ -590,6 +658,15 @@ def run_lanes_jax(bank, platform: Platform, time_base: float,
             "time_down": np.zeros(n, f8), "time_lost": np.zeros(n, f8),
             "time_downtime": np.zeros(n, f8),
             "time_recovery": np.zeros(n, f8),
+            "time_verify": np.zeros(n, f8),
+            "v_wp": vwp0, "v_rem": vwp0.copy(),
+            "saved_clean": np.zeros(n, f8),
+            "n_dirty": np.zeros(n, i4),
+            "corrupted": np.zeros(n, bool),
+            "verify_then_ckpt": np.zeros(n, bool),
+            "n_silent": np.zeros(n, i4),
+            "n_verifications": np.zeros(n, i4),
+            "n_deep_rollbacks": np.zeros(n, i4),
         }
         state["finished"][n_real:] = True
         kc = {
@@ -598,6 +675,8 @@ def run_lanes_jax(bank, platform: Platform, time_base: float,
             "window": pad1(lane_window, 0.0, f8),
             "within": pad1(within, False, bool),
             "wwp": pad1(lane_wwp, np.inf, f8),
+            "nv": nv, "vcost": pad1(lane_vcost, 0.0, f8),
+            "keep": pad1(lane_keep, 1, i4),
             "tab": np.zeros((n, TW), f8),
         }
         kc["tab"][:n_real] = tab[sl]
@@ -627,7 +706,8 @@ def run_lanes_jax(bank, platform: Platform, time_base: float,
                 "n_periodic_ckpts", "n_prockpts", "n_rollbacks",
                 "time_ckpt", "time_prockpt", "time_down",
                 "time_lost", "time_downtime", "time_recovery",
-                "n_replans", "period", "tparam")
+                "n_silent", "n_verifications", "n_deep_rollbacks",
+                "time_verify", "n_replans", "period", "tparam")
     ad_keys = ("ad_ntp", "ad_nfp", "ad_nuf", "ad_gs", "ad_gn")
     acc = {k: np.zeros(L, np.float64) for k in out_keys}
     acc.update({k: np.zeros(L, np.float64) for k in ad_keys})
@@ -701,6 +781,10 @@ def run_lanes_jax(bank, platform: Platform, time_base: float,
         "time_lost": acc["time_lost"],
         "time_downtime": acc["time_downtime"],
         "time_recovery": acc["time_recovery"],
+        "n_silent": acc["n_silent"].astype(np.int64),
+        "n_verifications": acc["n_verifications"].astype(np.int64),
+        "n_deep_rollbacks": acc["n_deep_rollbacks"].astype(np.int64),
+        "time_verify": acc["time_verify"],
         "n_replans": acc["n_replans"].astype(np.int64),
         "final_period": acc["period"],
         "final_threshold": np.where(ad_act, acc["tparam"], -1.0),

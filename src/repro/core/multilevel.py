@@ -41,7 +41,7 @@ import math
 import numpy as np
 
 __all__ = ["TwoLevelPlatform", "waste_two_level", "optimal_two_level",
-           "simulate_two_level", "TwoLevelResult"]
+           "simulate_two_level", "two_level_stream", "TwoLevelResult"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -109,15 +109,47 @@ class TwoLevelResult:
             if self.makespan > 0 else 0.0
 
 
+def two_level_stream(p: TwoLevelPlatform, horizon: float,
+                     rng: np.random.Generator, *,
+                     dist=None) -> tuple[np.ndarray, np.ndarray]:
+    """Draw a (fault_times, soft) stream through ``make_event_trace``.
+
+    Hard faults are the fail-stop stream with MTBF mu/(1-phi); soft
+    faults ride the silent-error stream with MTBF mu/phi.  For the
+    default Exponential law the superposition is exactly the hand-rolled
+    model this replaces — a rate-1/mu process whose events are soft with
+    i.i.d. probability phi — but the draw now goes through the shared
+    trace machinery (validation, rescaling, seeding discipline, and any
+    renewal ``dist``).  phi = 0 or 1 degenerate to a single stream.
+    """
+    from .traces import SILENT, Exponential, make_event_trace
+
+    dist = dist if dist is not None else Exponential(1.0)
+    if p.phi >= 1.0:
+        # All-soft: one stream, every event recoverable at level 1.
+        tr = make_event_trace(dist, p.mu, 0.0, 1.0, horizon, rng)
+        return tr.times.astype(np.float64), np.ones(len(tr.times), bool)
+    silent_mu = p.mu / p.phi if p.phi > 0.0 else None
+    tr = make_event_trace(dist, p.mu / (1.0 - p.phi), 0.0, 1.0, horizon,
+                          rng, silent_mu=silent_mu)
+    return tr.times.astype(np.float64), tr.kinds == SILENT
+
+
 def simulate_two_level(fault_times: np.ndarray, soft: np.ndarray,
                        p: TwoLevelPlatform, time_base: float,
                        t1: float, k: int) -> TwoLevelResult:
     """Discrete-event simulation of the two-level schedule.
 
-    ``fault_times`` ascending; ``soft`` boolean per fault.  Work W = T1 - C1
-    per segment; every k-th checkpoint costs C2 instead of C1 and becomes
-    the hard-fault restore point.  Soft faults roll back to the last
-    completed checkpoint of either level; hard faults to the last level-2.
+    ``fault_times`` ascending; ``soft`` boolean per fault (see
+    :func:`two_level_stream` for the trace-machinery-backed generator).
+    Work W = T1 - C1 per segment; every k-th checkpoint costs C2 instead
+    of C1 and becomes the hard-fault restore point.  Soft faults roll
+    back to the last completed checkpoint of either level; hard faults to
+    the last level-2.  A fault landing inside the downtime + recovery
+    window interrupts it and restarts downtime — the same boundary rule
+    as the scalar oracle (``simulator._Machine.fault``), which this
+    engine cross-validates against bit-for-bit in the degenerate
+    single-level limits.
     """
     res = TwoLevelResult(0.0, time_base)
     now = 0.0
@@ -156,23 +188,42 @@ def simulate_two_level(fault_times: np.ndarray, soft: np.ndarray,
             seg += 1
             fi = fi  # keep cursor
             continue
-        # A fault strikes during the segment.
+        # A fault strikes during the segment.  Destroyed: the work done
+        # this segment plus any partial checkpoint (both re-executed).
         ft = float(fault_times[j])
         fi = j + 1
         elapsed = ft - now
-        # Destroyed: the work done this segment plus any partial checkpoint.
         res.time_lost += min(elapsed, w) + max(0.0, elapsed - w)
-        if soft[j]:
-            res.n_soft += 1
-            done = saved_l1
-            res.time_down += p.d + p.r1
-            now = ft + p.d + p.r1
-        else:
-            res.n_hard += 1
-            done = saved_l2
-            saved_l1 = saved_l2
-            res.time_down += p.d + p.r2
-            now = ft + p.d + p.r2
-            seg = 0  # restart the promotion cycle after a hard fault
+        while True:
+            if soft[j]:
+                res.n_soft += 1
+                lost = done - saved_l1
+                done = saved_l1
+                rec = p.r1
+            else:
+                res.n_hard += 1
+                lost = done - saved_l2
+                done = saved_l2
+                saved_l1 = saved_l2
+                rec = p.r2
+                seg = 0  # restart the promotion cycle after a hard fault
+            if lost > 0.0:
+                # Work rolled back *past* completed checkpoints: a hard
+                # fault drops saved_l1 -> saved_l2, losing the L1-secured
+                # work since the last promotion (the interrupted
+                # segment's own loss was charged above).
+                res.time_lost += lost
+            # A later fault inside the downtime + recovery window
+            # interrupts it: charge the elapsed part and restart downtime
+            # at the new fault (scalar-oracle boundary rule).
+            j = next_fault(ft, ft + p.d + rec)
+            if j is None:
+                res.time_down += p.d + rec
+                now = ft + p.d + rec
+                break
+            ft2 = float(fault_times[j])
+            fi = j + 1
+            res.time_down += ft2 - ft
+            ft = ft2
     res.makespan = now
     return res

@@ -62,6 +62,12 @@ class Strategy:
     window_mode: str = "instant"
     window_period: float = 0.0   # in-window proactive period ("within")
     adaptive: object | None = None  # repro.predictors.AdaptiveConfig
+    # Silent-error verification knobs (arXiv:1310.8486; see
+    # repro.core.silent): k in-period verifications, their cost, and the
+    # retained-checkpoint ring depth for rollback past dirty snapshots.
+    n_verify: int = 0
+    verify_cost: float = 0.0
+    keep_ckpts: int = 1
 
     def with_period(self, period: float) -> "Strategy":
         return dataclasses.replace(self, period=period)

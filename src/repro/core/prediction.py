@@ -8,7 +8,13 @@ Implements:
   * the two-branch waste WASTE1/WASTE2 (Eq. 15) and its exact minimization
     (§4.3): convex analysis on [C, C_p/p] and cubic root-finding on
     [max(C, C_p/p), +inf);
-  * the large-mu asymptotic period sqrt(2 mu C / (1 - r)).
+  * the large-mu asymptotic period sqrt(2 mu C / (1 - r));
+  * the post-proactive *cadence* correction: Eq. 15 implicitly restarts
+    the period after every proactive checkpoint, while all three engines
+    keep the original periodic cadence (``cadence="continue"``).  The
+    first-order gap is :func:`cadence_correction`; ``waste2``/``t_pred``/
+    ``optimal_period_with_prediction`` accept ``cadence="restart"``
+    (paper, default) or ``"continue"`` (engine-faithful).
 """
 
 from __future__ import annotations
@@ -28,6 +34,7 @@ __all__ = [
     "beta_lim",
     "waste1",
     "waste2",
+    "cadence_correction",
     "waste_with_prediction",
     "t_nopred",
     "t_pred",
@@ -164,17 +171,77 @@ def _waste2_coeffs(pp: PredictedPlatform) -> tuple[float, float, float, float]:
     return u, v, w, x
 
 
-def waste2(t: float, pp: PredictedPlatform) -> float:
-    """WASTE2(T): proactive action for predictions in [C_p/p, T]. Eq. 15."""
+def cadence_correction(t: float, pp: PredictedPlatform) -> float:
+    """First-order waste delta of the engines' continued periodic cadence.
+
+    Eq. 15's WASTE2 implicitly *restarts* the period after every
+    proactive checkpoint, so an unpredicted fault always loses T/2 on
+    average — its re-execution term is (1-r) T / (2 mu).  The engines
+    instead keep the original cadence (``simulator._complete_phase``:
+    "Period continues"): an acted prediction at offset tau from the last
+    periodic checkpoint *splits* the period's loss window into [0, tau]
+    and [tau, T], and an unpredicted fault striking later in the same
+    period rolls back only to the proactive save.  The time-averaged
+    time-since-last-save over a split period is
+
+        (tau^2/2 + (T - tau)^2/2) / T  =  T/2 - tau (T - tau) / T,
+
+    so each acted prediction shaves E[tau (T - tau)] / T off the mean
+    loss.  With acted offsets uniform on [beta_lim, T],
+    E[tau (T - tau)] = (T - beta_lim)(T + 2 beta_lim) / 6, and acted
+    predictions hit a period with expected multiplicity
+    q = min(1, (T - beta_lim) / mu_P) (arrival rate 1/mu_P; clamped to
+    one split per period — the regime the split formula models — which
+    also keeps the corrected objective coercive in T).  The correction is
+
+        Delta(T) = - (1-r)/mu * q * (T - beta_lim)(T + 2 beta_lim) / (6T)
+
+    Delta <= 0 always: continued cadence *reduces* waste relative to the
+    restart model, because the proactive save keeps protecting the rest
+    of the period — this is the large-r/p model-vs-engine gap of ROADMAP
+    item 6 (the restart model overestimates engine waste).  Returns 0
+    when T <= beta_lim (no acted predictions), the predictor never fires
+    (recall 0), or every fault is predicted (recall 1: no unpredicted
+    faults to lose re-execution on).
+    """
+    plat, pred = pp.platform, pp.predictor
+    beta = beta_lim(pp)
+    if t <= beta or pred.recall <= 0.0 or pred.recall >= 1.0:
+        return 0.0
+    mu_p = pred.mu_p(plat.mu)
+    q = min(1.0, (t - beta) / mu_p)
+    split = (t - beta) * (t + 2.0 * beta) / (6.0 * t)
+    return -(1.0 - pred.recall) / plat.mu * q * split
+
+
+def _check_cadence(cadence: str) -> None:
+    if cadence not in ("restart", "continue"):
+        raise ValueError(f"cadence must be 'restart' or 'continue', "
+                         f"got {cadence!r}")
+
+
+def waste2(t: float, pp: PredictedPlatform, *,
+           cadence: str = "restart") -> float:
+    """WASTE2(T): proactive action for predictions in [C_p/p, T]. Eq. 15.
+
+    ``cadence="restart"`` is the paper's model (period restarts after a
+    proactive checkpoint); ``"continue"`` adds :func:`cadence_correction`
+    to match the engines' continued periodic cadence.
+    """
+    _check_cadence(cadence)
     u, v, w, x = _waste2_coeffs(pp)
-    return u / (t * t) + v / t + w + x * t
+    base = u / (t * t) + v / t + w + x * t
+    if cadence == "continue":
+        base += cadence_correction(t, pp)
+    return base
 
 
-def waste_with_prediction(t: float, pp: PredictedPlatform) -> float:
+def waste_with_prediction(t: float, pp: PredictedPlatform, *,
+                          cadence: str = "restart") -> float:
     """Waste of the optimal (Theorem 1) strategy at period T: the two-branch Eq. 15."""
     if t <= beta_lim(pp):
         return waste1(t, pp)
-    return waste2(t, pp)
+    return waste2(t, pp, cadence=cadence)
 
 
 def t_nopred(pp: PredictedPlatform, alpha: float = ALPHA_CAP,
@@ -195,13 +262,18 @@ def t_nopred(pp: PredictedPlatform, alpha: float = ALPHA_CAP,
     return max(plat.c, min(t, hi))
 
 
-def t_pred(pp: PredictedPlatform) -> float:
+def t_pred(pp: PredictedPlatform, *, cadence: str = "restart") -> float:
     """Minimizer of WASTE2 on [max(C, C_p/p), +inf) (Eq. 17).
 
     dWASTE2/dT = -2u/T^3 - v/T^2 + x = 0  <=>  x T^3 - v T - 2u = 0.
     Handles both the convex case (v >= 0: unique positive root) and the
     general case (v < 0: inspect all real roots and interval bounds).
+
+    With ``cadence="continue"`` the corrected objective has no closed
+    form; the cubic root seeds a deterministic grid + ternary refinement
+    over [lo, ALPHA_CAP * mu].
     """
+    _check_cadence(cadence)
     u, v, _, x = _waste2_coeffs(pp)
     lo = max(pp.platform.c, beta_lim(pp))
     if x <= 0.0:
@@ -211,18 +283,44 @@ def t_pred(pp: PredictedPlatform) -> float:
         # periodic checkpoints are pure overhead — so return the paper's
         # rigor cap alpha*mu rather than the interval's (worst) low end.
         if v < 0.0 and u > 0.0:
-            return max(lo, -2.0 * u / v)
-        return max(lo, ALPHA_CAP * pp.platform.mu)
-    roots = np.roots([x, 0.0, -v, -2.0 * u])
-    candidates = [lo]
-    for root in roots:
-        if abs(root.imag) < 1e-9 * max(1.0, abs(root.real)) and root.real > lo:
-            candidates.append(float(root.real))
-    best = min(candidates, key=lambda t: waste2(t, pp))
-    return best
+            cubic = max(lo, -2.0 * u / v)
+        else:
+            cubic = max(lo, ALPHA_CAP * pp.platform.mu)
+        candidates = [cubic]
+    else:
+        roots = np.roots([x, 0.0, -v, -2.0 * u])
+        candidates = [lo]
+        for root in roots:
+            if abs(root.imag) < 1e-9 * max(1.0, abs(root.real)) \
+                    and root.real > lo:
+                candidates.append(float(root.real))
+    if cadence == "restart":
+        return min(candidates, key=lambda t: waste2(t, pp))
+
+    # Continued cadence: minimize the corrected objective numerically.
+    def f(t: float) -> float:
+        return waste2(t, pp, cadence="continue")
+
+    hi = max(ALPHA_CAP * pp.platform.mu, lo * 1.001, *candidates)
+    grid = list(np.geomspace(lo, hi, 512)) + candidates
+    grid = sorted(set(float(t) for t in grid))
+    i = min(range(len(grid)), key=lambda j: f(grid[j]))
+    a = grid[max(0, i - 1)]
+    b = grid[min(len(grid) - 1, i + 1)]
+    for _ in range(200):
+        m1 = a + (b - a) / 3.0
+        m2 = b - (b - a) / 3.0
+        if f(m1) <= f(m2):
+            b = m2
+        else:
+            a = m1
+    t_best = 0.5 * (a + b)
+    return min(grid[i], t_best, key=f)
 
 
-def optimal_period_with_prediction(pp: PredictedPlatform) -> tuple[float, float, bool]:
+def optimal_period_with_prediction(
+        pp: PredictedPlatform, *,
+        cadence: str = "restart") -> tuple[float, float, bool]:
     """Optimal period for the refined policy (§4.3).
 
     Returns (T*, waste(T*), use_predictions) where ``use_predictions`` tells
@@ -232,9 +330,14 @@ def optimal_period_with_prediction(pp: PredictedPlatform) -> tuple[float, float,
     When ``beta_lim(pp) < C`` the WASTE1 validity interval [C, C_p/p] is
     empty — any legal period sits past the breakpoint, so the policy always
     acts and only the WASTE2 branch exists.
+
+    ``cadence="continue"`` scores (and optimizes) the WASTE2 branch under
+    the engines' continued periodic cadence; the WASTE1 branch never acts
+    on predictions, so it needs no correction.
     """
-    tp = t_pred(pp)
-    w2 = waste2(tp, pp)
+    _check_cadence(cadence)
+    tp = t_pred(pp, cadence=cadence)
+    w2 = waste2(tp, pp, cadence=cadence)
     if beta_lim(pp) < pp.platform.c:
         return tp, w2, True
     tn = t_nopred(pp)

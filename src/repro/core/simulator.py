@@ -33,8 +33,20 @@ the paper:
     checkpoints of length C_p every ``window_period`` seconds while the
     window is open, bounding the work at risk to W_p = window_period - C_p.
 
-The engine is a small phase machine (WORK / CKPT / PROCKPT / DOWN / RECOVER)
-advanced event by event; between events it follows the periodic schedule.
+  * Silent data corruptions (arXiv:1310.8486): a ``SILENT`` trace event
+    corrupts the application state *latently* — execution continues, and
+    checkpoints taken while corrupted are corrupted too.  The corruption
+    is revealed by the next *verification* (``n_verify`` checks per
+    period, each costing ``verify_cost``; the last one guards the
+    periodic checkpoint) or by a detected fail-stop fault; detection
+    rolls back to the newest *clean* retained checkpoint (``keep_ckpts``
+    retained snapshots; rolling past every retained checkpoint restarts
+    from the job start) and pays one recovery R.  A corrupted final
+    checkpoint is caught by the end-of-job acceptance check.
+
+The engine is a small phase machine (WORK / CKPT / PROCKPT / DOWN /
+RECOVER / VERIFY) advanced event by event; between events it follows the
+periodic schedule.
 """
 
 from __future__ import annotations
@@ -46,7 +58,7 @@ from typing import Callable, Sequence
 
 import numpy as np
 
-from .traces import FALSE_PRED, FAULT_PRED, FAULT_UNPRED, EventTrace
+from .traces import FALSE_PRED, FAULT_PRED, FAULT_UNPRED, SILENT, EventTrace
 from .waste import Platform
 
 __all__ = [
@@ -62,11 +74,12 @@ __all__ = [
 ]
 
 # Phases of the execution machine.
-_WORK, _CKPT, _PROCKPT, _DOWN, _RECOVER = range(5)
+_WORK, _CKPT, _PROCKPT, _DOWN, _RECOVER, _VERIFY = range(6)
 
 # Event kinds inside the simulator queue (trace kinds + deferred faults).
 _EV_FAULT = 0        # an actual fault strikes now
 _EV_PREDICTION = 1   # a prediction (true or false) is announced for date t
+_EV_SILENT = 2       # a silent corruption strikes now (latent until detected)
 
 # _EV_FAULT payloads: trace faults are counted at pop; deferred faults of
 # true predictions were already counted at announcement.
@@ -147,6 +160,11 @@ class SimResult:
     time_recovery: float = 0.0     # recovery-only portion of time_down
     n_proactive_ckpts: int = 0     # completed proactive checkpoints
     n_rollbacks: int = 0           # faults that discarded positive progress
+    # Silent-error + verification diagnostics (arXiv:1310.8486).
+    n_silent: int = 0              # silent strikes that corrupted state
+    n_verifications: int = 0       # completed verification points
+    n_deep_rollbacks: int = 0      # detections past >= 1 corrupted ckpt
+    time_verify: float = 0.0       # completed verification time
     # Adaptive re-planning diagnostics (repro.predictors.estimator); the
     # sentinels keep non-adaptive runs comparable across engines.
     n_replans: int = 0
@@ -169,7 +187,9 @@ class _Machine:
     """Phase machine executing the periodic schedule between events."""
 
     def __init__(self, platform: Platform, cp: float, period,
-                 time_base: float, res: SimResult, *, sink=None) -> None:
+                 time_base: float, res: SimResult, *, sink=None,
+                 n_verify: int = 0, verify_cost: float = 0.0,
+                 keep_ckpts: int = 1) -> None:
         # ``period`` may be a float or a callable t -> T (dynamic policies,
         # e.g. hazard-aware periods for Weibull faults; see
         # benchmarks/beyond.py).  Evaluated at each period start.
@@ -199,6 +219,21 @@ class _Machine:
         self.win_end = -math.inf
         self.win_rem = math.inf  # work left until the next in-window prockpt
         self.win_wp = math.inf   # in-window work quantum (window_period - cp)
+        # Silent-error verification state (arXiv:1310.8486).  With
+        # ``n_verify`` k >= 1 the period's work splits into k chunks, each
+        # followed by a verification of length ``verify_cost``; the k-th
+        # verification guards the periodic checkpoint.  ``v_rem`` is inf
+        # when verification is off, so it never wins the work-chunk min.
+        self.n_verify = n_verify
+        self.vcost = verify_cost
+        self.keep = keep_ckpts
+        self.v_wp = (self.work_per_period / n_verify if n_verify >= 1
+                     else math.inf)
+        self.v_rem = self.v_wp
+        self.verify_then_ckpt = False
+        self.corrupted = False    # latent corruption since the last detection
+        self.saved_clean = 0.0    # newest *clean* retained progress (0 = start)
+        self.n_dirty = 0          # retained checkpoints written corrupted
 
     def _fresh_work(self) -> float:
         return min(self.work_per_period, self.time_base - self.saved)
@@ -210,21 +245,24 @@ class _Machine:
         while self.now < target and not self.finished:
             if self.phase == _WORK:
                 if self.w_rem <= 0.0:
-                    self._start_ckpt()
+                    self._finish_work()
                     continue
                 in_win = self.now < self.win_end
                 if in_win:
-                    dt = min(self.w_rem, self.win_rem,
+                    dt = min(self.w_rem, self.v_rem, self.win_rem,
                              self.win_end - self.now, target - self.now)
                 else:
-                    dt = min(self.w_rem, target - self.now)
+                    dt = min(self.w_rem, self.v_rem, target - self.now)
                 self.now += dt
                 self.done += dt
                 self.w_rem -= dt
+                self.v_rem -= dt
                 if in_win:
                     self.win_rem -= dt
                 if self.w_rem <= 0.0:
-                    self._start_ckpt()
+                    self._finish_work()
+                elif self.v_rem <= 0.0:
+                    self._start_verify(then_ckpt=False)
                 elif in_win:
                     if self.win_rem <= 0.0 and self.now < self.win_end:
                         self._start_prockpt()
@@ -240,11 +278,26 @@ class _Machine:
     def run_to_completion(self) -> None:
         self.advance_to(math.inf)
 
+    def _finish_work(self) -> None:
+        """End of the period's work: checkpoint, guarded by a verification
+        when the verification cadence is on (checkpoints are verified)."""
+        if self.n_verify >= 1:
+            self._start_verify(then_ckpt=True)
+        else:
+            self._start_ckpt()
+
     def _start_ckpt(self) -> None:
         self.phase = _CKPT
         self.phase_end = self.now + self.p.c
         if self.sink is not None:
             self.sink.emit(self.now, "ckpt_start")
+
+    def _start_verify(self, then_ckpt: bool) -> None:
+        self.phase = _VERIFY
+        self.phase_end = self.now + self.vcost
+        self.verify_then_ckpt = then_ckpt
+        if self.sink is not None:
+            self.sink.emit(self.now, "verify_start")
 
     def _start_prockpt(self) -> None:
         self.phase = _PROCKPT
@@ -256,14 +309,33 @@ class _Machine:
         self.win_end = -math.inf
         self.win_rem = math.inf
 
+    def _record_save(self) -> None:
+        """Retained-ring bookkeeping at any completed checkpoint: a save
+        while corrupted writes a *dirty* snapshot; once the dirty snapshots
+        fill the retained ring (``keep``), the clean one is evicted and
+        detection will restart from the job start."""
+        if self.corrupted:
+            self.n_dirty += 1
+            if self.n_dirty >= self.keep:
+                self.saved_clean = 0.0
+        else:
+            self.saved_clean = self.done
+            self.n_dirty = 0
+
     def _complete_phase(self) -> None:
         if self.phase == _CKPT:
             self.res.n_periodic_ckpts += 1
             self.res.time_ckpt += self.p.c
             self.saved = self.done
+            self._record_save()
             if self.sink is not None:
                 self.sink.emit(self.now, "ckpt_end", dur=self.p.c)
             if self.saved >= self.time_base - 1e-9:
+                if self.corrupted:
+                    # End-of-job acceptance check: a corrupted final
+                    # checkpoint is rejected, not shipped.
+                    self._detect()
+                    return
                 self.finished = True
                 return
             if self.now < self.win_end:
@@ -273,6 +345,7 @@ class _Machine:
             self.res.time_prockpt += self.cp
             self.res.n_proactive_ckpts += 1
             self.saved = self.done
+            self._record_save()
             if self.sink is not None:
                 self.sink.emit(self.now, "prockpt_end", dur=self.cp)
             # Period continues (paper §4.1); offsets for later predictions are
@@ -280,9 +353,24 @@ class _Machine:
             self.period_start = self.now
             self.phase = _WORK
             self.phase_end = math.inf
-            # In-window cadence restarts from every save.
+            # In-window and verification cadences restart from every save.
             if self.now < self.win_end:
                 self.win_rem = self.win_wp
+            self.v_rem = self.v_wp
+        elif self.phase == _VERIFY:
+            self.res.time_verify += self.vcost
+            self.res.n_verifications += 1
+            if self.sink is not None:
+                self.sink.emit(self.now, "verify_end", dur=self.vcost)
+            if self.corrupted:
+                self._detect()
+                return
+            self.v_rem = self.v_wp
+            if self.verify_then_ckpt:
+                self._start_ckpt()
+            else:
+                self.phase = _WORK
+                self.phase_end = math.inf
         elif self.phase == _DOWN:
             self.res.time_down += self.p.d
             self.res.time_downtime += self.p.d
@@ -304,12 +392,39 @@ class _Machine:
         self.work_per_period = max(1e-9,
                                    self.period_fn(self.now) - self.p.c)
         self.w_rem = self._fresh_work()
+        if self.n_verify >= 1:
+            self.v_wp = self.work_per_period / self.n_verify
+        self.v_rem = self.v_wp
+
+    def _detect(self) -> None:
+        """A verification (or acceptance check) caught latent corruption:
+        roll back to the newest clean retained checkpoint and pay one
+        recovery R (the platform is up — no downtime D)."""
+        lost = self.done - self.saved_clean
+        self.res.time_lost += lost
+        if lost > 0.0:
+            self.res.n_rollbacks += 1
+        if self.n_dirty > 0:
+            self.res.n_deep_rollbacks += 1
+        if self.sink is not None:
+            self.sink.emit(self.now, "silent_detect", lost=lost,
+                           saved=self.saved_clean, n_dirty=self.n_dirty)
+            if lost > 0.0:
+                self.sink.emit(self.now, "re_exec", dur=lost)
+            self.sink.emit(self.now, "recover_start", dur=self.p.r)
+        self.done = self.saved_clean
+        self.saved = self.saved_clean
+        self.n_dirty = 0
+        self.corrupted = False
+        self.phase = _RECOVER
+        self.phase_end = self.now + self.p.r
+        self._close_window()
 
     # -- event reactions ------------------------------------------------------
 
     def _phase_duration(self, phase: int) -> float:
         return {_CKPT: self.p.c, _PROCKPT: self.cp, _DOWN: self.p.d,
-                _RECOVER: self.p.r}.get(phase, 0.0)
+                _RECOVER: self.p.r, _VERIFY: self.vcost}.get(phase, 0.0)
 
     def fault(self, t: float) -> None:
         """An actual fault strikes at absolute time t (requires now == t).
@@ -321,13 +436,19 @@ class _Machine:
         as base + ckpt + prockpt + lost + down.
         """
         self.res.n_faults_hit += 1
-        lost = self.done - self.saved
+        # A detected fault reveals latent corruption: when corrupted
+        # checkpoints are retained, roll back past them to the newest
+        # clean snapshot (arXiv:1310.8486); a volatile-only corruption
+        # (n_dirty == 0) is wiped by the ordinary rollback.
+        deep = self.n_dirty > 0
+        base = self.saved_clean if deep else self.saved
+        lost = self.done - base
         # Partial phase destroyed by the fault.
-        if self.phase in (_CKPT, _PROCKPT, _DOWN, _RECOVER) \
+        if self.phase in (_CKPT, _PROCKPT, _VERIFY, _DOWN, _RECOVER) \
                 and self.phase_end != math.inf:
             elapsed = self._phase_duration(self.phase) \
                 - (self.phase_end - self.now)
-            if self.phase in (_CKPT, _PROCKPT):
+            if self.phase in (_CKPT, _PROCKPT, _VERIFY):
                 lost += max(0.0, elapsed)
             elif self.phase == _DOWN:
                 self.res.time_down += max(0.0, elapsed)
@@ -338,6 +459,11 @@ class _Machine:
         self.res.time_lost += lost
         if lost > 0.0:
             self.res.n_rollbacks += 1
+        if deep:
+            self.res.n_deep_rollbacks += 1
+            self.saved = self.saved_clean
+            self.n_dirty = 0
+        self.corrupted = False
         if self.sink is not None:
             self.sink.emit(t, "fault", phase=self.phase)
             if lost > 0.0:
@@ -350,6 +476,18 @@ class _Machine:
         self.phase_end = t + self.p.d
         # A fault ends any active prediction window.
         self._close_window()
+
+    def silent(self, t: float) -> None:
+        """A silent corruption strikes at absolute time t (now == t).
+
+        Latent: only marks the state corrupted — work, checkpoints and
+        verifications in progress continue; nothing is charged until a
+        verification or a detected fault reveals it.  Strikes while the
+        platform is down or recovering touch no application state.
+        """
+        if self.phase in (_WORK, _CKPT, _PROCKPT, _VERIFY):
+            self.res.n_silent += 1
+            self.corrupted = True
 
     def try_proactive(self, pred_date: float) -> bool:
         """Attempt a proactive checkpoint completing exactly at ``pred_date``.
@@ -375,6 +513,9 @@ def simulate(
     inexact_window: float = 0.0,
     window_mode: str = "instant",
     window_period: float = 0.0,
+    n_verify: int = 0,
+    verify_cost: float = 0.0,
+    keep_ckpts: int = 1,
     start: float = 0.0,
     rng: np.random.Generator | None = None,
     adaptive=None,
@@ -400,6 +541,16 @@ def simulate(
         window is open.
       window_period: in-window proactive period T_p (> C_p); required for
         ``window_mode="within"``.
+      n_verify: verifications per period k (arXiv:1310.8486): the period's
+        work splits into k chunks, each ending in a verification; the last
+        one guards the periodic checkpoint.  0 disables verification —
+        silent corruptions are then only caught by detected faults and the
+        end-of-job acceptance check.
+      verify_cost: duration V of one verification (>= 0; 0 models a free
+        detector, still revealing latent corruption).
+      keep_ckpts: retained-checkpoint depth: how many snapshots stay
+        restorable.  Detection rolls back to the newest clean one; if all
+        retained snapshots are corrupted, the job restarts from scratch.
       start: job start offset into the trace (paper: one year).
       rng: used for the trust policy randomness and inexact fault dates.
       adaptive: an :class:`repro.predictors.AdaptiveConfig` to run the
@@ -426,6 +577,14 @@ def simulate(
     if within and window_period <= cp:
         raise ValueError(f"window_period {window_period} <= C_p {cp}: "
                          f"no work fits between in-window checkpoints")
+    n_verify = int(n_verify)
+    if n_verify < 0:
+        raise ValueError(f"n_verify must be >= 0, got {n_verify}")
+    if verify_cost < 0.0 or not math.isfinite(verify_cost):
+        raise ValueError(f"verify_cost must be finite and >= 0, "
+                         f"got {verify_cost}")
+    if keep_ckpts < 1:
+        raise ValueError(f"keep_ckpts must be >= 1, got {keep_ckpts}")
 
     # Adaptive re-planning state (repro.predictors.estimator): integer
     # outcome counters, the (r, p) last planned on, and the live plan.
@@ -460,7 +619,9 @@ def simulate(
         ad_planned_mu = platform.mu
 
     res = SimResult(makespan=0.0, time_base=time_base)
-    m = _Machine(platform, cp, period, time_base, res, sink=sink)
+    m = _Machine(platform, cp, period, time_base, res, sink=sink,
+                 n_verify=n_verify, verify_cost=verify_cost,
+                 keep_ckpts=keep_ckpts)
 
     def _ad_replan() -> None:
         nonlocal ad_thr, ad_planned_r, ad_planned_p, ad_period, ad_planned_mu
@@ -497,6 +658,8 @@ def simulate(
         w = -1.0 if wins is None else float(wins[i])
         if k == FAULT_UNPRED:
             queue.append((float(t), seq, _EV_FAULT, _FAULT_FROM_TRACE, 0.0))
+        elif k == SILENT:
+            queue.append((float(t), seq, _EV_SILENT, 0, 0.0))
         else:
             queue.append((float(t), seq, _EV_PREDICTION, int(k), w))
         seq += 1
@@ -504,6 +667,12 @@ def simulate(
 
     while queue and not m.finished:
         t, _, ev, payload, w = heapq.heappop(queue)
+        if ev == _EV_SILENT:
+            m.advance_to(t)
+            if m.finished:
+                break
+            m.silent(t)
+            continue
         if ev == _EV_FAULT:
             mu_observed = False
             if adaptive is not None and ad_est_mu:

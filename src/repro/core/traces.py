@@ -18,6 +18,10 @@ Event encoding used throughout: structured arrays (time, kind) with kinds
   FAULT_PRED    actual fault, predicted (prediction date == fault date; the
                 simulator adds the uncertainty window for InexactPrediction)
   FALSE_PRED    prediction that does not materialize
+  SILENT        silent data corruption (arXiv:1310.8486): the strike is
+                *latent* — the simulator only learns about it at the next
+                verification point (or a detected fail-stop fault), and
+                rolls back past any checkpoints taken while corrupted
 
 Prediction *windows* (companion paper, arXiv:1302.4558): with ``window=I``
 each prediction event additionally carries the announced interval length I
@@ -39,6 +43,7 @@ __all__ = [
     "FAULT_UNPRED",
     "FAULT_PRED",
     "FALSE_PRED",
+    "SILENT",
     "EventTrace",
     "Distribution",
     "Exponential",
@@ -58,6 +63,7 @@ __all__ = [
 FAULT_UNPRED = 0
 FAULT_PRED = 1
 FALSE_PRED = 2
+SILENT = 3
 
 
 # ---------------------------------------------------------------------------
@@ -283,7 +289,7 @@ class EventTrace:
     """
 
     times: np.ndarray  # float64, ascending
-    kinds: np.ndarray  # int8, FAULT_UNPRED / FAULT_PRED / FALSE_PRED
+    kinds: np.ndarray  # int8, FAULT_UNPRED/FAULT_PRED/FALSE_PRED/SILENT
     horizon: float
     windows: np.ndarray | None = None  # float64 per-event window length
 
@@ -295,11 +301,22 @@ class EventTrace:
 
     @property
     def fault_times(self) -> np.ndarray:
-        return self.times[self.kinds != FALSE_PRED]
+        """Fail-stop fault dates (silent corruptions are not fail-stop)."""
+        return self.times[(self.kinds == FAULT_UNPRED)
+                          | (self.kinds == FAULT_PRED)]
 
     @property
     def n_faults(self) -> int:
-        return int(np.sum(self.kinds != FALSE_PRED))
+        return int(np.sum((self.kinds == FAULT_UNPRED)
+                          | (self.kinds == FAULT_PRED)))
+
+    @property
+    def silent_times(self) -> np.ndarray:
+        return self.times[self.kinds == SILENT]
+
+    @property
+    def n_silent(self) -> int:
+        return int(np.sum(self.kinds == SILENT))
 
     def empirical_mtbf(self) -> float:
         n = self.n_faults
@@ -318,6 +335,8 @@ def make_event_trace(
     n_processors: int | None = None,
     window: float = 0.0,
     predictor_model=None,
+    silent_mu: float | None = None,
+    silent_dist: Distribution | None = None,
 ) -> EventTrace:
     """Build the merged event trace for one simulated instance (paper §5.1).
 
@@ -339,6 +358,12 @@ def make_event_trace(
     traces identical to before.  Per-event windows emitted by the
     predictor model (e.g. ``lead_time`` sampled leads) take precedence
     over the constant stamping.
+
+    ``silent_mu`` (finite, positive) adds a silent-data-corruption stream
+    (kind ``SILENT``) drawn from ``silent_dist`` (default Exponential)
+    rescaled to that platform-level MTBF.  The stream is drawn *after* all
+    other streams, so ``silent_mu=None`` (or infinite) reproduces the
+    silent-free trace bit-for-bit from the same generator state.
     """
     if n_processors:
         faults = superposed_trace(fault_dist.rescaled(mu * n_processors),
@@ -353,26 +378,43 @@ def make_event_trace(
         faults, mu=mu, horizon=horizon, rng=rng,
         false_dist=false_pred_dist or fault_dist)
 
+    silents = _silent_stream(silent_mu, silent_dist, horizon, rng)
     return _merge_events(faults, stream.kinds, stream.false_times, horizon,
                          window=window, true_windows=stream.true_windows,
-                         false_windows=stream.false_windows)
+                         false_windows=stream.false_windows, silents=silents)
+
+
+def _silent_stream(silent_mu: float | None, silent_dist: Distribution | None,
+                   horizon: float, rng: np.random.Generator
+                   ) -> np.ndarray | None:
+    """The silent-corruption renewal stream, or None when the rate is 0."""
+    if silent_mu is None or not math.isfinite(silent_mu):
+        return None
+    if silent_mu <= 0.0:
+        raise ValueError(f"silent_mu must be positive, got {silent_mu}")
+    dist = (silent_dist or Exponential(1.0)).rescaled(silent_mu)
+    return renewal_trace(dist, horizon, rng)
 
 
 def _merge_events(faults: np.ndarray, kinds: np.ndarray,
                   false_preds: np.ndarray, horizon: float,
                   window: float = 0.0,
                   true_windows: np.ndarray | None = None,
-                  false_windows: np.ndarray | None = None) -> EventTrace:
-    times = np.concatenate([faults, false_preds])
+                  false_windows: np.ndarray | None = None,
+                  silents: np.ndarray | None = None) -> EventTrace:
+    if silents is None:
+        silents = np.empty(0, dtype=np.float64)
+    times = np.concatenate([faults, false_preds, silents])
     all_kinds = np.concatenate(
-        [kinds, np.full(false_preds.size, FALSE_PRED, dtype=np.int8)])
+        [kinds, np.full(false_preds.size, FALSE_PRED, dtype=np.int8),
+         np.full(silents.size, SILENT, dtype=np.int8)])
     order = np.argsort(times, kind="stable")
     times, all_kinds = times[order], all_kinds[order]
     windows = None
     if window > 0.0 or true_windows is not None or false_windows is not None:
         # Prediction events (true and false) announce [t, t+I]; plain
-        # faults carry no window.  Per-event model windows win over the
-        # constant stamping.
+        # faults and silent corruptions carry no window.  Per-event model
+        # windows win over the constant stamping.
         wf = (np.asarray(true_windows, dtype=np.float64)
               if true_windows is not None
               else np.full(kinds.size, float(window)))
@@ -380,7 +422,7 @@ def _merge_events(faults: np.ndarray, kinds: np.ndarray,
         wfp = (np.asarray(false_windows, dtype=np.float64)
                if false_windows is not None
                else np.full(false_preds.size, float(window)))
-        windows = np.concatenate([wf, wfp])[order]
+        windows = np.concatenate([wf, wfp, np.zeros(silents.size)])[order]
     return EventTrace(times, all_kinds, horizon, windows=windows)
 
 
@@ -397,6 +439,8 @@ def make_event_trace_bank(
     n_traces: int = 1,
     window: float = 0.0,
     predictor_model=None,
+    silent_mu: float | None = None,
+    silent_dist: Distribution | None = None,
 ) -> list[EventTrace]:
     """A whole bank of merged event traces sampled from one generator.
 
@@ -422,10 +466,20 @@ def make_event_trace_bank(
         fault_bank, mu=mu, horizon=horizon, rng=rng,
         false_dist=false_pred_dist or fault_dist)
 
+    # Silent streams are drawn last (one bank-level wave) so silent-free
+    # banks stay bit-for-bit identical from the same generator state.
+    if silent_mu is not None and math.isfinite(silent_mu):
+        if silent_mu <= 0.0:
+            raise ValueError(f"silent_mu must be positive, got {silent_mu}")
+        sdist = (silent_dist or Exponential(1.0)).rescaled(silent_mu)
+        silent_bank = renewal_trace_bank(sdist, horizon, rng, n_traces)
+    else:
+        silent_bank = [None] * n_traces
+
     return [_merge_events(f, s.kinds, s.false_times, horizon, window=window,
                           true_windows=s.true_windows,
-                          false_windows=s.false_windows)
-            for f, s in zip(fault_bank, streams)]
+                          false_windows=s.false_windows, silents=sil)
+            for f, s, sil in zip(fault_bank, streams, silent_bank)]
 
 
 def lanl_like_log(rng: np.random.Generator, n_intervals: int = 3010,

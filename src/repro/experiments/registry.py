@@ -301,6 +301,56 @@ def _window_proactive(scenario: ScenarioSpec, window: float | None = None,
                            mode="within", window_period=window_period)
 
 
+# -- silent-error strategies (arXiv:1310.8486; core/silent.py) --------------
+
+def _scenario_verify(scenario: ScenarioSpec, verify_cost: float | None,
+                     keep_ckpts: int | None) -> tuple[float, int]:
+    from repro.core.silent import DEFAULT_KEEP_CKPTS
+    vc = scenario.verify_cost if verify_cost is None else float(verify_cost)
+    if keep_ckpts is None:
+        # The scenario default of 1 is the fail-stop value; verifying
+        # strategies need depth >= 2 to survive a corrupted save.
+        kc = max(scenario.keep_ckpts, DEFAULT_KEEP_CKPTS)
+    else:
+        kc = int(keep_ckpts)
+    return vc, kc
+
+
+@register_strategy("silent_ignore")
+def _silent_ignore(scenario: ScenarioSpec) -> policies.Strategy:
+    """The fail-stop RFO baseline running blind on the silent stream (no
+    verifications; corruption is only caught by the acceptance check)."""
+    from repro.core.silent import silent_strategy
+    return silent_strategy(scenario.platform, scenario.silent_mu,
+                           mode="ignore")
+
+
+@register_strategy("silent_verify")
+def _silent_verify(scenario: ScenarioSpec, verify_cost: float | None = None,
+                   keep_ckpts: int | None = None,
+                   k_max: int = 16) -> policies.Strategy:
+    """The jointly optimal (T*, k*) verification plan, never trusting
+    predictions (core/silent.py)."""
+    from repro.core.silent import silent_strategy
+    vc, kc = _scenario_verify(scenario, verify_cost, keep_ckpts)
+    return silent_strategy(scenario.platform, scenario.silent_mu, vc,
+                           mode="verify", k_max=k_max, keep_ckpts=kc)
+
+
+@register_strategy("silent_verify_pred")
+def _silent_verify_pred(scenario: ScenarioSpec,
+                        verify_cost: float | None = None,
+                        keep_ckpts: int | None = None,
+                        k_max: int = 16) -> policies.Strategy:
+    """The combined silent + prediction plan (Theorem-1 threshold trust
+    on top of the (T*, k*) verification cadence)."""
+    from repro.core.silent import silent_strategy
+    vc, kc = _scenario_verify(scenario, verify_cost, keep_ckpts)
+    return silent_strategy(scenario.platform, scenario.silent_mu, vc,
+                           mode="verify_pred", pp=scenario.pp, k_max=k_max,
+                           keep_ckpts=kc)
+
+
 @register_strategy("adaptive")
 def _adaptive(scenario: ScenarioSpec, prior_recall: float | None = None,
               prior_precision: float | None = None, min_preds: int = 32,

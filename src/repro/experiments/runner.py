@@ -116,7 +116,13 @@ _MIN_PARALLEL_SIMS = 16
 #     bitwise contract to float32 tolerances, so their results must never
 #     alias a CPU store).  v5 stores hash differently and are ignored —
 #     invalidated, never misread.
-_EVAL_CACHE_VERSION = 6
+# v7: candidate keys grew the silent-error verification axis
+#     (n_verify/verify_cost/keep_ckpts) and scenarios the silent_mu_ind
+#     field (PR 10); v6 stores hash differently and are ignored —
+#     invalidated, never misread — and a v6-format 6-element candidate key
+#     inside a store file fails the 9-element decode and degrades the
+#     whole store to empty.
+_EVAL_CACHE_VERSION = 7
 
 
 def _env_flag(name: str) -> bool:
@@ -192,20 +198,23 @@ def _candidate_key(strategy: Strategy) -> tuple:
         period = _IdKey(period)
     return (period, _trust_key(strategy.trust), strategy.inexact_window,
             strategy.window_mode, strategy.window_period,
-            _adaptive_key(strategy.adaptive))
+            _adaptive_key(strategy.adaptive), strategy.n_verify,
+            strategy.verify_cost, strategy.keep_ckpts)
 
 
 def _persistable_key(key: tuple) -> str | None:
     """Canonical JSON form of a candidate key, or None if the candidate has
     no value semantics (callable period, opaque trust policy)."""
-    period, trust, window, wmode, wperiod, adaptive = key
+    (period, trust, window, wmode, wperiod, adaptive,
+     n_verify, verify_cost, keep_ckpts) = key
     if not isinstance(period, (int, float)):
         return None
     if any(isinstance(part, _IdKey) for part in trust) \
             or isinstance(adaptive, _IdKey):
         return None
     return json.dumps([period, list(trust), window, wmode, wperiod,
-                       None if adaptive is None else list(adaptive)])
+                       None if adaptive is None else list(adaptive),
+                       n_verify, verify_cost, keep_ckpts])
 
 
 def default_cache_dir() -> Path:
@@ -259,9 +268,11 @@ class EvalCache:
 
     @staticmethod
     def _decode_key(ckey_str: str) -> tuple:
-        period, trust, window, wmode, wperiod, adaptive = json.loads(ckey_str)
+        (period, trust, window, wmode, wperiod, adaptive,
+         n_verify, verify_cost, keep_ckpts) = json.loads(ckey_str)
         return (period, tuple(trust), window, wmode, wperiod,
-                None if adaptive is None else tuple(adaptive))
+                None if adaptive is None else tuple(adaptive),
+                n_verify, verify_cost, keep_ckpts)
 
     def _read_store(self) -> dict:
         """The on-disk makespan map; any unreadable or wrong-shape file
@@ -405,7 +416,10 @@ def _simulate_pair(trace: EventTrace, platform: Platform, time_base: float,
                    inexact_window=strategy.inexact_window,
                    window_mode=strategy.window_mode,
                    window_period=strategy.window_period,
-                   adaptive=strategy.adaptive, rng=rng)
+                   adaptive=strategy.adaptive,
+                   n_verify=strategy.n_verify,
+                   verify_cost=strategy.verify_cost,
+                   keep_ckpts=strategy.keep_ckpts, rng=rng)
     return res.makespan
 
 
@@ -526,6 +540,10 @@ def evaluate_strategies(
             window_periods=[strategies[si].window_period
                             for si, _ in lane_items],
             adaptives=[strategies[si].adaptive for si, _ in lane_items],
+            n_verifies=[strategies[si].n_verify for si, _ in lane_items],
+            verify_costs=[strategies[si].verify_cost
+                          for si, _ in lane_items],
+            keep_ckpts=[strategies[si].keep_ckpts for si, _ in lane_items],
             seeds=seed + 7919 * tr_idx,
             backend="jax" if engine == "jax" else "numpy")
         for (si, ti), m in zip(lane_items, lane_ms):

@@ -180,6 +180,15 @@ class ScenarioSpec:
     window: float = 0.0
     predictor: PredictorSpec | None = None
     model_order: str = "first"
+    # Silent-error / verification axis (arXiv:1310.8486; core/silent.py):
+    # ``silent_mu_ind`` is the per-processor silent-corruption MTBF (None =
+    # no silent stream, bit-for-bit the legacy traces); the remaining three
+    # are the scenario's default verification knobs, consulted by the
+    # silent strategies the way ``window`` is by the window family.
+    silent_mu_ind: float | None = None
+    verify_cost: float = 0.0
+    n_verify: int = 0
+    keep_ckpts: int = 1
     cp_ratio: float = 1.0
     c: float = 600.0
     r: float = 600.0
@@ -203,12 +212,30 @@ class ScenarioSpec:
         if self.model_order not in ("first", "exact"):
             raise ValueError(f"model_order must be 'first' or 'exact', "
                              f"got {self.model_order!r}")
+        if self.silent_mu_ind is not None and not self.silent_mu_ind > 0:
+            raise ValueError(f"silent_mu_ind must be positive or None, "
+                             f"got {self.silent_mu_ind}")
+        if not self.verify_cost >= 0.0:
+            raise ValueError(f"verify_cost must be >= 0, "
+                             f"got {self.verify_cost}")
+        if self.n_verify < 0:
+            raise ValueError(f"n_verify must be >= 0, got {self.n_verify}")
+        if self.keep_ckpts < 1:
+            raise ValueError(f"keep_ckpts must be >= 1, "
+                             f"got {self.keep_ckpts}")
 
     # -- derived quantities --------------------------------------------------
 
     @property
     def mu(self) -> float:
         return self.mu_ind / self.n
+
+    @property
+    def silent_mu(self) -> float | None:
+        """Platform-level silent-corruption MTBF (None = stream off)."""
+        if self.silent_mu_ind is None:
+            return None
+        return self.silent_mu_ind / self.n
 
     @property
     def platform(self) -> Platform:
@@ -268,7 +295,8 @@ class ScenarioSpec:
         tr = make_event_trace(
             self.dist.build(), self.mu, self.recall, self.precision,
             self.horizon, rng, false_pred_dist=fdist, n_processors=n_streams,
-            window=self.window, predictor_model=self._predictor_model())
+            window=self.window, predictor_model=self._predictor_model(),
+            silent_mu=self.silent_mu)
         return self._shift(tr)
 
     def make_traces(self, n_traces: int | None = None,
@@ -296,7 +324,8 @@ class ScenarioSpec:
             self.dist.build(), self.mu, self.recall, self.precision,
             self.horizon, rng, false_pred_dist=fdist,
             n_processors=n_streams, n_traces=n, window=self.window,
-            predictor_model=self._predictor_model())
+            predictor_model=self._predictor_model(),
+            silent_mu=self.silent_mu)
         return [self._shift(tr) for tr in bank]
 
     # -- field update (dotted paths; how sweeps and the CLI set fields) ------

@@ -42,21 +42,31 @@ __all__ = ["F_FIELDS", "I_FIELDS", "N_F", "N_I", "event_step",
 
 # Phase codes (repro.core.simulator's private constants, frozen here so the
 # kernel module has no engine import cycle).
-_WORK, _CKPT, _PROCKPT, _DOWN, _RECOVER = range(5)
+_WORK, _CKPT, _PROCKPT, _DOWN, _RECOVER, _VERIFY = range(6)
 
-# Float64 state rows.
+# Float64 state rows.  The silent-error rows (arXiv:1310.8486): v_wp/v_rem
+# drive the per-period verification cadence (+inf on verification-off
+# lanes, so the work-chunk min is untouched), vcost is the static per-lane
+# verification duration, saved_clean the newest clean retained progress.
 F_FIELDS = ("now", "done", "saved", "period_start", "phase_end", "wpp",
             "w_rem", "win_end", "win_rem", "target", "time_ckpt",
             "time_prockpt", "time_down", "period", "lane_wwp",
-            "time_downtime", "time_recovery")
+            "time_downtime", "time_recovery", "time_lost", "time_verify",
+            "v_wp", "v_rem", "vcost", "saved_clean")
 (F_NOW, F_DONE, F_SAVED, F_PSTART, F_PHEND, F_WPP, F_WREM, F_WINEND,
  F_WINREM, F_TARGET, F_TCKPT, F_TPROC, F_TDOWN, F_PERIOD, F_WWP,
- F_TDOWNT, F_TRECOV) = range(17)
+ F_TDOWNT, F_TRECOV, F_TLOST, F_TVERIFY, F_VWP, F_VREM, F_VCOST,
+ F_SVCLEAN) = range(23)
 N_F = len(F_FIELDS)
 
-# Int32 state rows.
-I_FIELDS = ("phase", "finished", "n_periodic_ckpts", "n_proactive_ckpts")
-I_PHASE, I_FIN, I_NCKPT, I_NPROC = range(4)
+# Int32 state rows (n_verify/keep_ckpts are static per-lane knobs;
+# corrupted/verify_then_ckpt are 0/1 flags).
+I_FIELDS = ("phase", "finished", "n_periodic_ckpts", "n_proactive_ckpts",
+            "n_rollbacks", "n_verifications", "n_deep_rollbacks",
+            "n_dirty", "corrupted", "verify_then_ckpt", "n_verify",
+            "keep_ckpts")
+(I_PHASE, I_FIN, I_NCKPT, I_NPROC, I_NROLL, I_NVERIF, I_NDEEP, I_NDIRTY,
+ I_CORR, I_VTC, I_NV, I_KEEP) = range(12)
 N_I = len(I_FIELDS)
 
 LANE_BLOCK = 1024
@@ -80,26 +90,49 @@ def _advance_math(fs, is_, *, c: float, cp: float, d: float, r: float,
     phase_end = fs[F_PHEND]
     win_end = fs[F_WINEND]
     win_rem = fs[F_WINREM]
+    vcost = fs[F_VCOST]
+    v_wp = fs[F_VWP]
+    v_rem = fs[F_VREM]
+    saved_clean = fs[F_SVCLEAN]
+    nv = is_[I_NV]
+    keep = is_[I_KEEP]
+    verify_on = nv >= 1
+    corrupted = is_[I_CORR] != 0
+    vtc = is_[I_VTC] != 0
+    n_dirty = is_[I_NDIRTY]
 
     adv = ~finished & (now < target)
     in_work = adv & (phase == _WORK)
-    wz = in_work & (fs[F_WREM] <= 0.0)       # degenerate: straight to ckpt
-    phase = jnp.where(wz, _CKPT, phase)
-    phase_end = jnp.where(wz, now + c, phase_end)
+    wz = in_work & (fs[F_WREM] <= 0.0)       # degenerate: straight to save
+    wz_v = wz & verify_on
+    phase = jnp.where(wz_v, _VERIFY, jnp.where(wz, _CKPT, phase))
+    phase_end = jnp.where(wz, now + jnp.where(verify_on, vcost, c),
+                          phase_end)
+    vtc = jnp.where(wz_v, True, vtc)
 
     ww = in_work & ~wz
     in_win = ww & (now < win_end)
     dt = jnp.minimum(fs[F_WREM], target - now)
+    dt = jnp.minimum(dt, v_rem)
     cap = jnp.where(in_win, jnp.minimum(win_rem, win_end - now), jnp.inf)
     dt = jnp.minimum(dt, cap)
     now = jnp.where(ww, now + dt, now)
     done = jnp.where(ww, fs[F_DONE] + dt, fs[F_DONE])
     w_rem = jnp.where(ww, fs[F_WREM] - dt, fs[F_WREM])
+    v_rem = jnp.where(ww, v_rem - dt, v_rem)
     win_rem = jnp.where(in_win, win_rem - dt, win_rem)
     fin_work = ww & (w_rem <= 0.0)
-    phase = jnp.where(fin_work, _CKPT, phase)
-    phase_end = jnp.where(fin_work, now + c, phase_end)
-    live = ww & (w_rem > 0.0) & in_win
+    fw_v = fin_work & verify_on
+    phase = jnp.where(fw_v, _VERIFY, jnp.where(fin_work, _CKPT, phase))
+    phase_end = jnp.where(fin_work, now + jnp.where(verify_on, vcost, c),
+                          phase_end)
+    vtc = jnp.where(fw_v, True, vtc)
+    # Intermediate verification due before the period's work is done.
+    vdue = ww & (w_rem > 0.0) & (v_rem <= 0.0)
+    phase = jnp.where(vdue, _VERIFY, phase)
+    phase_end = jnp.where(vdue, now + vcost, phase_end)
+    vtc = jnp.where(vdue, False, vtc)
+    live = ww & (w_rem > 0.0) & (v_rem > 0.0) & in_win
     # In-window proactive checkpoint due.
     pro = live & (win_rem <= 0.0) & (now < win_end)
     phase = jnp.where(pro, _PROCKPT, phase)
@@ -117,20 +150,52 @@ def _advance_math(fs, is_, *, c: float, cp: float, d: float, r: float,
     n_ckpts = is_[I_NCKPT] + ck
     time_ckpt = fs[F_TCKPT] + jnp.where(ck, c, 0.0)
     saved = jnp.where(ck, done, fs[F_SAVED])
-    fin = ck & (saved >= fin_thresh)
-    finished = finished | fin
-    act = ck & (now < win_end)
-    win_rem = jnp.where(act, fs[F_WWP], win_rem)
 
     pk = complete & (ph0 == _PROCKPT)
     n_prockpts = is_[I_NPROC] + pk
     time_prockpt = fs[F_TPROC] + jnp.where(pk, cp, 0.0)
     saved = jnp.where(pk, done, saved)
+
+    # Retained-checkpoint ring update (shared by periodic + proactive
+    # saves): a corrupted save is dirty — once the ring holds only dirty
+    # snapshots the newest clean state is the job start.
+    sv = ck | pk
+    dirty_save = sv & corrupted
+    n_dirty = n_dirty + dirty_save
+    saved_clean = jnp.where(dirty_save & (n_dirty >= keep), 0.0,
+                            saved_clean)
+    clean_save = sv & ~corrupted
+    saved_clean = jnp.where(clean_save, done, saved_clean)
+    n_dirty = jnp.where(clean_save, 0, n_dirty)
+
+    # Final-checkpoint acceptance check: a corrupted lane at the end of
+    # the job detects instead of finishing.
+    at_end = ck & (saved >= fin_thresh)
+    det_ck = at_end & corrupted
+    fin = at_end & ~corrupted
+    finished = finished | fin
+    act = ck & (now < win_end)
+    win_rem = jnp.where(act, fs[F_WWP], win_rem)
+
     period_start = jnp.where(pk, now, fs[F_PSTART])
     phase = jnp.where(pk, _WORK, phase)
     phase_end = jnp.where(pk, jnp.inf, phase_end)
+    v_rem = jnp.where(pk, v_wp, v_rem)
     act = pk & (now < win_end)
     win_rem = jnp.where(act, fs[F_WWP], win_rem)
+
+    vf = complete & (ph0 == _VERIFY)
+    time_verify = fs[F_TVERIFY] + jnp.where(vf, vcost, 0.0)
+    n_verifs = is_[I_NVERIF] + vf
+    det_vf = vf & corrupted
+    ok = vf & ~corrupted
+    v_rem = jnp.where(ok, v_wp, v_rem)
+    tc = ok & vtc
+    phase = jnp.where(tc, _CKPT, phase)
+    phase_end = jnp.where(tc, now + c, phase_end)
+    wk = ok & ~vtc
+    phase = jnp.where(wk, _WORK, phase)
+    phase_end = jnp.where(wk, jnp.inf, phase_end)
 
     dn = complete & (ph0 == _DOWN)
     time_down = fs[F_TDOWN] + jnp.where(dn, d, 0.0)
@@ -141,23 +206,52 @@ def _advance_math(fs, is_, *, c: float, cp: float, d: float, r: float,
     time_down = time_down + jnp.where(rc, r, 0.0)
     time_recovery = fs[F_TRECOV] + jnp.where(rc, r, 0.0)
 
-    renew = (ck & ~fin) | rc
+    renew = (ck & ~at_end) | rc
     phase = jnp.where(renew, _WORK, phase)
     phase_end = jnp.where(renew, jnp.inf, phase_end)
     period_start = jnp.where(renew, now, period_start)
     wpp = jnp.where(renew, jnp.maximum(1e-9, fs[F_PERIOD] - c), fs[F_WPP])
     w_rem = jnp.where(renew, jnp.minimum(wpp, time_base - saved), w_rem)
+    v_wp = jnp.where(renew & verify_on,
+                     wpp / jnp.maximum(nv, 1).astype(wpp.dtype), v_wp)
+    v_rem = jnp.where(renew, v_wp, v_rem)
+
+    # Late detection (verify completion, or the final acceptance check,
+    # while corrupted): roll back past every dirty snapshot to the newest
+    # clean one, paying R only.
+    det = det_ck | det_vf
+    lost = done - saved_clean
+    time_lost = fs[F_TLOST] + jnp.where(det, lost, 0.0)
+    n_rolls = is_[I_NROLL] + (det & (lost > 0.0))
+    n_deep = is_[I_NDEEP] + (det & (n_dirty > 0))
+    done = jnp.where(det, saved_clean, done)
+    saved = jnp.where(det, saved_clean, saved)
+    n_dirty = jnp.where(det, 0, n_dirty)
+    corrupted = corrupted & ~det
+    phase = jnp.where(det, _RECOVER, phase)
+    phase_end = jnp.where(det, now + r, phase_end)
+    win_end = jnp.where(det, -jnp.inf, win_end)
+    win_rem = jnp.where(det, jnp.inf, win_rem)
+
     stall = in_ph & ~complete
     now = jnp.where(stall, target, now)
 
     fs_out = jnp.stack([now, done, saved, period_start, phase_end, wpp,
                         w_rem, win_end, win_rem, target, time_ckpt,
                         time_prockpt, time_down, fs[F_PERIOD], fs[F_WWP],
-                        time_downtime, time_recovery])
+                        time_downtime, time_recovery, time_lost,
+                        time_verify, v_wp, v_rem, vcost, saved_clean])
     is_out = jnp.stack([phase.astype(jnp.int32),
                         finished.astype(jnp.int32),
                         n_ckpts.astype(jnp.int32),
-                        n_prockpts.astype(jnp.int32)])
+                        n_prockpts.astype(jnp.int32),
+                        n_rolls.astype(jnp.int32),
+                        n_verifs.astype(jnp.int32),
+                        n_deep.astype(jnp.int32),
+                        n_dirty.astype(jnp.int32),
+                        corrupted.astype(jnp.int32),
+                        vtc.astype(jnp.int32),
+                        nv, keep])
     return fs_out, is_out
 
 

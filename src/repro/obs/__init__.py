@@ -13,7 +13,8 @@ one of those terms and exposes the decision points as structured events:
     scalar engine, so a lane's trace is *reconstructed* by replaying the
     scalar engine (:func:`repro.obs.trace.record_run`).
   * :mod:`repro.obs.attribution` — ``WasteAttribution`` buckets
-    {work, ckpt, proactive_ckpt, re_exec, downtime, recovery, wait}
+    {work, ckpt, proactive_ckpt, verify, re_exec, downtime, recovery,
+    wait}
     with ``sum(buckets) == makespan`` enforced bit-for-bit, plus the
     analytic first-order expectations to reconcile against.
   * :mod:`repro.obs.metrics` — a process-local ``MetricsRegistry``

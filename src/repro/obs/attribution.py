@@ -4,7 +4,7 @@ The engines' accrual-exact accounting (see ``_Machine.fault``) already
 decomposes the makespan as ``base + ckpt + prockpt + lost + down``; this
 module re-expresses that decomposition in the paper's vocabulary —
 
-    {work, ckpt, proactive_ckpt, re_exec, downtime, recovery, wait}
+    {work, ckpt, proactive_ckpt, verify, re_exec, downtime, recovery, wait}
 
 — with the invariant ``sum(buckets) == makespan`` **bit-for-bit**.  The
 ``work`` bucket is the closure term (makespan minus the overhead
@@ -16,7 +16,10 @@ holds exactly, not approximately.
 ``downtime``/``recovery`` come from the engines' independent split
 accumulators (``SimResult.time_downtime`` / ``time_recovery``); the
 merged ``time_down`` stays the authoritative golden-parity accrual and
-is *not* used in bucket math.  ``wait`` is the fleet-level coupling cost
+is *not* used in bucket math.  ``verify`` is the silent-error
+verification accrual (``SimResult.time_verify``; 0 unless the run used
+``n_verify >= 1``, and read with a 0 default so pre-silent result
+objects still attribute).  ``wait`` is the fleet-level coupling cost
 (storage contention stretch + repair-queue waiting); it is 0 for
 single-job runs.
 
@@ -37,8 +40,8 @@ from typing import Any
 __all__ = ["BUCKETS", "WasteAttribution", "attribute_result",
            "attribute_fleet_job", "attribute_batch", "expected_fractions"]
 
-BUCKETS = ("work", "ckpt", "proactive_ckpt", "re_exec", "downtime",
-           "recovery", "wait")
+BUCKETS = ("work", "ckpt", "proactive_ckpt", "verify", "re_exec",
+           "downtime", "recovery", "wait")
 
 # The overhead buckets in the fixed fold order total()/closure use.
 _OVERHEADS = BUCKETS[1:]
@@ -52,6 +55,7 @@ class WasteAttribution:
     work: float
     ckpt: float
     proactive_ckpt: float
+    verify: float
     re_exec: float
     downtime: float
     recovery: float
@@ -82,8 +86,8 @@ class WasteAttribution:
 
 
 def _close(makespan: float, ckpt: float, proactive_ckpt: float,
-           re_exec: float, downtime: float, recovery: float,
-           wait: float) -> WasteAttribution:
+           verify: float, re_exec: float, downtime: float,
+           recovery: float, wait: float) -> WasteAttribution:
     """Build the attribution with ``work`` as the exact closure term.
 
     ``work`` subtracts the overheads in reverse fold order so
@@ -92,11 +96,13 @@ def _close(makespan: float, ckpt: float, proactive_ckpt: float,
     ulp off, making ``total() == makespan`` a hard invariant.
     """
     work = makespan
-    for v in (wait, recovery, downtime, re_exec, proactive_ckpt, ckpt):
+    for v in (wait, recovery, downtime, re_exec, verify, proactive_ckpt,
+              ckpt):
         work -= v
     for _ in range(8):
         att = WasteAttribution(makespan=makespan, work=work, ckpt=ckpt,
                                proactive_ckpt=proactive_ckpt,
+                               verify=verify,
                                re_exec=re_exec, downtime=downtime,
                                recovery=recovery, wait=wait)
         err = makespan - att.total()
@@ -111,8 +117,8 @@ def attribute_result(res: Any, *, wait: float = 0.0) -> WasteAttribution:
     """Attribution of a :class:`repro.core.simulator.SimResult` (or any
     object with the same time fields, e.g. ``BatchResult.result()``)."""
     return _close(res.makespan, res.time_ckpt, res.time_prockpt,
-                  res.time_lost, res.time_downtime, res.time_recovery,
-                  wait)
+                  getattr(res, "time_verify", 0.0), res.time_lost,
+                  res.time_downtime, res.time_recovery, wait)
 
 
 def attribute_fleet_job(job: Any) -> WasteAttribution:
@@ -140,19 +146,23 @@ def attribute_batch(batch: Any) -> dict[str, Any]:
         raise ValueError("batch result lacks the downtime/recovery split "
                          "(engine predates the observability fields)")
     makespan = np.asarray(batch.makespan, dtype=np.float64)
+    time_verify = getattr(batch, "time_verify", None)
+    if time_verify is None:
+        time_verify = np.zeros_like(makespan)
     over = [np.broadcast_to(np.asarray(a, dtype=np.float64),
                             makespan.shape)
-            for a in (batch.time_ckpt, batch.time_prockpt,
+            for a in (batch.time_ckpt, batch.time_prockpt, time_verify,
                       batch.time_lost, batch.time_downtime,
                       batch.time_recovery)]
-    ckpt, proactive, re_exec, downtime, recovery = over
+    ckpt, proactive, verify, re_exec, downtime, recovery = over
     wait = np.zeros_like(makespan)
     work = makespan.copy()
-    for v in (wait, recovery, downtime, re_exec, proactive, ckpt):
+    for v in (wait, recovery, downtime, re_exec, verify, proactive, ckpt):
         work -= v
     for _ in range(8):
         tot = work.copy()
-        for v in (ckpt, proactive, re_exec, downtime, recovery, wait):
+        for v in (ckpt, proactive, verify, re_exec, downtime, recovery,
+                  wait):
             tot += v
         err = makespan - tot
         if not err.any():
@@ -161,12 +171,13 @@ def attribute_batch(batch: Any) -> dict[str, Any]:
     else:                            # pragma: no cover - repair converges
         raise ArithmeticError("bucket closure did not converge")
     return {"work": work, "ckpt": ckpt, "proactive_ckpt": proactive,
-            "re_exec": re_exec, "downtime": downtime,
+            "verify": verify, "re_exec": re_exec, "downtime": downtime,
             "recovery": recovery, "wait": wait}
 
 
-def expected_fractions(t: float, platform: Any,
-                       pp: Any = None) -> dict[str, float]:
+def expected_fractions(t: float, platform: Any, pp: Any = None, *,
+                       n_verify: int = 0,
+                       verify_cost: float = 0.0) -> dict[str, float]:
     """First-order expected bucket fractions of the makespan.
 
     Without a predictor (``pp=None``) these are the terms of Eq. 4/7:
@@ -175,12 +186,16 @@ def expected_fractions(t: float, platform: Any,
     ``beta_lim`` they are the refined-policy terms of Eq. 15 (the unit
     weight case of ``fleet.availability.unavailability_pred``):
     re-execution drops to ``(1-r)T/2mu + r beta^2/2Tmu`` and proactive
-    checkpoints cost ``(r/p) C_p max(0, 1 - beta/T)/mu``.  ``work`` is
-    the complement; ``wait`` is 0 (single-job analysis).
+    checkpoints cost ``(r/p) C_p max(0, 1 - beta/T)/mu``.  With
+    ``n_verify = k >= 1`` verifications of cost ``verify_cost = V`` per
+    period (arXiv:1310.8486; see :mod:`repro.core.silent`) the
+    fault-free verification term is ``kV/T``.  ``work`` is the
+    complement; ``wait`` is 0 (single-job analysis).
     """
     mu = platform.mu
     out = {"ckpt": platform.c / t, "downtime": platform.d / mu,
-           "recovery": platform.r / mu, "wait": 0.0}
+           "recovery": platform.r / mu, "wait": 0.0,
+           "verify": n_verify * verify_cost / t}
     if pp is None:
         out["proactive_ckpt"] = 0.0
         out["re_exec"] = t / (2.0 * mu)

@@ -25,11 +25,12 @@ __all__ = ["events_to_trace_events", "fleet_to_perfetto", "write_trace"]
 _SLICES = (
     ("ckpt_start", "ckpt_end", "ckpt"),
     ("prockpt_start", "prockpt_end", "proactive_ckpt"),
+    ("verify_start", "verify_end", "verify"),
     ("down_start", "recover_start", "downtime"),
     ("recover_start", "recover_end", "recovery"),
 )
 _INSTANTS = {"fault", "rollback", "re_exec", "prediction", "trust",
-             "replan"}
+             "replan", "silent_detect"}
 
 
 def _num(v: Any) -> Any:

@@ -11,7 +11,8 @@ from hypothesis import given, settings, strategies as st
 
 from repro.configs.base import PlatformConfig
 from repro.core.multilevel import (TwoLevelPlatform, optimal_two_level,
-                                   simulate_two_level, waste_two_level)
+                                   simulate_two_level, two_level_stream,
+                                   waste_two_level)
 from repro.core.simulator import NeverTrust, simulate
 from repro.core.traces import EventTrace, Exponential, make_event_trace
 from repro.core.waste import Platform, t_rfo, waste
@@ -56,13 +57,11 @@ def test_two_level_beats_single_level_with_soft_faults():
     w1 = waste(t_rfo(p1), p1)
     assert w2 < w1
 
-    rng = np.random.default_rng(0)
     time_base = 200_000.0
     m2 = m1 = 0.0
     for seed in range(8):
-        r = np.random.default_rng(seed)
-        faults = np.cumsum(r.exponential(mu, size=400))
-        soft = r.random(len(faults)) < phi
+        faults, soft = two_level_stream(p2, 10.0 * time_base,
+                                        np.random.default_rng(seed))
         m2 += simulate_two_level(faults, soft, p2, time_base, t1, k).makespan
         trace = EventTrace(faults, np.zeros(len(faults), np.int8), 1e12)
         m1 += simulate(trace, p1, time_base, t_rfo(p1),
@@ -77,9 +76,8 @@ def test_two_level_simulation_matches_analytic():
     time_base = 500_000.0
     wastes = []
     for seed in range(10):
-        r = np.random.default_rng(seed)
-        faults = np.cumsum(r.exponential(p.mu, size=600))
-        soft = r.random(len(faults)) < p.phi
+        faults, soft = two_level_stream(p, 10.0 * time_base,
+                                        np.random.default_rng(seed))
         wastes.append(
             simulate_two_level(faults, soft, p, time_base, t1, k).waste)
     assert np.mean(wastes) == pytest.approx(w_analytic, abs=0.03)

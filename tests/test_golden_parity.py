@@ -67,6 +67,14 @@ _CELLS: dict[str, tuple[ScenarioSpec, StrategySpec]] = {
                                   "tol": 0.03})),
     "stochastic_trust_q": (ScenarioSpec(**_BASE),
                            StrategySpec("simple_policy", {"q": 0.5})),
+    "silent_verify": (
+        ScenarioSpec(**_BASE, silent_mu_ind=2.0e9, verify_cost=120.0,
+                     keep_ckpts=2),
+        StrategySpec("silent_verify")),
+    "silent_verify_pred": (
+        ScenarioSpec(**_BASE, silent_mu_ind=2.0e9, verify_cost=120.0,
+                     keep_ckpts=2),
+        StrategySpec("silent_verify_pred")),
 }
 
 # Every pinned cell: the flagship jax engine covers the full strategy
@@ -87,6 +95,9 @@ def _simulate_cell(name: str) -> dict:
                  window_mode=strat.window_mode,
                  window_period=strat.window_period,
                  adaptive=strat.adaptive,
+                 n_verify=strat.n_verify,
+                 verify_cost=strat.verify_cost,
+                 keep_ckpts=strat.keep_ckpts,
                  rng=np.random.default_rng(seeds[i])).makespan
         for i, tr in enumerate(traces)
     ]
@@ -99,6 +110,9 @@ def _simulate_cell(name: str) -> dict:
         window_modes=[strat.window_mode] * len(traces),
         window_periods=[strat.window_period] * len(traces),
         adaptives=[strat.adaptive] * len(traces),
+        n_verifies=[strat.n_verify] * len(traces),
+        verify_costs=[strat.verify_cost] * len(traces),
+        keep_ckpts=[strat.keep_ckpts] * len(traces),
         seeds=seeds)
     assert list(lane) == scalar, \
         f"{name}: lane engine diverged from the scalar engine"
@@ -179,6 +193,9 @@ for name in sys.argv[2:]:
         window_mode=strat.window_mode,
         window_period=strat.window_period,
         adaptive=strat.adaptive,
+        n_verify=strat.n_verify,
+        verify_cost=strat.verify_cost,
+        keep_ckpts=strat.keep_ckpts,
         trace_seeds=[scenario.seed + 7919 * i for i in range(len(traces))],
         backend="jax")
     got = [float(m) for m in batch.makespan[0]]

@@ -526,7 +526,10 @@ def test_candidate_key_distinguishes_adaptive():
     # Both serialize (AdaptiveConfig has value semantics).
     assert _persistable_key(_candidate_key(ad)) is not None
     k = json.loads(_persistable_key(_candidate_key(ad)))
-    assert len(k) == 6 and k[5] is not None
+    # 9-tuple since the silent/verify axis: (..., adaptive, n_verify,
+    # verify_cost, keep_ckpts).
+    assert len(k) == 9 and k[5] is not None
+    assert k[6:] == [0, 0.0, 1]  # fail-stop defaults
 
 
 def test_cell_persist_key_depends_on_version_and_predictor(monkeypatch):
@@ -553,7 +556,7 @@ def test_v2_format_store_is_invalidated_not_misread(tmp_path):
     cache.put(build_strategy("rfo", SMALL), 0, 111.0)
     cache.flush()
     store = json.loads((tmp_path / "ctx.json").read_text())["makespans"]
-    assert all(len(json.loads(k)) == 6 for k in store)
+    assert all(len(json.loads(k)) == 9 for k in store)
 
 
 def test_v3_store_round_trips_adaptive_candidates(tmp_path):

@@ -1,0 +1,392 @@
+"""Silent-error + verification family (arXiv:1310.8486; ISSUE 10).
+
+Covers the analytic layer (``repro.core.silent``: combined waste, joint
+(T*, k*) plans, domain guards), the engine mechanics (latent corruption,
+retained-checkpoint ring, deep rollbacks, the verify accrual), the
+scalar-vs-lane bit-for-bit contract on silent traces, the obs ``verify``
+bucket closure, the ScenarioSpec axis round-trip, and the two-level
+engine's cross-validation against the scalar oracle on shared
+trace-machinery streams.  The hypothesis property degrades to a skip
+when the optional dependency is missing; everything else runs in tier-1.
+"""
+
+import math
+
+import numpy as np
+import pytest
+from numpy.random import default_rng
+
+from repro.core.batch import simulate_lanes
+from repro.core.multilevel import (TwoLevelPlatform, simulate_two_level,
+                                   two_level_stream)
+from repro.core.prediction import PredictedPlatform, Predictor, beta_lim
+from repro.core.silent import (DEFAULT_KEEP_CKPTS, SilentPlan,
+                               optimal_silent_plan, optimal_silent_pred_plan,
+                               silent_strategy, t_silent, t_silent_pred,
+                               waste_silent, waste_silent_pred)
+from repro.core.simulator import (AlwaysTrust, NeverTrust, ThresholdTrust,
+                                  simulate)
+from repro.core.traces import (SILENT, EventTrace, Exponential,
+                               make_event_trace)
+from repro.core.waste import Platform, t_rfo, waste
+from repro.obs import attribute_result
+
+PLAT = Platform(mu=50_000.0, c=600.0, r=900.0, d=60.0)
+SMU = 20_000.0
+V = 100.0
+
+
+def silent_traces(n, horizon=8e6, silent_mu=SMU, recall=0.85,
+                  precision=0.82, base_seed=100):
+    return [make_event_trace(Exponential(1.0), PLAT.mu, recall, precision,
+                             horizon, default_rng(base_seed + i),
+                             silent_mu=silent_mu)
+            for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# Analytic layer: collapse, argmin, domain guards (satellite 3)
+# ---------------------------------------------------------------------------
+
+def test_waste_silent_collapses_to_failstop():
+    """silent rate 0 + k = 0 is bit-for-bit Eq. 11/12."""
+    for t in (2000.0, 7000.0, 20_000.0):
+        assert waste_silent(t, 0, PLAT, None) == waste(t, PLAT)
+        assert waste_silent(t, 0, PLAT, math.inf) == waste(t, PLAT)
+
+
+def test_waste_silent_domain_guards():
+    with pytest.raises(ValueError):
+        waste_silent(PLAT.c / 2.0, 1, PLAT, SMU, V)      # T < C
+    with pytest.raises(ValueError):
+        waste_silent(5000.0, 0, PLAT, SMU, V)            # k=0, rate > 0
+    with pytest.raises(ValueError):
+        waste_silent(5000.0, 8, PLAT, SMU, 700.0)        # k*V >= T
+    with pytest.raises(ValueError):
+        waste_silent(5000.0, 1, PLAT, -10.0, V)          # bad rate
+    with pytest.raises(ValueError):
+        waste_silent(5000.0, 1, PLAT, SMU, -1.0)         # bad cost
+    with pytest.raises(ValueError):
+        waste_silent(5000.0, 1, PLAT, SMU, math.inf)     # bad cost
+    with pytest.raises(ValueError):
+        waste_silent(5000.0, -1, PLAT, SMU, V)           # bad k
+
+
+def test_t_silent_is_argmin():
+    for k in (1, 2, 4, 8):
+        t_star = t_silent(k, PLAT, SMU, V)
+        w_star = waste_silent(t_star, k, PLAT, SMU, V)
+        for f in (0.8, 0.9, 1.1, 1.25):
+            assert waste_silent(t_star * f, k, PLAT, SMU, V) >= w_star - 1e-12
+
+
+def test_optimal_silent_plan_structure():
+    plan = optimal_silent_plan(PLAT, SMU, V)
+    assert isinstance(plan, SilentPlan)
+    assert plan.n_verify >= 1
+    assert plan.keep_ckpts == DEFAULT_KEEP_CKPTS
+    assert plan.period >= PLAT.c
+    assert plan.n_verify * V < plan.period
+    # Neighbour k values cannot beat the scan winner.
+    for k in (plan.n_verify - 1, plan.n_verify + 1):
+        if k < 1:
+            continue
+        t = t_silent(k, PLAT, SMU, V)
+        if k * V < t:
+            assert waste_silent(t, k, PLAT, SMU, V) >= plan.waste - 1e-12
+
+
+def test_optimal_silent_plan_rate0_is_rfo():
+    plan = optimal_silent_plan(PLAT, None, V)
+    assert plan.n_verify == 0
+    assert plan.keep_ckpts == 1
+    assert plan.period == max(PLAT.c, t_rfo(PLAT))
+    assert plan.waste == waste(plan.period, PLAT)
+
+
+def test_optimal_silent_plan_infeasible_cost_raises():
+    """A verify cost that swallows every candidate period must raise, not
+    return a NaN plan (the PR-3 beta_lim < C guard, mirrored)."""
+    tiny = Platform(mu=300.0, c=100.0, r=50.0, d=5.0)
+    with pytest.raises(ValueError, match="feasible"):
+        optimal_silent_plan(tiny, 50.0, 5_000.0)
+    with pytest.raises(ValueError):
+        optimal_silent_plan(PLAT, SMU, V, k_max=0)
+    with pytest.raises(ValueError):
+        optimal_silent_plan(PLAT, SMU, V, keep_ckpts=0)
+
+
+def test_silent_pred_guards_and_bounds():
+    pp = PredictedPlatform(PLAT, Predictor(0.85, 0.82), cp=300.0)
+    with pytest.raises(ValueError):
+        optimal_silent_pred_plan(pp, None, V)            # rate-0: wrong API
+    with pytest.raises(ValueError):
+        t_silent_pred(0, pp, SMU, V)                     # k < 1
+    with pytest.raises(ValueError):
+        waste_silent_pred(5000.0, 8, pp, SMU, 700.0)     # k*V >= T
+    # beta_lim < C degenerate cp: lower bound must clamp at C, not below.
+    pp_deg = PredictedPlatform(PLAT, Predictor(0.85, 0.82), cp=60.0)
+    assert beta_lim(pp_deg) < PLAT.c
+    for k in (1, 2, 4):
+        assert t_silent_pred(k, pp_deg, SMU, V) >= PLAT.c
+    plan = optimal_silent_pred_plan(pp, SMU, V)
+    assert plan.use_predictions
+    assert plan.n_verify >= 1
+    assert plan.period >= max(PLAT.c, beta_lim(pp))
+
+
+def test_waste_monotone_in_verify_cost_analytic():
+    """Exact analytic monotonicity: both the fixed-(T, k) waste and the
+    optimized plan waste are non-increasing as verify_cost -> 0."""
+    costs = [400.0, 200.0, 100.0, 25.0, 5.0, 0.0]
+    t, k = 8000.0, 3
+    fixed = [waste_silent(t, k, PLAT, SMU, v) for v in costs]
+    assert all(a >= b for a, b in zip(fixed, fixed[1:]))
+    plans = [optimal_silent_plan(PLAT, SMU, v).waste for v in costs]
+    assert all(a >= b - 1e-15 for a, b in zip(plans, plans[1:]))
+
+
+def test_silent_strategy_modes():
+    pp = PredictedPlatform(PLAT, Predictor(0.85, 0.82), cp=300.0)
+    ign = silent_strategy(PLAT, SMU, V, mode="ignore")
+    assert ign.n_verify == 0 and isinstance(ign.trust, NeverTrust)
+    ver = silent_strategy(PLAT, SMU, V, mode="verify")
+    assert ver.n_verify >= 1 and ver.keep_ckpts == DEFAULT_KEEP_CKPTS
+    vp = silent_strategy(PLAT, SMU, V, mode="verify_pred", pp=pp)
+    assert vp.n_verify >= 1 and isinstance(vp.trust, ThresholdTrust)
+    # rate 0 verify_pred falls back to the prediction-only optimum.
+    vp0 = silent_strategy(PLAT, None, V, mode="verify_pred", pp=pp)
+    assert vp0.n_verify == 0 and vp0.name == "SilentVerifyPred"
+    with pytest.raises(ValueError):
+        silent_strategy(PLAT, SMU, V, mode="sometimes")
+    with pytest.raises(ValueError):
+        silent_strategy(PLAT, SMU, V, mode="verify_pred")  # pp missing
+
+
+# ---------------------------------------------------------------------------
+# Engine mechanics: scalar oracle
+# ---------------------------------------------------------------------------
+
+def test_scalar_verification_detects_and_accounts():
+    """A verified run on a silent trace detects corruptions, accrues the
+    verify bucket, and closes the attribution sum exactly."""
+    tr = silent_traces(1)[0]
+    res = simulate(tr, PLAT, 2.4e6, 8000.0, trust=NeverTrust(),
+                   n_verify=3, verify_cost=V, keep_ckpts=2,
+                   rng=default_rng(0))
+    assert res.n_verifications > 0
+    assert res.time_verify > 0.0
+    assert res.n_silent > 0
+    att = attribute_result(res)
+    assert att.verify == res.time_verify
+    assert att.total() == res.makespan          # bit-for-bit closure
+    exp_ms = (res.time_base + res.time_ckpt + res.time_prockpt
+              + res.time_lost + res.time_down + res.time_verify)
+    assert res.makespan == pytest.approx(exp_ms, rel=1e-12)
+
+
+def test_keep_ring_depth_protects_against_dirty_saves():
+    """A silent strike just before a checkpoint write makes that snapshot
+    dirty; keep_ckpts=1 then evicts the only clean one (restart from 0 on
+    detection) while keep_ckpts=2 rolls back one period — a deep rollback
+    with strictly smaller makespan."""
+    t, k = 4000.0, 1
+    # One silent corruption striking inside the *second* checkpoint write
+    # (the guarding verification has already passed, so the snapshot is
+    # written dirty); no fail-stop faults.  Period = work (T - C) +
+    # verify + ckpt, so ckpt 2 spans
+    # [2(T-C) + 2V + C, 2(T-C) + 2V + 2C].
+    strike = 2.0 * (t - PLAT.c) + 2.0 * V + PLAT.c + 300.0
+    tr = EventTrace(np.array([strike]), np.array([SILENT], np.int8), 1e9)
+    kw = dict(trust=NeverTrust(), n_verify=k, verify_cost=V)
+    r1 = simulate(tr, PLAT, 20_000.0, t, keep_ckpts=1, rng=default_rng(0),
+                  **kw)
+    r2 = simulate(tr, PLAT, 20_000.0, t, keep_ckpts=2, rng=default_rng(0),
+                  **kw)
+    assert r1.n_silent == r2.n_silent == 1
+    # Both detect past a dirty snapshot; but keep=1 has evicted its only
+    # clean one (restart from 0) while keep=2 rolls back one period.
+    assert r1.n_deep_rollbacks >= 1 and r2.n_deep_rollbacks >= 1
+    assert r2.makespan < r1.makespan
+    assert r1.time_lost > r2.time_lost
+
+
+def test_silent_free_trace_unchanged_by_ring_depth():
+    """keep_ckpts is inert without corruption: silent-free runs are
+    bit-for-bit identical for any ring depth (the rate-0 collapse)."""
+    tr = make_event_trace(Exponential(1.0), PLAT.mu, 0.85, 0.82, 8e6,
+                          default_rng(7))
+    base = simulate(tr, PLAT, 2.4e6, 8000.0, trust=NeverTrust(),
+                    rng=default_rng(0))
+    for keep in (2, 5):
+        again = simulate(tr, PLAT, 2.4e6, 8000.0, trust=NeverTrust(),
+                         keep_ckpts=keep, rng=default_rng(0))
+        assert again.makespan == base.makespan
+        assert again.n_deep_rollbacks == 0
+
+
+# ---------------------------------------------------------------------------
+# Scalar-vs-lane bit-for-bit parity on silent lanes (every run)
+# ---------------------------------------------------------------------------
+
+def test_lane_engine_matches_scalar_on_silent_lanes():
+    traces = silent_traces(4)
+    pp = PredictedPlatform(PLAT, Predictor(0.85, 0.82), cp=300.0)
+    configs = [
+        dict(period=8000.0, trust=NeverTrust(), nv=0, vc=0.0, keep=1),
+        dict(period=8000.0, trust=NeverTrust(), nv=2, vc=100.0, keep=2),
+        dict(period=6500.0, trust=AlwaysTrust(), nv=1, vc=50.0, keep=3),
+        dict(period=9000.0, trust=ThresholdTrust(beta_lim(pp)), nv=4,
+             vc=25.0, keep=2),
+    ]
+    items = [(ci, ti) for ci in range(len(configs))
+             for ti in range(len(traces))]
+    lane = simulate_lanes(
+        traces, PLAT, 2.4e6, cp=300.0,
+        trace_indices=np.array([ti for _, ti in items]),
+        periods=[configs[ci]["period"] for ci, _ in items],
+        trusts=[configs[ci]["trust"] for ci, _ in items],
+        windows=[0.0] * len(items),
+        n_verifies=[configs[ci]["nv"] for ci, _ in items],
+        verify_costs=[configs[ci]["vc"] for ci, _ in items],
+        keep_ckpts=[configs[ci]["keep"] for ci, _ in items],
+        seeds=[7919 * ti for _, ti in items])
+    for j, (ci, ti) in enumerate(items):
+        cfg = configs[ci]
+        want = simulate(traces[ti], PLAT, 2.4e6, cfg["period"], cp=300.0,
+                        trust=cfg["trust"], n_verify=cfg["nv"],
+                        verify_cost=cfg["vc"], keep_ckpts=cfg["keep"],
+                        rng=default_rng(7919 * ti)).makespan
+        assert lane[j] == want, f"lane {j} (config {ci}, trace {ti})"
+
+
+# ---------------------------------------------------------------------------
+# Simulated monotonicity (hypothesis; optional dep -> skip)
+# ---------------------------------------------------------------------------
+
+def test_simulated_waste_monotone_as_verify_cost_shrinks():
+    """Mean simulated makespan over a trace bank is monotone non-increasing
+    as verify_cost -> 0 (fixed T, k, seeds; per-trace makespans are NOT
+    monotone — cheaper verifications shift every later phase boundary — so
+    the property averages over traces with a small tolerance)."""
+    hyp = pytest.importorskip("hypothesis")
+    given, settings, st = hyp.given, hyp.settings, hyp.strategies
+
+    traces = silent_traces(16, base_seed=300)
+    n = len(traces)
+
+    def mean_makespan(vc: float) -> float:
+        ms = simulate_lanes(
+            traces, PLAT, 2.4e6, cp=PLAT.c,
+            trace_indices=np.arange(n),
+            periods=[8000.0] * n, trusts=[NeverTrust()] * n,
+            windows=[0.0] * n, n_verifies=[2] * n,
+            verify_costs=[vc] * n, keep_ckpts=[2] * n,
+            seeds=np.arange(n))
+        return float(np.mean(ms))
+
+    @given(st.floats(0.0, 300.0), st.floats(0.0, 300.0))
+    @settings(max_examples=10, deadline=None, derandomize=True)
+    def prop(v1, v2):
+        lo, hi = sorted((v1, v2))
+        assert mean_makespan(lo) <= mean_makespan(hi) * (1.0 + 1e-3)
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# ScenarioSpec axis round-trip + trace plumbing
+# ---------------------------------------------------------------------------
+
+def test_scenario_silent_axis_roundtrip_and_traces():
+    from repro.experiments import ScenarioSpec
+
+    spec = ScenarioSpec(n=2 ** 16, c=600.0, d=60.0, r=600.0, n_traces=2,
+                        time_base_years_total=2000.0, seed=5,
+                        silent_mu_ind=2.0e9, verify_cost=120.0,
+                        n_verify=2, keep_ckpts=2)
+    back = ScenarioSpec.from_dict(spec.to_dict())
+    assert back == spec
+    assert spec.silent_mu == pytest.approx(2.0e9 / 2 ** 16)
+    traces = spec.make_traces()
+    assert any((tr.kinds == SILENT).any() for tr in traces)
+    # The silent-free spec from the same seed carries no SILENT events.
+    off = ScenarioSpec(n=2 ** 16, c=600.0, d=60.0, r=600.0, n_traces=2,
+                       time_base_years_total=2000.0, seed=5)
+    assert off.silent_mu is None
+    assert not any((tr.kinds == SILENT).any() for tr in off.make_traces())
+    with pytest.raises(ValueError):
+        ScenarioSpec(n=2 ** 16, silent_mu_ind=-1.0)
+    with pytest.raises(ValueError):
+        ScenarioSpec(n=2 ** 16, verify_cost=-1.0)
+    with pytest.raises(ValueError):
+        ScenarioSpec(n=2 ** 16, n_verify=-1)
+    with pytest.raises(ValueError):
+        ScenarioSpec(n=2 ** 16, keep_ckpts=0)
+
+
+def test_registry_silent_strategies_run_end_to_end():
+    from repro.experiments import ScenarioSpec, StrategySpec
+    from repro.experiments.runner import EvalCache, evaluate_strategies
+
+    spec = ScenarioSpec(n=2 ** 16, c=600.0, d=60.0, r=600.0, n_traces=2,
+                        time_base_years_total=2000.0, seed=5,
+                        silent_mu_ind=2.0e9, verify_cost=120.0,
+                        keep_ckpts=2)
+    strategies = [StrategySpec(s).build(spec)
+                  for s in ("silent_ignore", "silent_verify",
+                            "silent_verify_pred")]
+    traces = spec.make_traces()
+    res = {}
+    for engine in ("scalar", "batch"):
+        res[engine] = evaluate_strategies(
+            traces, spec.platform, spec.time_base, spec.cp, strategies,
+            seed=spec.seed, cache=EvalCache(), engine=engine)
+    assert res["scalar"] == res["batch"]
+    ignore, verify, _ = res["scalar"]
+    assert verify < ignore  # verification pays for itself at this rate
+
+
+# ---------------------------------------------------------------------------
+# Two-level engine cross-validation (satellite 2)
+# ---------------------------------------------------------------------------
+
+def test_two_level_degenerate_limit_matches_scalar_bitforbit():
+    """k=1 with c1=c2, r1=r2 collapses the hierarchy: soft and hard faults
+    both roll back to the last (only-level) checkpoint, so the two-level
+    engine must reproduce the scalar oracle bit-for-bit on shared streams
+    — including faults landing inside the downtime + recovery window
+    (the boundary this PR fixed) and inside checkpoint writes."""
+    tb = 200_000.0
+    t1 = 1500.0
+    for phi in (0.0, 0.5, 1.0):
+        p2 = TwoLevelPlatform(mu=3000.0, phi=phi, c1=100.0, c2=100.0,
+                              r1=120.0, r2=120.0, d=15.0)
+        p1 = Platform(mu=3000.0, c=100.0, d=15.0, r=120.0)
+        for seed in range(8):
+            ft, soft = two_level_stream(p2, 40.0 * tb, default_rng(seed))
+            got = simulate_two_level(ft, soft, p2, tb, t1, 1)
+            tr = EventTrace(ft, np.zeros(len(ft), np.int8), 40.0 * tb)
+            want = simulate(tr, p1, tb, t1, trust=NeverTrust())
+            assert got.makespan == want.makespan, (phi, seed)
+            assert got.n_soft + got.n_hard == want.n_faults_hit, (phi, seed)
+
+
+def test_two_level_stream_matches_hand_rolled_law():
+    """The make_event_trace-routed stream has the advertised law: total
+    rate ~ 1/mu, soft fraction ~ phi."""
+    p = TwoLevelPlatform(mu=1000.0, phi=0.7, c1=10.0, c2=100.0,
+                         r1=10.0, r2=100.0, d=5.0)
+    ft, soft = two_level_stream(p, 4e6, default_rng(0))
+    assert np.all(np.diff(ft) > 0)
+    assert len(ft) == pytest.approx(4e6 / p.mu, rel=0.1)
+    assert float(np.mean(soft)) == pytest.approx(p.phi, abs=0.05)
+    # Degenerate fractions: one stream only.
+    ft0, soft0 = two_level_stream(
+        TwoLevelPlatform(mu=1000.0, phi=0.0, c1=10.0, c2=100.0,
+                         r1=10.0, r2=100.0, d=5.0), 2e6, default_rng(1))
+    assert not soft0.any() and len(ft0) > 0
+    ft1, soft1 = two_level_stream(
+        TwoLevelPlatform(mu=1000.0, phi=1.0, c1=10.0, c2=100.0,
+                         r1=10.0, r2=100.0, d=5.0), 2e6, default_rng(2))
+    assert soft1.all() and len(ft1) > 0
